@@ -1,0 +1,142 @@
+"""Analytic roofline model from config + sharding (cross-check for the
+HLO-derived numbers; DESIGN.md §5).
+
+Conventions:
+  MODEL_FLOPS  = useful flops per step: 6*N_active*T for training (PaLM
+                 convention incl. backward), + 12*B*S*ctx*H*hd attention;
+                 2*N_active*T for prefill; decode per generated token.
+  memory bytes = per-device HBM traffic estimate (weights + opt states +
+                 activation streams).
+  collective   = per-device wire bytes on each mesh axis.
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+(conservative single-link figure; see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    detail: dict
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-compute time / bound step time (the perf score)."""
+        useful = self.model_flops / (self.detail["chips"] * PEAK_FLOPS)
+        return useful / max(self.step_s, 1e-30)
+
+
+def _attn_ctx(seq_len: int, window: int | None) -> float:
+    """Average causal context per query."""
+    if window is None or window >= seq_len:
+        return seq_len / 2
+    return window - window * window / (2 * seq_len) \
+        if seq_len > window else seq_len / 2
+
+
+def analytic_roofline(cfg, shape, *, chips: int, dp: int, tp: int,
+                      multi_pod: bool = False) -> Roofline:
+    S, B = shape.seq_len, shape.global_batch
+    kind = shape.kind
+    L, d = cfg.num_layers, cfg.d_model
+    hd = cfg.resolved_head_dim
+    Hq, KV = cfg.num_heads, cfg.num_kv_heads
+    n_active = cfg.active_param_count()
+    n_total = cfg.param_count()
+
+    layer_types = cfg.layer_types
+    from repro.models.attention import resolve_window
+    attn_layers = [t for t in layer_types
+                   if t in ("full", "swa", "local", "global")]
+
+    if kind == "train":
+        T = B * S
+        flops = 6.0 * n_active * T
+        for t in attn_layers:
+            ctx = _attn_ctx(S, resolve_window(cfg, t, S))
+            flops += 12.0 * B * S * ctx * Hq * hd
+    elif kind == "prefill":
+        T = B * S
+        flops = 2.0 * n_active * T
+        for t in attn_layers:
+            ctx = _attn_ctx(S, resolve_window(cfg, t, S))
+            flops += 4.0 * B * S * ctx * Hq * hd
+    else:  # decode: one token per sequence
+        T = B
+        flops = 2.0 * n_active * T
+        for t in attn_layers:
+            w = resolve_window(cfg, t, S)
+            ctx = min(S, w) if w else S
+            flops += 4.0 * B * ctx * Hq * hd
+
+    # ---- memory (per device) ----
+    if kind == "train":
+        # params bf16 read (gathered per layer) + f32 master read/write +
+        # adam moments read/write + grads write/read
+        w_bytes = n_total * (2 + 4 * 2 + 4 * 4) / chips
+        act_bytes = 2.0 * T * d * L * 6 / chips      # residual streams r/w
+        mem = w_bytes + act_bytes
+    elif kind == "prefill":
+        mem = n_total * 2 / chips + 2.0 * T * d * L * 3 / chips
+    else:
+        cache = 0.0
+        for t in layer_types:
+            if t in ("full", "swa", "local", "global"):
+                w = resolve_window(cfg, t, S)
+                cap = min(S, w) if w else S
+                cache += 2 * B * KV * cap * hd * 2          # K+V bf16 read
+            elif t == "mlstm":
+                inner = 2 * d
+                dv = inner // max(cfg.num_heads, 1)
+                cache += B * cfg.num_heads * (dv // 2) * dv * 4 * 2
+            else:
+                cache += B * d * 4 * 4
+        mem = (n_total * 2 + cache) / chips
+
+    # ---- collectives (per device wire bytes) ----
+    act_global = T * d * 2                       # bf16 residual tensor
+    per_dev_act = act_global / dp
+    coll = 0.0
+    n_blocks = L
+    if kind == "train":
+        # SP boundaries: ag+rs per mixer + per ffn, fwd and bwd
+        coll += n_blocks * 8 * per_dev_act
+        # ZeRO-3 param all-gathers (fwd + bwd) + grad reduce-scatter
+        coll += n_total * 2 * 2 / 1 / tp + n_total * 4 / tp
+        # MoE combine psums
+        if cfg.is_moe:
+            coll += n_blocks * 2 * 2 * per_dev_act
+    elif kind == "prefill":
+        coll += n_blocks * 4 * per_dev_act
+    else:
+        coll += n_blocks * 4 * per_dev_act       # tiny T; TP allreduces
+
+    return Roofline(
+        compute_s=flops / (chips * PEAK_FLOPS),
+        memory_s=mem / HBM_BW,
+        collective_s=coll / ICI_BW,
+        model_flops=flops,
+        detail={"chips": chips, "dp": dp, "tp": tp, "flops": flops,
+                "mem_bytes_per_dev": mem, "coll_bytes_per_dev": coll,
+                "n_active": n_active, "n_total": n_total},
+    )

@@ -1,0 +1,85 @@
+"""Paper §4.7 memory-complexity table — exact bookkeeping across the
+paper's regimes and the LM-scale deployment of this framework.
+
+Per-iteration:  O(L Nb d) activations vs O(L k d) sketches
+Monitoring:     O(L d^2 T) gradient history vs O(L k d) sketches
+LM-scale:       per assigned arch, the FFN activation residuals removed
+                from the backward closure by sketched_matmul.
+"""
+from __future__ import annotations
+
+from repro.configs import ARCHS, get_arch
+from repro.core.sketch import SketchConfig, sketch_memory_bytes
+
+
+def per_iteration_table():
+    rows = []
+    nb, d, L = 128, 512, 4
+    for r in (2, 4, 8, 16):
+        k = 2 * r + 1
+        act = L * nb * d * 4
+        sk = 3 * L * d * k * 4
+        rows.append({"rank": r, "k": k, "act_mb": act / 2 ** 20,
+                     "sketch_mb": sk / 2 ** 20,
+                     "ratio": k / nb,
+                     "saving_pct": 100 * (1 - k / nb)})
+    return rows
+
+
+def monitoring_table():
+    rows = []
+    d, L = 1024, 16
+    for T in (1, 5, 50, 500):
+        trad = L * d * d * 4 * T
+        scfg = SketchConfig(rank=4, max_rank=4, batch_size=128)
+        sk = sketch_memory_bytes(scfg, L, d)
+        rows.append({"T": T, "traditional_mb": trad / 2 ** 20,
+                     "sketch_mb": sk / 2 ** 20,
+                     "reduction_pct": 100 * (1 - sk / trad)})
+    return rows
+
+
+def lm_table(seq_len: int = 4096, global_batch: int = 256,
+             k: int = 33, chips: int = 256):
+    """Activation residuals (bf16) removed from the backward closure per
+    device by sketched FFN matmuls, vs the sketch state held."""
+    rows = []
+    T = seq_len * global_batch
+    for arch in ARCHS:
+        cfg = get_arch(arch)
+        if cfg.sketch_mode != "backprop":
+            continue
+        L = cfg.num_layers
+        if cfg.is_moe:
+            widths = [cfg.num_heads * cfg.resolved_head_dim]
+        else:
+            widths = [cfg.d_model, cfg.d_ff]
+        removed = sum(T * w * 2 for w in widths) * L / chips
+        sk = sum(3 * L * w * k * 4 for w in widths) / chips \
+            + 3 * T * k * 4 / chips
+        rows.append({"arch": arch,
+                     "removed_gib_dev": removed / 2 ** 30,
+                     "sketch_mib_dev": sk / 2 ** 20})
+    return rows
+
+
+def main():
+    print("## per-iteration (paper §4.7: Nb=128, 4x512 MLP)")
+    print("rank,k,act_mb,sketch_mb,saving_pct")
+    for r in per_iteration_table():
+        print(f"{r['rank']},{r['k']},{r['act_mb']:.2f},"
+              f"{r['sketch_mb']:.2f},{r['saving_pct']:.0f}")
+    print("## monitoring window (16x1024 MLP)")
+    print("T,traditional_mb,sketch_mb,reduction_pct")
+    for r in monitoring_table():
+        print(f"{r['T']},{r['traditional_mb']:.0f},{r['sketch_mb']:.2f},"
+              f"{r['reduction_pct']:.2f}")
+    print("## LM-scale (train_4k, per device, 256 chips)")
+    print("arch,removed_gib_dev,sketch_mib_dev")
+    for r in lm_table():
+        print(f"{r['arch']},{r['removed_gib_dev']:.2f},"
+              f"{r['sketch_mib_dev']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

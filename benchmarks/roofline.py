@@ -1,0 +1,163 @@
+"""Roofline report (deliverable g): reads artifacts/dryrun/*.json, derives
+the three terms per (arch x shape x mesh), identifies the dominant
+bottleneck, cross-checks against the analytic model, and emits the
+EXPERIMENTS.md §Roofline table.
+
+  compute_s    = HLO dot FLOPs (while-trip corrected, per device)
+                 / (197 TFLOP/s)
+  memory_s     = HLO io bytes (per device)   / (819 GB/s)
+  collective_s = HLO collective bytes (per device) / (50 GB/s/link)
+
+HLO numbers come from the SPMD-partitioned module, so they are already
+per-device; the while-trip correction multiplies loop bodies by their
+parsed trip counts (launch/hlo_analysis.py).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--mesh pod16x16]
+       [--csv out.csv] [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from benchmarks.analytic import (
+    HBM_BW, ICI_BW, PEAK_FLOPS, analytic_roofline,
+)
+
+ART = "artifacts/dryrun"
+
+
+def load_cells(mesh: str | None = None, variant: str = "base"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        rec = json.load(open(path))
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        if rec.get("variant", "base") != variant:
+            continue
+        cells.append(rec)
+    return cells
+
+
+def _rehlo(rec: dict) -> dict:
+    """Re-parse the stored HLO text if the JSON predates a parser field
+    (e.g. the widened-f32 TPU correction)."""
+    if "coll_bytes_tpu" in rec["hlo"]:
+        return rec["hlo"]
+    import gzip
+    from repro.configs import get_arch
+    from repro.launch.hlo_analysis import analyze_hlo_text
+    v = "" if rec.get("variant", "base") == "base" \
+        else f"__{rec['variant']}"
+    path = os.path.join(
+        ART, f"{rec['arch']}__{rec['shape']}__{rec['mesh']}{v}.hlo.gz")
+    if not os.path.exists(path):
+        rec["hlo"].setdefault("coll_bytes_tpu",
+                              rec["hlo"]["coll_bytes_total"])
+        return rec["hlo"]
+    cfg = get_arch(rec["arch"])
+    return analyze_hlo_text(gzip.open(path, "rt").read(),
+                            default_trip=cfg.num_groups)
+
+
+def derive_terms(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    from repro.configs import SHAPES, get_arch
+    cfg = get_arch(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    multi = rec["mesh"] == "pod2x16x16"
+    chips = 512 if multi else 256
+    dp = 32 if multi else 16
+    h = _rehlo(rec)
+    compute_s = h["dot_flops"] / PEAK_FLOPS
+    memory_s = h["io_bytes"] / HBM_BW
+    # TPU-corrected collective bytes: XLA:CPU widens bf16 to f32 and
+    # hoists converts before collectives; native-bf16 TPU moves half.
+    coll_s = h.get("coll_bytes_tpu", h["coll_bytes_total"]) / ICI_BW
+    ana = analytic_roofline(cfg, shape, chips=chips, dp=dp, tp=16,
+                            multi_pod=multi)
+    model_flops_dev = ana.model_flops / chips
+    step_s = max(compute_s, memory_s, coll_s)
+    useful_s = model_flops_dev / PEAK_FLOPS
+    terms = {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": coll_s,
+        "dominant": max(
+            (("compute", compute_s), ("memory", memory_s),
+             ("collective", coll_s)), key=lambda kv: kv[1])[0],
+        "model_flops_dev": model_flops_dev,
+        "hlo_flops_dev": h["dot_flops"],
+        "useful_ratio": model_flops_dev / max(h["dot_flops"], 1e-30),
+        "roofline_fraction": useful_s / max(step_s, 1e-30),
+        "analytic_compute_s": ana.compute_s,
+        "analytic_memory_s": ana.memory_s,
+        "analytic_coll_s": ana.collective_s,
+        "mem_gib_dev": (
+            rec.get("memory", {}).get("temp_size_in_bytes", 0) +
+            rec.get("memory", {}).get("argument_size_in_bytes", 0)
+        ) / 2 ** 30,
+        "compile_s": rec.get("compile_s"),
+    }
+    # cross-check flag: HLO-vs-analytic compute discrepancy > 10%
+    if ana.compute_s > 0:
+        terms["flops_vs_analytic"] = compute_s / ana.compute_s
+    return terms
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:7.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:6.1f}ms"
+    return f"{x*1e6:6.1f}us"
+
+
+def render(rows, markdown=False):
+    hdr = ["arch", "shape", "mesh", "compute", "memory", "collective",
+           "dominant", "frac", "useful", "mem/dev"]
+    out = []
+    if markdown:
+        out.append("| " + " | ".join(hdr) + " |")
+        out.append("|" + "---|" * len(hdr))
+    else:
+        out.append(",".join(hdr))
+    for r in rows:
+        cells = [
+            r["arch"], r["shape"], r["mesh"],
+            fmt_s(r["compute_s"]).strip(), fmt_s(r["memory_s"]).strip(),
+            fmt_s(r["collective_s"]).strip(), r["dominant"],
+            f"{r['roofline_fraction']:.3f}",
+            f"{r['useful_ratio']:.2f}",
+            f"{r['mem_gib_dev']:.1f}GiB",
+        ]
+        out.append(("| " + " | ".join(cells) + " |") if markdown
+                   else ",".join(cells))
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    rows = []
+    for rec in load_cells(args.mesh, args.variant):
+        t = derive_terms(rec)
+        if t:
+            rows.append(t)
+        elif rec.get("status") == "skipped":
+            print(f"# skipped {rec['arch']} {rec['shape']}: "
+                  f"{rec['reason']}")
+    print(render(rows, markdown=args.markdown))
+    if args.json_out:
+        json.dump(rows, open(args.json_out, "w"), indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Gradient monitoring demo (paper §5.3 / Figure 5): healthy vs
+problematic deep MLPs, diagnosed ONLY from EMA sketches in O(L·k·d)
+memory — no gradient matrix is ever stored.
+
+    PYTHONPATH=src python examples/gradient_monitoring.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper import MONITOR_HEALTHY, MONITOR_PROBLEMATIC
+from repro.core.monitor import detect_pathologies, stable_rank
+from repro.core.sketch import SketchConfig, sketch_memory_bytes
+from repro.data.synthetic import class_prototypes, classification_batch
+from repro.train.paper_trainer import accuracy, train
+
+for cfg in (MONITOR_HEALTHY, MONITOR_PROBLEMATIC):
+    key = jax.random.PRNGKey(11)
+    protos = class_prototypes(key, cfg.d_out, cfg.d_in)
+    x_test, y_test = classification_batch(
+        jax.random.fold_in(key, 2), protos, 512, 2.0)
+    scfg = SketchConfig(rank=4, max_rank=8, beta=0.9,
+                        batch_size=cfg.batch_size)
+    res = train(cfg, scfg, "monitor", steps=120,
+                batch_fn=lambda k: classification_batch(
+                    k, protos, cfg.batch_size, 2.0))
+    k = 2 * int(res.sketch["rank"]) + 1
+    sr = jax.vmap(stable_rank)(res.sketch["y"])
+    zn = jnp.linalg.norm(res.sketch["z"].reshape(
+        res.sketch["z"].shape[0], -1), axis=-1)
+    flags = detect_pathologies(res.monitor, k)
+    print(f"\n== {cfg.name} ==")
+    print(f"  test acc          : "
+          f"{accuracy(res.params, cfg, x_test, y_test):.3f}")
+    print(f"  ||Z||_F per layer  : min {float(zn.min()):.2e} "
+          f"max {float(zn.max()):.2e}")
+    print(f"  stable rank (k={k}): mean {float(sr.mean()):.2f}")
+    print(f"  collapsed layers   : "
+          f"{int(flags['diversity_collapse'].sum())}"
+          f"/{sr.shape[0]}")
+
+scfg = SketchConfig(rank=4, max_rank=4, batch_size=128)
+sk_mb = sketch_memory_bytes(scfg, 16, 1024) / 2 ** 20
+trad_mb = 16 * 1024 * 1024 * 4 * 5 / 2 ** 20
+print(f"\nmemory: sketches {sk_mb:.2f} MB vs gradient history over T=5 "
+      f"epochs {trad_mb:.0f} MB ({100 * (1 - sk_mb / trad_mb):.1f}% "
+      f"reduction, window-independent)")

@@ -1,0 +1,36 @@
+"""Quickstart: sketched backprop on a small MLP in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper import MLPConfig
+from repro.core.sketch import SketchConfig
+from repro.data.synthetic import class_prototypes, classification_batch
+from repro.train.paper_trainer import accuracy, train
+
+cfg = MLPConfig(name="quickstart", d_in=64, d_hidden=128, d_out=10,
+                num_hidden_layers=3, activation="tanh", batch_size=128)
+sketch = SketchConfig(rank=2, max_rank=8, beta=0.95, batch_size=128,
+                      recon_mode="fast")
+
+key = jax.random.PRNGKey(0)
+protos = class_prototypes(key, cfg.d_out, cfg.d_in)
+x_test, y_test = classification_batch(jax.random.fold_in(key, 1),
+                                      protos, 1024, noise=1.5)
+
+
+def batch_fn(k):
+    return classification_batch(k, protos, cfg.batch_size, noise=1.5)
+
+
+for variant in ("standard", "sketched_fixed"):
+    res = train(cfg, sketch, variant, steps=200, batch_fn=batch_fn)
+    acc = accuracy(res.params, cfg, x_test, y_test)
+    print(f"{variant:16s} final loss {res.history[-1]['loss']:.4f} "
+          f"test acc {acc:.3f}")
+
+print("\nThe sketched variant trains from reconstructed activations: "
+      "no layer input is ever stored for the backward pass "
+      "(paper Alg. 2 / core/sketched_linear.py).")

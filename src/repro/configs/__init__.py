@@ -1,0 +1,51 @@
+"""Config registry: ``get_arch(name)`` / ``ARCHS`` / shapes."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (
+    ArchConfig,
+    ShapeConfig,
+    SHAPES,
+    cell_is_runnable,
+    input_specs,
+    reduced,
+)
+
+_ARCH_MODULES = {
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "musicgen-large": "repro.configs.musicgen_large",
+    "granite-34b": "repro.configs.granite_34b",
+    "gemma3-27b": "repro.configs.gemma3_27b",
+    "stablelm-12b": "repro.configs.stablelm_12b",
+    "tinyllama-1.1b": "repro.configs.tinyllama_1_1b",
+    "xlstm-1.3b": "repro.configs.xlstm_1_3b",
+    "internvl2-76b": "repro.configs.internvl2_76b",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+}
+
+ARCHS = tuple(_ARCH_MODULES)
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[name]).CONFIG
+
+
+def all_cells() -> list[tuple[str, str, bool, str]]:
+    """(arch, shape, runnable, skip_reason) for all 40 assigned cells."""
+    out = []
+    for a in ARCHS:
+        cfg = get_arch(a)
+        for s in SHAPES:
+            ok, why = cell_is_runnable(cfg, SHAPES[s])
+            out.append((a, s, ok, why))
+    return out
+
+
+__all__ = [
+    "ArchConfig", "ShapeConfig", "SHAPES", "ARCHS",
+    "get_arch", "all_cells", "cell_is_runnable", "input_specs", "reduced",
+]

@@ -1,0 +1,217 @@
+"""Architecture / shape / run configuration for the repro framework.
+
+Every assigned architecture is a frozen `ArchConfig`; the four assigned
+input shapes are `ShapeConfig`s. `input_specs` builds ShapeDtypeStruct
+stand-ins (no allocation) for the dry-run; `reduced` shrinks a config to a
+CPU-smoke-testable size while preserving the block pattern.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+# Block types a decoder stack may contain. Each entry of `pattern` is one
+# of these; the pattern tiles up to num_layers (remainder = prefix tail).
+BLOCK_TYPES = ("full", "swa", "local", "global", "mlstm", "slstm", "rglru")
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """One assigned architecture (public-literature config)."""
+
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int                        # dense FFN width (expert width for MoE)
+    vocab_size: int
+    pattern: tuple[str, ...] = ("full",)
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    window_size: int = 4096          # for swa/local blocks
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    # modality frontend (STUB: input_specs provides embeddings)
+    frontend: str = "none"           # none | audio | vision
+    num_frontend_tokens: int = 0
+    mlp_type: str = "swiglu"         # swiglu | gelu | none
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # sLSTM/mLSTM/RG-LRU specific
+    conv_width: int = 4              # temporal conv width in recurrent blocks
+    lru_width: int = 0               # 0 -> d_model
+    slstm_chunk: int = 0             # 0 = per-step scan; >0 = chunked scan
+                                     # (weights stream once per chunk)
+    # paper-technique deployment per DESIGN.md §3
+    sketch_mode: str = "backprop"    # backprop | monitor | none
+    # long-context (sub-quadratic) applicability
+    supports_long_context: bool = False
+    # training details
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    remat_policy: str = "dots_no_batch"   # nothing | dots_no_batch | everything
+
+    def __post_init__(self):
+        for p in self.pattern:
+            if p not in BLOCK_TYPES:
+                raise ValueError(f"unknown block type {p!r}")
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def layer_types(self) -> tuple[str, ...]:
+        """Per-layer block type, pattern tiled to num_layers."""
+        reps = -(-self.num_layers // len(self.pattern))
+        return (self.pattern * reps)[: self.num_layers]
+
+    @property
+    def num_groups(self) -> int:
+        """Full pattern periods that fit in num_layers (scanned)."""
+        return self.num_layers // len(self.pattern)
+
+    @property
+    def tail_types(self) -> tuple[str, ...]:
+        """Remainder layers after the scanned groups (unrolled)."""
+        return self.pattern[: self.num_layers % len(self.pattern)]
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        n_q, n_kv = self.num_heads, self.num_kv_heads
+        per_type = {}
+        attn = d * hd * n_q + 2 * d * hd * n_kv + hd * n_q * d
+        if self.mlp_type == "swiglu":
+            mlp = 3 * d * self.d_ff
+        elif self.mlp_type == "gelu":
+            mlp = 2 * d * self.d_ff
+        else:
+            mlp = 0
+        if self.is_moe:
+            mlp = self.num_experts * 3 * d * self.d_ff + d * self.num_experts
+        for t in ("full", "swa", "local", "global"):
+            per_type[t] = attn + mlp + 2 * d
+        lru_w = self.lru_width or d
+        # rglru block: in/out proj + gates + conv + mlp
+        per_type["rglru"] = 2 * d * lru_w + 2 * lru_w * lru_w // 1 + \
+            self.conv_width * lru_w + mlp + 2 * d
+        # mlstm: qkv + gates + out + (no ffn when mlp_type == none -> its own up/down)
+        m_inner = 2 * d
+        per_type["mlstm"] = 2 * d * m_inner + m_inner * d + 3 * m_inner * hd \
+            + mlp + 2 * d
+        per_type["slstm"] = 4 * d * d + 4 * d * d + mlp + 2 * d
+        total = sum(per_type[t] for t in self.layer_types)
+        emb = self.vocab_size * d
+        head = 0 if self.tie_embeddings else self.vocab_size * d
+        return total + emb + head
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only routed experts)."""
+        if not self.is_moe:
+            return self.param_count()
+        full = self.param_count()
+        expert_p = self.num_experts * 3 * self.d_model * self.d_ff
+        active_p = self.experts_per_token * 3 * self.d_model * self.d_ff
+        n_moe_layers = len(self.layer_types)
+        return full - n_moe_layers * (expert_p - active_p)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def cell_is_runnable(arch: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether (arch, shape) is a runnable dry-run cell per the assignment.
+
+    long_500k needs sub-quadratic attention; skipped for pure full-attention
+    archs (documented in DESIGN.md §3 / §8).
+    """
+    if shape.name == "long_500k" and not arch.supports_long_context:
+        return False, "long_500k skipped: pure full-attention arch"
+    return True, ""
+
+
+def input_specs(arch: ArchConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+    train:   tokens/labels (B, S)            [+ patch_embeds for vlm]
+    prefill: tokens (B, S)
+    decode:  tokens (B, 1) + positions (B,)  (KV cache specs come from the
+             serve engine, which owns cache layout)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        specs = {
+            "tokens": sds((B, S), i32),
+            "labels": sds((B, S), i32),
+        }
+        if arch.frontend == "vision":
+            specs["patch_embeds"] = sds(
+                (B, arch.num_frontend_tokens, arch.d_model), arch.dtype
+            )
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": sds((B, S), i32)}
+        if arch.frontend == "vision":
+            specs["patch_embeds"] = sds(
+                (B, arch.num_frontend_tokens, arch.d_model), arch.dtype
+            )
+        return specs
+    if shape.kind == "decode":
+        return {
+            "tokens": sds((B, 1), i32),
+            "positions": sds((B,), i32),
+        }
+    raise ValueError(shape.kind)
+
+
+def reduced(arch: ArchConfig, *, layers_per_pattern: int = 1) -> ArchConfig:
+    """Shrink to a CPU-smoke-testable config preserving the block pattern."""
+    n_layers = max(len(arch.pattern) * layers_per_pattern, 2)
+    n_kv = max(1, min(arch.num_kv_heads, 2))
+    n_q = max(n_kv, 4)
+    return dataclasses.replace(
+        arch,
+        name=arch.name + "-reduced",
+        num_layers=n_layers,
+        d_model=64,
+        num_heads=n_q,
+        num_kv_heads=n_kv,
+        head_dim=16,
+        d_ff=0 if arch.d_ff == 0 else 128,
+        vocab_size=256,
+        window_size=min(arch.window_size, 32),
+        num_experts=min(arch.num_experts, 4) if arch.is_moe else 0,
+        experts_per_token=min(arch.experts_per_token, 2) if arch.is_moe else 0,
+        num_frontend_tokens=min(arch.num_frontend_tokens, 4),
+        lru_width=0,
+        dtype=jnp.float32,
+        param_dtype=jnp.float32,
+        remat_policy="nothing",
+    )

@@ -1,0 +1,27 @@
+"""internvl2-76b — VLM: LM backbone of InternViT + InternLM2(70B-class).
+
+[arXiv:2404.16821; unverified] 80L d_model=8192 64H (GQA kv=8) d_ff=28672
+vocab=128256. The InternViT vision frontend is a STUB per the assignment:
+input_specs provides 256 precomputed patch embeddings (B, 256, d_model)
+that the backbone prepends to the token embeddings. Full attention ->
+long_500k SKIPPED.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internvl2-76b",
+    family="vlm",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128256,
+    pattern=("full",),
+    mlp_type="swiglu",
+    frontend="vision",
+    num_frontend_tokens=256,
+    sketch_mode="backprop",
+    supports_long_context=False,
+)

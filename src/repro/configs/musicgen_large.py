@@ -1,0 +1,26 @@
+"""musicgen-large — decoder-only transformer over EnCodec audio tokens.
+
+[arXiv:2306.05284; hf] 48L d_model=2048 32H (kv=32 -> MHA) d_ff=8192
+vocab=2048. The EnCodec modality frontend is a STUB: tokens ARE the
+EnCodec codes (vocab 2048); input_specs provides the token stream
+directly, the audio codec itself is out of scope per the assignment.
+GELU MLP (T5-style MusicGen decoder). Full attention -> long_500k SKIPPED.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="musicgen-large",
+    family="audio",
+    num_layers=48,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=2048,
+    pattern=("full",),
+    mlp_type="gelu",
+    frontend="audio",
+    sketch_mode="backprop",
+    supports_long_context=False,
+)

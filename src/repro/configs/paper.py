@@ -1,0 +1,88 @@
+"""Configs for the paper's own experiments (§5).
+
+MLPConfig drives the paper-faithful MLP trainer (core/ + models/mlp.py):
+MNIST 4x512 tanh, CIFAR hybrid conv-MLP (3x512 dense tail), PINN 4x50,
+and the 16x1024 gradient-monitoring pair.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.core.sketch import SketchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    name: str
+    d_in: int
+    d_hidden: int
+    d_out: int
+    num_hidden_layers: int           # number of hidden (uniform-width) layers
+    activation: str = "tanh"         # tanh | relu
+    batch_size: int = 128
+    learning_rate: float = 1e-3
+    optimizer: str = "adam"          # adam | sgd
+    init: str = "kaiming"            # kaiming | xavier_small | kaiming_negbias
+    dtype: Any = jnp.float32
+    # sketching variant: standard | sketched_fixed | sketched_adaptive | monitor
+    variant: str = "standard"
+    sketch: SketchConfig = SketchConfig()
+
+
+# §5.1.2 MNIST: four-layer MLP, 512 hidden, tanh, 1.33M params
+MNIST_MLP = MLPConfig(
+    name="mnist_mlp",
+    d_in=784,
+    d_hidden=512,
+    d_out=10,
+    num_hidden_layers=3,   # 784->512, 512->512 x2, 512->10 : "four-layer"
+    activation="tanh",
+)
+
+# §5.1.2 CIFAR-10 hybrid: conv feature extractor + three 512-d dense layers;
+# sketching applies only to the dense tail. The conv stem is in
+# models/mlp.py::conv_stem_apply.
+CIFAR_HYBRID = MLPConfig(
+    name="cifar_hybrid",
+    d_in=1024,             # conv stem output dim (8x8x16 pooled)
+    d_hidden=512,
+    d_out=10,
+    num_hidden_layers=3,
+    activation="relu",
+)
+
+# §5.1.2 PINN: four-layer, 50-d hidden, 2D Poisson on [0,1]^2
+PINN_POISSON = MLPConfig(
+    name="pinn_poisson",
+    d_in=2,
+    d_hidden=50,
+    d_out=1,
+    num_hidden_layers=3,
+    activation="tanh",
+    batch_size=1024,
+    variant="monitor",     # monitoring-only: PDE residuals need exact grads
+)
+
+# §5.3 gradient-monitoring pair: sixteen-layer, 1024-wide MLPs
+MONITOR_HEALTHY = MLPConfig(
+    name="monitor_healthy",
+    d_in=784,
+    d_hidden=1024,
+    d_out=10,
+    num_hidden_layers=15,
+    activation="relu",
+    init="kaiming",
+    optimizer="adam",
+    variant="monitor",
+    sketch=SketchConfig(rank=4, beta=0.9),
+)
+
+MONITOR_PROBLEMATIC = dataclasses.replace(
+    MONITOR_HEALTHY,
+    name="monitor_problematic",
+    init="kaiming_negbias",   # strong negative bias b=-3.0 (paper §5.3)
+    optimizer="sgd",
+)

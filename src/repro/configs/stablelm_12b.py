@@ -1,0 +1,22 @@
+"""stablelm-12b — dense llama-family.
+
+[hf:stabilityai/stablelm-2-1_6b; hf] 40L d_model=5120 32H (GQA kv=8)
+d_ff=13824 vocab=100352. Full attention -> long_500k SKIPPED.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="stablelm-12b",
+    family="dense",
+    num_layers=40,
+    d_model=5120,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=160,
+    d_ff=13824,
+    vocab_size=100352,
+    pattern=("full",),
+    mlp_type="swiglu",
+    sketch_mode="backprop",
+    supports_long_context=False,
+)

@@ -1,0 +1,22 @@
+"""tinyllama-1.1b — llama2-arch small dense model.
+
+[arXiv:2401.02385; hf] 22L d_model=2048 32H (GQA kv=4) d_ff=5632
+vocab=32000. Full attention -> long_500k SKIPPED.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="tinyllama-1.1b",
+    family="dense",
+    num_layers=22,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=4,
+    head_dim=64,
+    d_ff=5632,
+    vocab_size=32000,
+    pattern=("full",),
+    mlp_type="swiglu",
+    sketch_mode="backprop",
+    supports_long_context=False,
+)

@@ -1,0 +1,26 @@
+"""xlstm-1.3b — sLSTM + mLSTM recurrent blocks (7:1 m:s ratio).
+
+[arXiv:2405.04517; unverified] 48L d_model=2048 4H d_ff=0 (xLSTM blocks
+carry their own up/down projections; no separate FFN) vocab=50304.
+Constant-state recurrence -> long_500k RUNS. Sketched backprop is
+INAPPLICABLE to the recurrence (DESIGN.md §3: per-timestep state
+trajectories feed back into themselves; reconstruction error would
+compound through time) — projection linears run monitoring-mode only.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    num_layers=48,
+    d_model=2048,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=512,
+    d_ff=0,
+    vocab_size=50304,
+    pattern=("mlstm",) * 7 + ("slstm",),
+    mlp_type="none",
+    sketch_mode="monitor",
+    supports_long_context=True,
+)

@@ -1,0 +1,24 @@
+# The paper's primary contribution: EMA three-sketch activation
+# compression with reconstruction-based sketched backprop, adaptive rank,
+# and sketch-derived gradient monitoring.
+from repro.core.sketch import (
+    SketchConfig, SketchState, Projections,
+    init_sketch_state, make_projections, sketch_update_single,
+    sketch_update_stack, ema_activation_matrix, refresh_projections,
+    active_mask, mask_columns, sketch_memory_bytes,
+)
+from repro.core.reconstruct import (
+    Reconstruction, reconstruct, reconstruct_dense_faithful, masked_qr,
+)
+from repro.core.sketched_linear import sketched_matmul, ema_node_update
+from repro.core.adaptive import (
+    AdaptiveConfig, AdaptiveState, init_adaptive_state, adaptive_step,
+)
+from repro.core.monitor import (
+    MonitorState, init_monitor_state, monitor_record, stack_metrics,
+    layer_metrics, stable_rank, detect_pathologies, PathologyThresholds,
+    monitor_memory_bytes, METRIC_NAMES, N_METRICS,
+)
+from repro.core.bounds import (
+    tail_energy, reconstruction_bound, gradient_bound, SQRT6,
+)

@@ -1,0 +1,86 @@
+"""Adaptive rank controller (paper §4.3, Algorithm 1).
+
+Patience-driven: sustained improvement -> shrink r (save memory);
+stagnation -> grow r (higher fidelity); growth past tau_reset -> reset to
+r0. Every rank change "reinitializes matrices" (paper) — here that is a
+masked, shape-static operation: sketches zero, projections re-derived via
+fold_in, `rank` scalar updated; `jit` never recompiles.
+
+The controller is pure scalar arithmetic (jnp.where, no host callbacks) so
+it runs inside the jitted train step.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveConfig:
+    r0: int = 2
+    r_min: int = 1
+    r_max: int = 16
+    patience_decrease: int = 3       # epochs of improvement -> shrink
+    patience_increase: int = 5       # epochs of stagnation  -> grow
+    dr_down: int = 1
+    dr_up: int = 2
+    tau_reset: int = 14              # r + dr_up >= tau -> reset to r0
+    min_delta: float = 1e-4          # relative improvement threshold
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdaptiveState:
+    best_metric: Array       # () f32 best (lowest) metric seen
+    streak_improve: Array    # () i32 consecutive improving epochs
+    streak_stall: Array      # () i32 consecutive stalled epochs
+    num_changes: Array       # () i32 rank changes so far (diagnostics)
+
+
+def init_adaptive_state() -> AdaptiveState:
+    return AdaptiveState(
+        best_metric=jnp.asarray(jnp.inf, jnp.float32),
+        streak_improve=jnp.asarray(0, jnp.int32),
+        streak_stall=jnp.asarray(0, jnp.int32),
+        num_changes=jnp.asarray(0, jnp.int32),
+    )
+
+
+def adaptive_step(
+    state: AdaptiveState,
+    rank: Array,              # () i32 current r
+    metric: Array,            # () f32 epoch metric (lower is better)
+    cfg: AdaptiveConfig,
+) -> tuple[AdaptiveState, Array, Array]:
+    """One per-epoch controller update.
+
+    Returns (new_state, new_rank, changed) where `changed` is a bool
+    scalar — the caller zeroes sketches + folds the projection key when
+    it is True (paper: "reinitialize matrices").
+    """
+    improved = metric < state.best_metric * (1.0 - cfg.min_delta)
+    streak_improve = jnp.where(improved, state.streak_improve + 1, 0)
+    streak_stall = jnp.where(improved, 0, state.streak_stall + 1)
+
+    do_down = streak_improve >= cfg.patience_decrease
+    do_up = streak_stall >= cfg.patience_increase
+
+    r_down = jnp.maximum(cfg.r_min, rank - cfg.dr_down)
+    grown = rank + cfg.dr_up
+    r_up = jnp.where(grown >= cfg.tau_reset, cfg.r0,
+                     jnp.minimum(grown, cfg.r_max))
+
+    new_rank = jnp.where(do_down, r_down, jnp.where(do_up, r_up, rank))
+    changed = new_rank != rank
+
+    new_state = AdaptiveState(
+        best_metric=jnp.minimum(state.best_metric, metric),
+        streak_improve=jnp.where(do_down | do_up, 0, streak_improve),
+        streak_stall=jnp.where(do_down | do_up, 0, streak_stall),
+        num_changes=state.num_changes + changed.astype(jnp.int32),
+    )
+    return new_state, new_rank.astype(jnp.int32), changed

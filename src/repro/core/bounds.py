@@ -1,0 +1,24 @@
+"""Approximation-quality bounds (paper §4.5, Theorems 4.2 / 4.3)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+SQRT6 = 6.0 ** 0.5
+
+
+def tail_energy(a, r: int):
+    """tau_{r+1}(A) = sqrt(sum_{i>r} sigma_i^2)."""
+    s = jnp.linalg.svd(a.astype(jnp.float32), compute_uv=False)
+    return jnp.sqrt(jnp.sum(s[r:] ** 2))
+
+
+def reconstruction_bound(a_ema, r: int):
+    """Theorem 4.2: E||A_EMA - A~_EMA||_F <= sqrt(6) tau_{r+1}(A_EMA)."""
+    return SQRT6 * tail_energy(a_ema, r)
+
+
+def gradient_bound(delta, a_ema, r: int, eps_coherence: float = 0.0):
+    """Theorem 4.3: ||grad - grad^||_F <=
+    ||delta^T||_2 [ sqrt(6) tau_{r+1}(A_EMA) + O(eps_coherence) ]."""
+    dnorm = jnp.linalg.norm(delta.astype(jnp.float32), ord=2)
+    return dnorm * (SQRT6 * tail_energy(a_ema, r) + eps_coherence)

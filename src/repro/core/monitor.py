@@ -1,0 +1,138 @@
+"""Sketch-based gradient monitoring (paper §4.6, Figure 5).
+
+All metrics are derived from the EMA sketches — no gradient matrix is
+ever materialized, so memory is O(L * k * d) independent of the
+monitoring window T (vs O(L * d^2 * T) for storing gradient history).
+
+Metrics per layer:
+  grad_norm_proxy   ||Z_s||_F        (gradient magnitude proxy)
+  stable_rank       ||Y_s||_F^2 / ||Y_s||_2^2   (gradient diversity;
+                    spectral norm from the k x k Gram eigenvalues — no SVD
+                    of the d x k sketch needed)
+  y_norm            ||Y_s||_F        (activation energy)
+
+The ring buffer holds `window` steps of (L, n_metrics) readings inside
+device memory; pathology detection (vanishing / exploding / stagnation /
+diversity collapse) reads only the buffer.
+
+Distributed form (DESIGN.md §4): for width-sharded sketches the same
+metrics are exact under psum — squared Frobenius norms add across shards
+and the Gram matrix Y^T Y (k x k) psums across the width shards. See
+`gram_metrics_from_partial`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+N_METRICS = 3
+METRIC_NAMES = ("grad_norm_proxy", "stable_rank", "y_norm")
+
+
+def stable_rank(y_s: Array, eps: float = 1e-30) -> Array:
+    """||Y||_F^2 / ||Y||_2^2 via eigvals of the k x k Gram matrix."""
+    g = y_s.T @ y_s
+    fro2 = jnp.trace(g)
+    spec2 = jnp.max(jnp.linalg.eigvalsh(g))
+    return fro2 / jnp.maximum(spec2, eps)
+
+
+def layer_metrics(x_s: Array, y_s: Array, z_s: Array) -> Array:
+    """(N_METRICS,) for one layer triple."""
+    return jnp.stack([
+        jnp.linalg.norm(z_s),
+        stable_rank(y_s),
+        jnp.linalg.norm(y_s),
+    ])
+
+
+def stack_metrics(x: Array, y: Array, z: Array) -> Array:
+    """(L, N_METRICS) for stacked (L, d, k) triples."""
+    return jax.vmap(layer_metrics)(x, y, z)
+
+
+def gram_metrics_from_partial(y_local: Array, axis_name: str) -> Array:
+    """stable_rank of a width-sharded Y from local shards (exact)."""
+    g = jax.lax.psum(y_local.T @ y_local, axis_name)
+    fro2 = jnp.trace(g)
+    spec2 = jnp.max(jnp.linalg.eigvalsh(g))
+    return fro2 / jnp.maximum(spec2, 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# Ring buffer
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class MonitorState:
+    buffer: Array    # (window, L, N_METRICS) f32
+    idx: Array       # () i32 next write slot
+    count: Array     # () i32 total writes (saturates display logic)
+
+
+def init_monitor_state(window: int, num_layers: int) -> MonitorState:
+    return MonitorState(
+        buffer=jnp.zeros((window, num_layers, N_METRICS), jnp.float32),
+        idx=jnp.asarray(0, jnp.int32),
+        count=jnp.asarray(0, jnp.int32),
+    )
+
+
+def monitor_record(state: MonitorState, metrics: Array) -> MonitorState:
+    """Write one (L, N_METRICS) reading into the ring."""
+    window = state.buffer.shape[0]
+    buf = jax.lax.dynamic_update_slice_in_dim(
+        state.buffer, metrics[None].astype(jnp.float32), state.idx, axis=0
+    )
+    return MonitorState(
+        buffer=buf,
+        idx=jnp.mod(state.idx + 1, window),
+        count=state.count + 1,
+    )
+
+
+def monitor_memory_bytes(window: int, num_layers: int) -> int:
+    return window * num_layers * N_METRICS * 4
+
+
+# ---------------------------------------------------------------------------
+# Pathology detection (paper §5.3 healthy-vs-problematic demo)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PathologyThresholds:
+    vanish_norm: float = 1e-5
+    explode_norm: float = 1e6
+    stagnation_rel: float = 1e-3     # max relative change over window
+    collapse_frac: float = 0.45      # stable rank < frac * k -> collapsed
+
+
+def detect_pathologies(
+    state: MonitorState, k_active: int,
+    th: PathologyThresholds = PathologyThresholds(),
+) -> dict[str, Array]:
+    """Boolean (L,) flags per pathology, from the ring buffer only."""
+    buf = state.buffer                                 # (W, L, M)
+    n = jnp.minimum(state.count, buf.shape[0]).astype(jnp.float32)
+    n = jnp.maximum(n, 1.0)
+    valid = (jnp.arange(buf.shape[0]) <
+             jnp.minimum(state.count, buf.shape[0]))[:, None, None]
+    norms = jnp.where(valid[..., 0], buf[..., 0], 0.0)  # grad_norm_proxy
+    mean_norm = norms.sum(0) / n
+    max_norm = jnp.where(valid[..., 0], buf[..., 0], -jnp.inf).max(0)
+    min_norm = jnp.where(valid[..., 0], buf[..., 0], jnp.inf).min(0)
+    sr = jnp.where(valid[..., 0], buf[..., 1], 0.0).sum(0) / n
+    rel_span = (max_norm - min_norm) / jnp.maximum(mean_norm, 1e-30)
+    return {
+        "vanishing": mean_norm < th.vanish_norm,
+        "exploding": max_norm > th.explode_norm,
+        "stagnating": rel_span < th.stagnation_rel,
+        "diversity_collapse": sr < th.collapse_frac * k_active,
+    }

@@ -1,0 +1,278 @@
+"""EMA three-sketch framework (paper §4.1, Eqs. 5a-5c).
+
+Per layer we maintain three complementary sketches of the (transposed)
+batch activation matrix  A^T ∈ R^{d x Nb}:
+
+    X_s ∈ R^{d x k}   input/co-range sketch   X <- beta X + (1-beta) A_prev^T Υ
+    Y_s ∈ R^{d x k}   output/range sketch     Y <- beta Y + (1-beta) A^T Ω
+    Z_s ∈ R^{d x s}   interaction/core sketch Z <- beta Z + (1-beta) (A^T Φ) ⊙ Ψ^T
+
+with k = s = 2r+1 for target rank r.  Υ, Ω ∈ R^{Nb x k} and Φ ∈ R^{Nb x s}
+are random Gaussian projections shared across layers; Ψ^[l] ∈ R^s is a
+layer-specific weight vector.
+
+JAX adaptation (DESIGN.md §1): buffers are allocated at k_max = 2 r_max + 1
+and the *active* rank r_t is runtime state — columns >= k_active are masked.
+This keeps every shape static so `jit` never recompiles on a rank change;
+a rank change merely updates the mask and re-derives the projections via
+`jax.random.fold_in(key, epoch_of_change)`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchConfig:
+    """Static configuration of the sketching framework."""
+
+    rank: int = 2                   # initial target rank r0
+    max_rank: int = 16              # r_max: buffers sized k_max = 2*r_max+1
+    beta: float = 0.95              # EMA momentum
+    batch_size: int = 128           # Nb — rows of the projection matrices
+    dtype: Any = jnp.float32        # sketch arithmetic dtype
+    # reconstruction: 'faithful' = paper Eqs 6-7 with pinv;
+    # 'fast' = ridge-regularized normal-equation solves (TPU-friendly).
+    recon_mode: str = "faithful"
+    ridge: float = 1e-4             # RELATIVE ridge for 'fast' solves
+
+    @property
+    def k0(self) -> int:
+        return 2 * self.rank + 1
+
+    @property
+    def k_max(self) -> int:
+        return 2 * self.max_rank + 1
+
+    def k_of(self, r) -> Array | int:
+        """k = 2r+1 (works on traced r)."""
+        return 2 * r + 1
+
+
+# ---------------------------------------------------------------------------
+# State pytrees
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Projections:
+    """Random Gaussian projection matrices (paper §4.1).
+
+    Upsilon/Omega/Phi are shared across layers; Psi is per-layer
+    (stacked along a leading L axis).
+    """
+
+    upsilon: Array   # (Nb, k_max)
+    omega: Array     # (Nb, k_max)
+    phi: Array       # (Nb, k_max)        (s = k in the paper: k = s = 2r+1)
+    psi: Array       # (L, k_max)         layer-specific interaction weights
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SketchState:
+    """EMA sketches for a stack of L uniform layers + adaptive-rank scalars."""
+
+    x: Array         # (L, d, k_max)  input sketch  X_s
+    y: Array         # (L, d, k_max)  output sketch Y_s
+    z: Array         # (L, d, k_max)  interaction sketch Z_s
+    proj: Projections
+    rank: Array      # ()  int32 — active target rank r_t
+    key: Array       # PRNG key the projections were derived from
+    epoch: Array     # () int32 — fold_in counter for projection refresh
+    step: Array      # () int32 — EMA update counter (for bias-correction)
+
+    @property
+    def k_active(self) -> Array:
+        return 2 * self.rank + 1
+
+
+def _gaussian(key: Array, shape, dtype) -> Array:
+    return jax.random.normal(key, shape, dtype=dtype)
+
+
+def make_projections(
+    key: Array, cfg: SketchConfig, num_layers: int
+) -> Projections:
+    ku, ko, kp, ks = jax.random.split(key, 4)
+    d = cfg.dtype
+    return Projections(
+        upsilon=_gaussian(ku, (cfg.batch_size, cfg.k_max), d),
+        omega=_gaussian(ko, (cfg.batch_size, cfg.k_max), d),
+        phi=_gaussian(kp, (cfg.batch_size, cfg.k_max), d),
+        psi=_gaussian(ks, (num_layers, cfg.k_max), d),
+    )
+
+
+def init_sketch_state(
+    key: Array, cfg: SketchConfig, num_layers: int, width: int
+) -> SketchState:
+    """Zero sketches + fresh projections (paper Alg. 1 lines 1-3)."""
+    proj = make_projections(key, cfg, num_layers)
+    zeros = jnp.zeros((num_layers, width, cfg.k_max), cfg.dtype)
+    return SketchState(
+        x=zeros,
+        y=zeros,
+        z=zeros,
+        proj=proj,
+        rank=jnp.asarray(cfg.rank, jnp.int32),
+        key=key,
+        epoch=jnp.asarray(0, jnp.int32),
+        step=jnp.asarray(0, jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Masking utilities (static-shape adaptive rank)
+# ---------------------------------------------------------------------------
+
+
+def active_mask(k_active: Array, k_max: int, dtype=jnp.float32) -> Array:
+    """(k_max,) 1.0 for columns < k_active else 0.0."""
+    return (jnp.arange(k_max) < k_active).astype(dtype)
+
+
+def mask_columns(m: Array, k_active: Array) -> Array:
+    """Zero the inactive trailing columns of (..., k_max)."""
+    return m * active_mask(k_active, m.shape[-1], m.dtype)
+
+
+# ---------------------------------------------------------------------------
+# EMA updates (paper Eqs. 5a-5c) — single layer and stacked forms
+# ---------------------------------------------------------------------------
+
+
+def sketch_update_single(
+    x_s: Array,
+    y_s: Array,
+    z_s: Array,
+    a_prev: Array,     # (Nb, d_in)  activations entering the layer
+    a_out: Array,      # (Nb, d_out) activations leaving the layer
+    proj: Projections,
+    layer_idx,
+    beta: float,
+    k_active: Array,
+) -> tuple[Array, Array, Array]:
+    """One EMA sketch update for one layer (pure jnp reference path).
+
+    The Pallas kernel `repro.kernels.sketch_update` computes the same
+    contraction fused; `repro.kernels.ref.sketch_update_ref` wraps this.
+    """
+    dt = x_s.dtype
+    ap = a_prev.astype(dt)
+    ao = a_out.astype(dt)
+    ups = mask_columns(proj.upsilon.astype(dt), k_active)
+    omg = mask_columns(proj.omega.astype(dt), k_active)
+    phi = mask_columns(proj.phi.astype(dt), k_active)
+    psi = mask_columns(proj.psi[layer_idx].astype(dt), k_active)
+
+    x_new = beta * x_s + (1.0 - beta) * (ap.T @ ups)
+    y_new = beta * y_s + (1.0 - beta) * (ao.T @ omg)
+    z_new = beta * z_s + (1.0 - beta) * ((ao.T @ phi) * psi[None, :])
+    # keep masked columns exactly zero (EMA of zero is zero, but guard
+    # against drift after a rank decrease)
+    return (
+        mask_columns(x_new, k_active),
+        mask_columns(y_new, k_active),
+        mask_columns(z_new, k_active),
+    )
+
+
+def sketch_update_stack(
+    state: SketchState,
+    acts: Array,       # (L+1, Nb, d) — activation trajectory A^[0..L]
+    beta: float | None = None,
+) -> SketchState:
+    """Update all L layers' sketches from the full activation trajectory.
+
+    Layer l's input sketch consumes acts[l], output sketches consume
+    acts[l+1] (paper: X uses A^[l-1], Y/Z use A^[l]).  The fused Pallas
+    path lives in `repro.kernels.ops.sketch_update` and is wired in by the
+    training step; this is the pure-jnp reference used everywhere else.
+    """
+    if beta is None:
+        beta = 0.95
+    k_act = state.k_active
+
+    def _update_one(x_s, y_s, z_s, a_prev, a_out, psi_l, proj, beta, k_act):
+        dt = x_s.dtype
+        ups = mask_columns(proj.upsilon.astype(dt), k_act)
+        omg = mask_columns(proj.omega.astype(dt), k_act)
+        phi = mask_columns(proj.phi.astype(dt), k_act)
+        psi = mask_columns(psi_l.astype(dt), k_act)
+        x_new = beta * x_s + (1 - beta) * (a_prev.astype(dt).T @ ups)
+        y_new = beta * y_s + (1 - beta) * (a_out.astype(dt).T @ omg)
+        z_new = beta * z_s + (1 - beta) * ((a_out.astype(dt).T @ phi) * psi)
+        return (
+            mask_columns(x_new, k_act),
+            mask_columns(y_new, k_act),
+            mask_columns(z_new, k_act),
+        )
+
+    a_prev = acts[:-1]
+    a_out = acts[1:]
+    new = jax.vmap(
+        lambda xs, ys, zs, ap, ao, psi: _update_one(
+            xs, ys, zs, ap, ao, psi, state.proj, beta, k_act
+        )
+    )(state.x, state.y, state.z, a_prev, a_out, state.proj.psi)
+    return dataclasses.replace(
+        state, x=new[0], y=new[1], z=new[2], step=state.step + 1
+    )
+
+
+# ---------------------------------------------------------------------------
+# Lemma 4.1 helper: the conceptual EMA activation matrix (tests only)
+# ---------------------------------------------------------------------------
+
+
+def ema_activation_matrix(act_history: list[Array], beta: float) -> Array:
+    """A_EMA(n) = (1-beta) sum_j beta^{n-j} A(j)^T  — O(d*Nb), test-only.
+
+    Lemma 4.1 asserts  X_s(n) == A_EMA(n) @ Upsilon  exactly; unit tests
+    verify this to machine precision.
+    """
+    n = len(act_history)
+    out = jnp.zeros_like(act_history[0].T)
+    for j, a in enumerate(act_history, start=1):
+        out = out + (1.0 - beta) * beta ** (n - j) * a.T
+    return out
+
+
+def refresh_projections(state: SketchState, cfg: SketchConfig) -> SketchState:
+    """Re-randomize projections + zero sketches (paper Alg.1: 'reinitialize
+    matrices' after a rank change). Static shapes — only values change."""
+    epoch = state.epoch + 1
+    key = jax.random.fold_in(state.key, epoch)
+    L = state.proj.psi.shape[0]
+    proj = make_projections(key, cfg, L)
+    return dataclasses.replace(
+        state,
+        x=jnp.zeros_like(state.x),
+        y=jnp.zeros_like(state.y),
+        z=jnp.zeros_like(state.z),
+        proj=proj,
+        epoch=epoch,
+        step=jnp.zeros_like(state.step),
+    )
+
+
+def sketch_memory_bytes(cfg: SketchConfig, num_layers: int, width: int) -> int:
+    """Actual bytes held by the sketch state (for memory benchmarks)."""
+    itemsize = jnp.dtype(cfg.dtype).itemsize
+    sketches = 3 * num_layers * width * cfg.k_max * itemsize
+    proj = (3 * cfg.batch_size + num_layers) * cfg.k_max * itemsize
+    return sketches + proj

@@ -1,0 +1,61 @@
+"""Deterministic synthetic data (no external datasets are available
+offline; the paper's relative claims — sketched-vs-standard accuracy gap,
+memory bookkeeping — are dataset-independent).
+
+LM tokens:   a mixture of Zipf-ish unigram draws and short copy motifs so
+             the loss has learnable structure.
+Classification ("MNIST-like"/"CIFAR-like"): K class prototypes + noise at
+             the original input dims (784 / 32x32x3), linearly separable
+             at controllable margin — the paper's accuracy-gap experiment
+             transfers.
+PINN:        collocation points on [0,1]^2 (exact solution known).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lm_batch(key, batch: int, seq_len: int, vocab: int):
+    """Deterministic (tokens, labels) with copy structure."""
+    k1, k2 = jax.random.split(key)
+    base = jax.random.randint(k1, (batch, seq_len + 1), 0, vocab)
+    # splice a repeated motif so next-token prediction is learnable
+    motif = jax.random.randint(k2, (batch, 8), 0, vocab)
+    reps = (seq_len + 1 + 7) // 8
+    pattern = jnp.tile(motif, (1, reps))[:, : seq_len + 1]
+    mix = (jnp.arange(seq_len + 1) % 3 == 0)
+    seq = jnp.where(mix[None, :], pattern, base)
+    return seq[:, :-1].astype(jnp.int32), seq[:, 1:].astype(jnp.int32)
+
+
+def class_prototypes(key, num_classes: int, dim: int):
+    return jax.random.normal(key, (num_classes, dim)) / (dim ** 0.25)
+
+
+def classification_batch(key, protos, batch: int, noise: float = 1.0):
+    """(x (B, dim), y (B,)) — prototype + gaussian noise."""
+    k1, k2 = jax.random.split(key)
+    y = jax.random.randint(k1, (batch,), 0, protos.shape[0])
+    x = protos[y] + noise * jax.random.normal(
+        k2, (batch, protos.shape[1]))
+    return x, y
+
+
+def image_batch(key, protos, batch: int, hw: int = 32, ch: int = 3,
+                noise: float = 1.0):
+    x, y = classification_batch(key, protos, batch, noise)
+    return x.reshape(batch, hw, hw, ch), y
+
+
+def pinn_points(key, n_interior: int, n_boundary: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    interior = jax.random.uniform(k1, (n_interior, 2))
+    t = jax.random.uniform(k2, (n_boundary,))
+    side = jax.random.randint(k3, (n_boundary,), 0, 4)
+    zeros, ones = jnp.zeros_like(t), jnp.ones_like(t)
+    bx = jnp.select([side == 0, side == 1, side == 2, side == 3],
+                    [t, t, zeros, ones])
+    by = jnp.select([side == 0, side == 1, side == 2, side == 3],
+                    [zeros, ones, t, t])
+    return interior, jnp.stack([bx, by], axis=-1)

@@ -1,0 +1,9 @@
+# Pallas TPU kernels for the compute hot-spots (validated in interpret
+# mode on CPU; Mosaic-compiled on the TPU target):
+#   sketch_update    fused EMA X/Y/Z update, one HBM pass over A
+#   flash_attention  causal/sliding-window GQA online-softmax tiling
+#   mlstm_chunk      chunkwise stabilized mLSTM with VMEM-resident state
+from repro.kernels.ops import (
+    sketch_update, flash_attention, mlstm_chunk,
+    use_pallas, pallas_enabled, interpret_mode,
+)

@@ -1,0 +1,36 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+`use_pallas(True)` routes model hot spots through the TPU kernels; the
+default (False) keeps XLA-native implementations — the right choice on
+this CPU container where interpret-mode kernels would dominate runtime.
+On real TPU hardware the kernels compile via Mosaic (interpret=False).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mlstm_chunk import mlstm_chunk
+from repro.kernels.sketch_update import sketch_update
+
+_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+_FLAGS = {"use_pallas": False}
+
+
+def use_pallas(enable: bool = True) -> None:
+    _FLAGS["use_pallas"] = enable
+
+
+def pallas_enabled() -> bool:
+    return _FLAGS["use_pallas"]
+
+
+def interpret_mode() -> bool:
+    """Interpret on CPU (validation), compiled Mosaic on TPU (target)."""
+    return not _ON_TPU
+
+
+__all__ = [
+    "sketch_update", "flash_attention", "mlstm_chunk",
+    "use_pallas", "pallas_enabled", "interpret_mode",
+]

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sketch_update_ref(a, x_s, y_s, z_s, ups, omg, phi, psi, beta):
+    """Fused EMA triple update against activation matrix a (T, d).
+
+    x/y/z (d, k); ups/omg/phi (T, k); psi (k,). Single-node form (the
+    paper's per-node triple; see core/sketched_linear.ema_node_update).
+    """
+    at = a.astype(jnp.float32).T
+    x_new = beta * x_s + (1 - beta) * (at @ ups.astype(jnp.float32))
+    y_new = beta * y_s + (1 - beta) * (at @ omg.astype(jnp.float32))
+    z_new = beta * z_s + (1 - beta) * (
+        (at @ phi.astype(jnp.float32)) * psi.astype(jnp.float32)[None, :])
+    return x_new, y_new, z_new
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    """q (B, Hq, S, D); k/v (B, Hkv, S, D) GQA. Returns (B, Hq, S, D)."""
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, S, D)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k).astype(jnp.float32)
+    s = s * (D ** -0.5)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), v)
+    return o.reshape(B, Hq, S, D)
+
+
+def mlstm_chunk_ref(q, k, v, li, lf, C0, n0, m0, chunk):
+    """Oracle for the chunkwise mLSTM kernel — the model's own chunked
+    implementation (itself validated against the sequential recurrence in
+    tests/test_ssm.py)."""
+    from repro.models.ssm import _mlstm_chunk_scan
+    return _mlstm_chunk_scan(q, k, v, li, lf, C0, n0, m0, chunk)

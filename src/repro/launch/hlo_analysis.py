@@ -1,0 +1,261 @@
+"""HLO-text analysis: per-computation FLOPs / bytes / collective bytes
+with while-loop trip-count attribution.
+
+Why not `compiled.cost_analysis()` alone: XLA's HloCostAnalysis counts a
+while body ONCE regardless of trip count, so scan-over-layers models
+(every arch here) are undercounted by ~L. This parser walks the HLO
+module text, attributes dots/collectives/fusions to their computation,
+discovers `known_trip_count` annotations (falling back to caller-supplied
+hints), and scales each computation's totals by the product of enclosing
+loop trips. Results are cross-checked against the analytic config model
+in benchmarks/analytic.py; >10% discrepancies are flagged in
+EXPERIMENTS.md (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# ops whose HBM read ~= their result size (slicing/layout movement)
+_MOVE_OPS = frozenset({
+    "dynamic-slice", "slice", "copy", "transpose", "reshape", "reverse",
+    "pad", "dynamic-update-slice", "concatenate", "gather",
+})
+# ops with no HBM traffic at all (views / metadata)
+_VIEW_OPS = frozenset({
+    "get-tuple-element", "tuple", "bitcast", "parameter", "constant",
+    "after-all", "partition-id", "replica-id",
+})
+# ops that write their result but read ~nothing
+_WRITE_ONLY_OPS = frozenset({"broadcast", "iota"})
+_FREE_OPS = _VIEW_OPS | _WRITE_ONLY_OPS
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of an HLO type string (sums tuple elements)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CompStats:
+    dot_flops: float = 0.0
+    coll_bytes: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    io_bytes: float = 0.0           # operand+result bytes of top-level ops
+    calls: list = dataclasses.field(default_factory=list)
+    # (child_name, trip_or_None, condition_or_None)
+    int_constants: list = dataclasses.field(default_factory=list)
+    pending_dots: list = dataclasses.field(default_factory=list)
+    # (result_dims_prod, lhs_operand_name, contracting_dim_indices)
+    pending_operands: list = dataclasses.field(default_factory=list)
+
+
+_DOT_RE = re.compile(
+    r"\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(\w+\[[\d,]*\])(?:\{[\d,]*\})?"
+    r"\s*dot\(\s*%?([\w\.\-]+)")
+_DEF_RE = re.compile(
+    r"\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\w+\[[\d,]*\])")
+
+
+def _parse_dot(line: str):
+    """(prod(result dims), lhs operand name, lhs contracting dims)."""
+    m = _DOT_RE.match(line)
+    if not m:
+        return None
+    rdims = 1
+    sm = _SHAPE_RE.search(m.group(1))
+    for d in sm.group(2).split(","):
+        if d:
+            rdims *= int(d)
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    cdims = tuple(int(x) for x in cm.group(1).split(",") if x) \
+        if cm else ()
+    return rdims, m.group(2), cdims
+
+
+def parse_hlo(text: str) -> dict[str, CompStats]:
+    """computation name -> CompStats.
+
+    Computation headers sit at column 0 (`%name (params) -> type {` or
+    `ENTRY %name ...`); instructions are indented. Params may contain
+    nested tuple types, so headers are recognized positionally, not by a
+    full grammar.
+    """
+    comps: dict[str, CompStats] = {}
+    types: dict[str, str] = {}
+    current: CompStats | None = None
+    for line in text.splitlines():
+        if line and not line[0].isspace() and line.rstrip().endswith("{"):
+            token = line.split()[0]
+            if token == "ENTRY":
+                token = line.split()[1]
+            if token.startswith("HloModule"):
+                continue
+            name = token.lstrip("%")
+            current = CompStats()
+            comps[name] = current
+            continue
+        if current is None:
+            continue
+        stripped = line.strip()
+        if not stripped or stripped == "}":
+            continue
+        dm = _DEF_RE.match(stripped)
+        if dm:
+            types[dm.group(1)] = dm.group(2)
+        # result-type bytes (first shape on the line, after the `=`)
+        if "=" in stripped:
+            rhs = stripped.split("=", 1)[1]
+            res_b = shape_bytes(rhs.split("(")[0])
+            op_m = re.search(r"(\w[\w\-\$]*)\(([^)]*)\)", rhs)
+            opname = op_m.group(1) if op_m else ""
+            if opname not in _VIEW_OPS:
+                current.io_bytes += res_b
+            if opname in _MOVE_OPS:
+                # data movement: read ~= result (never the full operand —
+                # dynamic-slice from a (L, ...) stacked array inside a
+                # while body reads one slice per trip, not the stack)
+                current.io_bytes += res_b
+            elif opname and opname not in _FREE_OPS:
+                # real compute: operand reads resolved in pass 2
+                for nm in op_m.group(2).split(","):
+                    nm = nm.strip().lstrip("%")
+                    if nm:
+                        current.pending_operands.append(nm)
+        if " dot(" in stripped:
+            pd = _parse_dot(stripped)
+            if pd:
+                current.pending_dots.append(pd)
+        for kind in COLLECTIVE_KINDS:
+            if f" {kind}(" in stripped or f" {kind}-start(" in stripped:
+                rhs = stripped.split("=", 1)[1] if "=" in stripped else ""
+                b = shape_bytes(rhs.split("(")[0])
+                current.coll_bytes[kind] += b
+                # XLA:CPU widens bf16 math to f32 and hoists the convert
+                # before collectives; on the TPU target these stay bf16.
+                # Track the widened share so the roofline can report the
+                # TPU-corrected number (DESIGN.md §5).
+                if "f32[" in rhs.split("(")[0] and "convert" in rhs:
+                    current.coll_bytes["widened_f32"] += b
+        cst = re.search(r"s32\[\]\s+constant\((\d+)\)", stripped)
+        if cst:
+            current.int_constants.append(int(cst.group(1)))
+        if " while(" in stripped:
+            body = _BODY_RE.search(stripped)
+            trip = _TRIP_RE.search(stripped)
+            cond = re.search(r"condition=%?([\w\.\-]+)", stripped)
+            if body:
+                current.calls.append((
+                    body.group(1),
+                    int(trip.group(1)) if trip else None,
+                    cond.group(1) if cond else None,
+                ))
+        else:
+            for pat in (_CALLS_RE, _TO_APPLY_RE):
+                cm = pat.search(stripped)
+                if cm:
+                    # fusion bodies / reducer lambdas: on-chip, their
+                    # io_bytes never touch HBM
+                    current.calls.append((cm.group(1), 1, "__fusion__"))
+    # resolve dot FLOPs now that every instruction's type is known
+    for st in comps.values():
+        for nm in st.pending_operands:
+            t = types.get(nm)
+            if t is not None:
+                st.io_bytes += shape_bytes(t)
+        st.pending_operands = []
+        for rdims, lhs_name, cdims in st.pending_dots:
+            k = 1
+            lhs_t = types.get(lhs_name)
+            if lhs_t is not None and cdims:
+                sm = _SHAPE_RE.search(lhs_t)
+                ldims = [int(d) for d in sm.group(2).split(",") if d]
+                for ci in cdims:
+                    if ci < len(ldims):
+                        k *= ldims[ci]
+            st.dot_flops += 2.0 * rdims * k
+    return comps
+
+
+def aggregate(comps: dict[str, CompStats],
+              entry: str | None = None,
+              default_trip: int = 1) -> dict:
+    """Roll up stats from the entry computation, scaling by trip counts.
+
+    Unknown trip counts fall back to `default_trip` (caller passes the
+    layer-scan group count — the only unannotated loop in these models
+    whose body holds collectives).
+    """
+    if entry is None:
+        # entry computation = the one nobody calls
+        called = {c for st in comps.values() for c, *_ in st.calls}
+        entries = [n for n in comps if n not in called]
+        entry = max(entries, key=lambda n: len(comps[n].calls),
+                    default=next(iter(comps)))
+
+    totals = {"dot_flops": 0.0, "io_bytes": 0.0,
+              "coll_bytes": defaultdict(float)}
+    seen_stack = []
+
+    def trip_of(trip, cond):
+        if trip is not None:
+            return trip
+        # derive from the loop-condition computation: the bound is its
+        # (usually unique) integer constant
+        if cond in comps and comps[cond].int_constants:
+            return max(comps[cond].int_constants)
+        return default_trip
+
+    def visit(name: str, mult: float, in_fusion: bool = False):
+        if name not in comps or name in seen_stack:
+            return
+        seen_stack.append(name)
+        st = comps[name]
+        totals["dot_flops"] += st.dot_flops * mult
+        if not in_fusion:
+            totals["io_bytes"] += st.io_bytes * mult
+        for kind, b in st.coll_bytes.items():
+            totals["coll_bytes"][kind] += b * mult
+        for child, trip, cond in st.calls:
+            fus = in_fusion or cond == "__fusion__"
+            t = 1 if cond == "__fusion__" else trip_of(trip, cond)
+            visit(child, mult * t, fus)
+        seen_stack.pop()
+
+    visit(entry, 1.0)
+    totals["coll_bytes"] = dict(totals["coll_bytes"])
+    totals["coll_bytes_total"] = sum(
+        v for k, v in totals["coll_bytes"].items() if k != "widened_f32")
+    totals["coll_bytes_tpu"] = totals["coll_bytes_total"] - \
+        totals["coll_bytes"].get("widened_f32", 0.0) / 2.0
+    totals["entry"] = entry
+    return totals
+
+
+def analyze_hlo_text(text: str, default_trip: int = 1) -> dict:
+    return aggregate(parse_hlo(text), default_trip=default_trip)

@@ -1,0 +1,31 @@
+"""Production mesh construction (functions only — importing this module
+never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16,16) data x model single pod; (2,16,16) pod x data x model for
+    the 2-pod = 512-chip configuration. The pod axis composes with data
+    for batch sharding so the lowest-bandwidth (inter-pod DCI) axis only
+    carries gradient reduce-scatter traffic (DESIGN.md §4)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 4,
+                    *, multi_pod: bool = False):
+    """Small mesh for CI-scale sharding tests (needs
+    xla_force_host_platform_device_count >= n_data*n_model*(pods))."""
+    if multi_pod:
+        return jax.make_mesh((2, n_data, n_model),
+                             ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def rules_for_mesh(mesh, *, strategy: str = "megatron", **kw):
+    from repro.parallel.sharding import ShardingRules
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    return ShardingRules(mesh=mesh, dp_axes=dp, strategy=strategy, **kw)

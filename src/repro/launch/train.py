@@ -1,0 +1,87 @@
+"""Distributed training launcher.
+
+Composes mesh + sharding rules + sharded train state + the fault-
+tolerant loop. On this CPU container use --debug-mesh (8 fake devices via
+XLA_FLAGS); on a real cluster the same entry point runs per host under
+`jax.distributed.initialize` with the production mesh.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch tinyllama-1.1b --reduced --debug-mesh --steps 20
+
+Fault tolerance: checkpoint/restart + straggler watchdog + NaN rewind
+live in train/loop.py; elastic restarts (different mesh) reshard through
+checkpoint/checkpointer.py.
+"""
+import argparse
+import dataclasses
+import logging
+
+import jax
+
+from repro.configs import SHAPES, get_arch, reduced as reduce_cfg
+from repro.launch.mesh import (
+    make_debug_mesh, make_production_mesh, rules_for_mesh,
+)
+from repro.models.transformer import SketchSettings
+from repro.optim.adamw import AdamWConfig
+from repro.parallel.sharding import use_rules
+from repro.train.loop import LoopConfig, run_training_sharded
+from repro.train.state import RunConfig
+
+logging.basicConfig(level=logging.INFO,
+                    format="%(asctime)s %(name)s %(message)s")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--shape", default=None,
+                    help="assigned shape name (overrides seq/batch)")
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-runnable reduced config")
+    ap.add_argument("--debug-mesh", action="store_true",
+                    help="(2,4) data x model mesh (needs >=8 devices)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--strategy", default="megatron",
+                    choices=["megatron", "fsdp"])
+    ap.add_argument("--no-sketch", action="store_true")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="artifacts/ckpt_launch")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+    seq, batch = args.seq_len, args.batch
+    if args.shape:
+        sh = SHAPES[args.shape]
+        seq, batch = sh.seq_len, sh.global_batch
+
+    run = RunConfig(
+        seq_len=seq, global_batch=batch,
+        optimizer=AdamWConfig(lr=args.lr),
+        warmup_steps=min(20, args.steps // 5 + 1), total_steps=args.steps,
+        sketch=SketchSettings(enabled=not args.no_sketch, k_max=17),
+    )
+    loop = LoopConfig(num_steps=args.steps, ckpt_every=args.ckpt_every,
+                      ckpt_dir=args.ckpt_dir, log_every=10)
+
+    if args.debug_mesh or args.multi_pod or len(jax.devices()) > 1:
+        mesh = make_production_mesh(multi_pod=args.multi_pod) \
+            if not args.debug_mesh else make_debug_mesh(2, 4)
+        rules = rules_for_mesh(mesh, strategy=args.strategy)
+        state, hist = run_training_sharded(cfg, run, loop, mesh, rules)
+    else:
+        from repro.train.loop import run_training
+        state, hist = run_training(cfg, run, loop)
+    print(f"done: {len(hist)} steps, final loss "
+          f"{hist[-1]['loss']:.4f}, skipped {int(state.skipped)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Modality frontend STUBS (per the assignment: [audio]/[vlm] entries
+specify the transformer BACKBONE only; input_specs provides precomputed
+frame/patch embeddings).
+
+audio (musicgen): the EnCodec codec is out of scope — tokens ARE the
+    EnCodec codes (vocab 2048); the frontend is the identity on the token
+    stream.
+vision (internvl2): the InternViT tower is out of scope — input_specs
+    provides (B, num_frontend_tokens, d_model) patch embeddings which
+    `transformer.forward` splices over the first positions of the
+    embedded sequence.
+
+`fake_patch_embeds` generates deterministic stand-ins for smoke tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fake_patch_embeds(key, batch: int, num_tokens: int, d_model: int,
+                      dtype=jnp.bfloat16):
+    return jax.random.normal(key, (batch, num_tokens, d_model), dtype) * 0.02

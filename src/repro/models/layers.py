@@ -1,0 +1,124 @@
+"""Shared building blocks: norms, RoPE, inits, embedding, dense MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in or shape[0]
+    scale = (1.0 / fan_in) ** 0.5
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_apply(p, x, eps=1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * p["scale"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x (..., S, H, D) with positions (..., S) -> rotated x."""
+    d_half = x.shape[-1] // 2
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, d_half, dtype=jnp.float32) / d_half)
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, d/2)
+    cos = jnp.cos(ang)[..., None, :]                        # (..., S, 1, d/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :d_half], x[..., d_half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, vocab, d, dtype, tie: bool):
+    k1, k2 = jax.random.split(key)
+    p = {"embedding": dense_init(k1, (vocab, d), dtype, fan_in=d)}
+    if not tie:
+        p["head"] = dense_init(k2, (vocab, d), dtype, fan_in=d)
+    return p
+
+
+def embed_apply(p, tokens: Array, dtype) -> Array:
+    return p["embedding"].astype(dtype)[tokens]
+
+
+def unembed_apply(p, x: Array, dtype) -> Array:
+    from repro.parallel.sharding import current_rules
+    table = p.get("head", p["embedding"])
+    logits = jnp.einsum("bsd,vd->bsv", x, table.astype(dtype))
+    rules = current_rules()
+    axes = rules.logits_axes() if rules is not None \
+        else ("batch", "none", "vocab_act")
+    return constrain(logits, *axes)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP (swiglu / gelu)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d, d_ff, mlp_type, dtype):
+    ks = jax.random.split(key, 3)
+    if mlp_type == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], (d, d_ff), dtype),
+            "w_up": dense_init(ks[1], (d, d_ff), dtype),
+            "w_down": dense_init(ks[2], (d_ff, d), dtype),
+        }
+    if mlp_type == "gelu":
+        return {
+            "w_up": dense_init(ks[0], (d, d_ff), dtype),
+            "w_down": dense_init(ks[1], (d_ff, d), dtype),
+        }
+    raise ValueError(mlp_type)
+
+
+def mlp_apply(p, x: Array, mlp_type: str, sketch_ctx=None) -> Array:
+    """Dense FFN. When `sketch_ctx` is set, the matmuls run through the
+    paper's sketched-backprop custom_vjp (core/sketched_linear.py)."""
+    if sketch_ctx is not None:
+        return sketch_ctx.mlp(p, x, mlp_type)
+    if mlp_type == "swiglu":
+        g = x @ p["w_gate"].astype(x.dtype)
+        u = x @ p["w_up"].astype(x.dtype)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = jax.nn.gelu(
+            (x @ p["w_up"].astype(x.dtype)).astype(jnp.float32)
+        ).astype(x.dtype)
+    h = constrain(h, "batch", "seq_attn", "mlp_act")
+    return h @ p["w_down"].astype(x.dtype)

@@ -1,0 +1,127 @@
+"""The paper's experiment networks (§5): MLPs, conv-MLP hybrid, PINN.
+
+Forward variants:
+  mlp_forward           plain forward returning all activations A^[0..L]
+  sketched MLP training lives in train/paper_trainer.py — it wires these
+                        activations into core.sketch / sketched_matmul
+
+The conv stem for the CIFAR hybrid is a fixed small feature extractor
+(paper: sketching applies only to the dense tail). The PINN network feeds
+benchmarks/bench_pinn.py via examples/pinn_poisson.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper import MLPConfig
+
+Array = jax.Array
+
+
+def _act(name: str):
+    return {"tanh": jnp.tanh, "relu": jax.nn.relu}[name]
+
+
+def mlp_init(key, cfg: MLPConfig):
+    """Layers: d_in -> d_hidden (x num_hidden_layers) -> d_out."""
+    dims = [cfg.d_in] + [cfg.d_hidden] * cfg.num_hidden_layers + [cfg.d_out]
+    params = []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        k = jax.random.fold_in(key, i)
+        if cfg.init == "kaiming":
+            w = jax.random.normal(k, (a, b)) * (2.0 / a) ** 0.5
+            bias = jnp.zeros((b,))
+        elif cfg.init == "xavier_small":
+            w = jax.random.normal(k, (a, b)) * 0.5 * (2.0 / (a + b)) ** 0.5
+            bias = jnp.zeros((b,))
+        elif cfg.init == "kaiming_negbias":
+            # paper §5.3 "problematic": strong negative bias b = -3.0
+            w = jax.random.normal(k, (a, b)) * (2.0 / a) ** 0.5
+            bias = jnp.full((b,), -3.0)
+        else:
+            raise ValueError(cfg.init)
+        params.append({"w": w.astype(cfg.dtype),
+                       "bias": bias.astype(cfg.dtype)})
+    return params
+
+
+def mlp_forward(params, x: Array, cfg: MLPConfig):
+    """Returns (logits, acts) with acts = [A^0, ..., A^{L-1}] the INPUT to
+    each linear layer (A^0 = x; hidden activations post-nonlinearity)."""
+    act = _act(cfg.activation)
+    acts = [x]
+    h = x
+    n = len(params)
+    for i, p in enumerate(params):
+        z = h @ p["w"] + p["bias"]
+        if i < n - 1:
+            h = act(z)
+            acts.append(h)
+        else:
+            h = z
+    return h, acts
+
+
+# ---------------------------------------------------------------------------
+# CIFAR hybrid conv stem (fixed architecture; sketching targets the dense
+# tail only — paper §5.1.2 "selective deployment")
+# ---------------------------------------------------------------------------
+
+
+def conv_stem_init(key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "c1": jax.random.normal(k1, (3, 3, 3, 8)) * (2.0 / 27) ** 0.5,
+        "c2": jax.random.normal(k2, (3, 3, 8, 16)) * (2.0 / 72) ** 0.5,
+    }
+
+
+def conv_stem_apply(p, img: Array) -> Array:
+    """img (B, 32, 32, 3) -> (B, 1024) features (8x8x16)."""
+    y = jax.lax.conv_general_dilated(
+        img, p["c1"], (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    y = jax.nn.relu(y)
+    y = jax.lax.reduce_window(
+        y, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    y = jax.lax.conv_general_dilated(
+        y, p["c2"], (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    y = jax.nn.relu(y)
+    y = jax.lax.reduce_window(
+        y, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    return y.reshape(y.shape[0], -1)
+
+
+# ---------------------------------------------------------------------------
+# PINN: 2D Poisson  -Δu = 4π² sin(2πx) sin(2πy)  on [0,1]²  (paper §5.1.2)
+# ---------------------------------------------------------------------------
+
+
+def poisson_exact(xy: Array) -> Array:
+    return jnp.sin(2 * jnp.pi * xy[..., 0]) * jnp.sin(2 * jnp.pi * xy[..., 1])
+
+
+def poisson_rhs(xy: Array) -> Array:
+    return 8 * jnp.pi ** 2 * poisson_exact(xy)
+
+
+def pinn_scalar(params, cfg: MLPConfig, xy: Array) -> Array:
+    """u(x, y) for a single point (2,)."""
+    out, _ = mlp_forward(params, xy[None], cfg)
+    return out[0, 0]
+
+
+def pinn_residual(params, cfg: MLPConfig, xy: Array) -> Array:
+    """PDE residual -Δu - f at one interior point (needs exact grads —
+    the paper's argument for monitoring-only deployment)."""
+    hess = jax.hessian(lambda p_: pinn_scalar(params, cfg, p_))(xy)
+    lap = hess[0, 0] + hess[1, 1]
+    return -lap - poisson_rhs(xy)
+
+
+def pinn_loss(params, cfg: MLPConfig, interior: Array, boundary: Array):
+    res = jax.vmap(lambda p_: pinn_residual(params, cfg, p_))(interior)
+    u_b = jax.vmap(lambda p_: pinn_scalar(params, cfg, p_))(boundary)
+    return jnp.mean(res ** 2) + 10.0 * jnp.mean(u_b ** 2)

@@ -1,0 +1,102 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Diagonal gated linear recurrence
+    a_t = exp(-c * softplus(Lambda) * sigmoid(W_r xi_t))
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (sigmoid(W_i xi_t) * xi_t)
+computed with `lax.associative_scan` over the sequence (log-depth on TPU;
+the recurrence is linear-diagonal in h so the scan is exact). Decode is
+the one-step form with constant (B, lru) state -> long_500k runs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.models.ssm import causal_conv, causal_conv_step
+from repro.parallel.sharding import constrain
+
+Array = jax.Array
+_C = 8.0   # Griffin's fixed decay sharpness
+
+
+def rglru_init(key, cfg, dtype):
+    d = cfg.d_model
+    lru = cfg.lru_width or d
+    ks = jax.random.split(key, 7)
+    # Lambda init so that a ~ U[0.9, 0.999]^(1/c) at r=0.5 (Griffin App. A)
+    u = jax.random.uniform(ks[0], (lru,), minval=0.9, maxval=0.999)
+    a_param = jnp.log(jnp.expm1(-jnp.log(u) * 2.0 / _C))  # inv-softplus
+    return {
+        "w_x": dense_init(ks[1], (d, lru), dtype),
+        "w_gate_branch": dense_init(ks[2], (d, lru), dtype),
+        "conv_w": dense_init(ks[3], (cfg.conv_width, lru), dtype,
+                             fan_in=cfg.conv_width),
+        "conv_b": jnp.zeros((lru,), dtype),
+        "w_input_gate": dense_init(ks[4], (lru, lru), dtype),
+        "w_rec_gate": dense_init(ks[5], (lru, lru), dtype),
+        "a_param": a_param.astype(jnp.float32),
+        "w_out": dense_init(ks[6], (lru, d), dtype),
+    }
+
+
+def _gates(p, xi: Array):
+    """log a_t (f32) and gated input, from conv output xi (..., lru)."""
+    xf = xi.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_rec_gate"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ p["w_input_gate"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["a_param"]) * r
+    a2 = jnp.exp(2.0 * log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * (i * xf)
+    return log_a, gated
+
+
+def rglru_scan(log_a: Array, b: Array) -> Array:
+    """h_t = exp(log_a_t) h_{t-1} + b_t  along axis 1 (associative)."""
+    def combine(x, y):
+        la1, b1 = x
+        la2, b2 = y
+        return la1 + la2, jnp.exp(la2) * b1 + b2
+    _, h = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    return h
+
+
+def rglru_apply(p, x, *, cfg, mode, cache=None):
+    """x (B,S,d) -> (y, new_cache)."""
+    B, S, d = x.shape
+    dt = x.dtype
+    lru = cfg.lru_width or d
+    gate = x @ p["w_gate_branch"].astype(dt)
+    xr = x @ p["w_x"].astype(dt)
+    gate = constrain(gate, "batch", "none", "rnn_feat")
+    xr = constrain(xr, "batch", "none", "rnn_feat")
+
+    if mode == "decode":
+        xi_t, conv_state = causal_conv_step(
+            xr[:, 0], cache["conv"], p["conv_w"].astype(dt),
+            p["conv_b"].astype(dt))
+        log_a, gated = _gates(p, xi_t)
+        h = jnp.exp(log_a) * cache["r_h"] + gated       # (B, lru) f32
+        hs = h[:, None]
+        new_cache = {"r_h": h, "conv": conv_state}
+    else:
+        xi = causal_conv(xr, p["conv_w"].astype(dt), p["conv_b"].astype(dt))
+        log_a, gated = _gates(p, xi)
+        hs = rglru_scan(log_a, gated)                 # (B,S,lru) f32
+        conv_state = xr[:, -(cfg.conv_width - 1):] if S >= cfg.conv_width \
+            else jnp.pad(xr, ((0, 0), (cfg.conv_width - 1 - S, 0), (0, 0)))
+        new_cache = {"r_h": hs[:, -1], "conv": conv_state} \
+            if mode == "prefill" else None
+
+    out = hs.astype(dt) * jax.nn.gelu(
+        gate.astype(jnp.float32)).astype(dt)
+    y = out @ p["w_out"].astype(dt)
+    return y, new_cache
+
+
+def init_rglru_cache(cfg, batch, dtype):
+    lru = cfg.lru_width or cfg.d_model
+    return {
+        "r_h": jnp.zeros((batch, lru), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, lru), dtype),
+    }

@@ -1,0 +1,337 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM and sequential sLSTM.
+
+mLSTM is a gated linear-attention recurrence with matrix memory
+    C_t = f_t C_{t-1} + i_t k_t v_t^T,  n_t = f_t n_{t-1} + i_t k_t,
+    h_t = (q_t^T C_t) / max(|q_t^T n_t|, exp(-m_t))
+with exponential gating stabilized by the running max m_t. Training uses
+the standard stabilized CHUNKWISE form (intra-chunk masked decay attention
++ inter-chunk state carry) — the TPU-friendly formulation the Pallas
+kernel kernels/mlstm_chunk.py tiles; this module is the XLA/jnp
+implementation and the oracle for that kernel. Decode is the one-step
+recurrence (constant state -> long_500k runs).
+
+sLSTM has scalar memory with block-diagonal (per-head) recurrent memory
+mixing — an inherently sequential scan over time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.parallel.sharding import constrain
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv (shift-and-sum form; decode keeps a width-1 tail)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv(x: Array, w: Array, b: Array | None = None) -> Array:
+    """x (B, S, F), w (W, F) depthwise causal conv."""
+    W = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        xi = x if i == 0 else jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + xi * w[W - 1 - i][None, None, :]
+    if b is not None:
+        out = out + b[None, None, :]
+    return out
+
+
+def causal_conv_step(x_t: Array, conv_state: Array, w: Array,
+                     b: Array | None = None):
+    """x_t (B, F), conv_state (B, W-1, F) holding previous inputs.
+    Returns (y_t (B, F), new_conv_state)."""
+    W = w.shape[0]
+    full = jnp.concatenate([conv_state, x_t[:, None]], axis=1)  # (B, W, F)
+    y = jnp.einsum("bwf,wf->bf", full, w)
+    if b is not None:
+        y = y + b[None, :]
+    return y, full[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_dims(cfg):
+    inner = 2 * cfg.d_model
+    H = cfg.num_heads
+    dv = inner // H
+    dk = max(dv // 2, 4)
+    return inner, H, dk, dv
+
+
+def mlstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    inner, H, dk, dv = mlstm_dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_m_up": dense_init(ks[0], (d, inner), dtype),
+        "w_m_z": dense_init(ks[1], (d, inner), dtype),
+        "w_m_q": dense_init(ks[2], (inner, H, dk), dtype, fan_in=inner),
+        "w_m_k": dense_init(ks[3], (inner, H, dk), dtype, fan_in=inner),
+        "w_m_gates": dense_init(ks[4], (inner, 2 * H), dtype, fan_in=inner),
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((cfg.num_heads,)),
+             jnp.linspace(3.0, 6.0, cfg.num_heads)]).astype(dtype),
+        "conv_w": dense_init(ks[5], (cfg.conv_width, inner), dtype,
+                             fan_in=cfg.conv_width),
+        "w_m_down": dense_init(ks[5], (inner, d), dtype, fan_in=inner),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, li, lf, C0, n0, m0, chunk: int):
+    """Stabilized chunkwise mLSTM.
+
+    q,k (B,H,S,Dk); v (B,H,S,Dv); li,lf (B,H,S) log gates.
+    State: C (B,H,Dk,Dv) stabilized, n (B,H,Dk), m (B,H).
+    Returns h (B,H,S,Dv), (C,n,m).
+    """
+    B, H, S, Dk = q.shape
+    Dv = v.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    qc = q.reshape(B, H, nc, chunk, Dk)
+    kc = k.reshape(B, H, nc, chunk, Dk)
+    vc = v.reshape(B, H, nc, chunk, Dv)
+    lic = li.reshape(B, H, nc, chunk)
+    lfc = lf.reshape(B, H, nc, chunk)
+
+    t = jnp.arange(chunk)
+    tri = t[:, None] >= t[None, :]          # j >= t  (causal within chunk)
+
+    def body(carry, xs):
+        C, n, m = carry                     # stabilized state
+        qj, kj, vj, lij, lfj = xs           # (B,H,W,·)
+        F = jnp.cumsum(lfj, axis=-1)        # inclusive decay sums
+        Ftot = F[..., -1:]
+        # intra log weights  w[j,t] = F_j - F_t + li_t   (t <= j)
+        wlog = F[..., :, None] - F[..., None, :] + lij[..., None, :]
+        wlog = jnp.where(tri, wlog, -jnp.inf)
+        b_inter = F + m[..., None]          # (B,H,W)
+        m_intra = wlog.max(axis=-1)
+        mj = jnp.maximum(m_intra, b_inter)
+        D = jnp.exp(wlog - mj[..., None])
+        inter = jnp.exp(b_inter - mj)
+        scale = Dk ** -0.5
+        s = jnp.einsum("bhjd,bhtd->bhjt", qj * scale, kj) * D
+        num = jnp.einsum("bhjt,bhtv->bhjv", s, vj) + \
+            inter[..., None] * jnp.einsum("bhjd,bhdv->bhjv", qj * scale, C)
+        den = s.sum(axis=-1) + \
+            inter * jnp.einsum("bhjd,bhd->bhj", qj * scale, n)
+        hj = num / jnp.maximum(jnp.abs(den), jnp.exp(-mj))[..., None]
+        # carry update
+        m_kv = (Ftot - F + lij).max(axis=-1)            # (B,H)
+        m_new = jnp.maximum(Ftot[..., 0] + m, m_kv)
+        wkv = jnp.exp(Ftot - F + lij - m_new[..., None])  # (B,H,W)
+        C_new = jnp.exp(Ftot[..., 0] + m - m_new)[..., None, None] * C + \
+            jnp.einsum("bht,bhtd,bhtv->bhdv", wkv, kj, vj)
+        n_new = jnp.exp(Ftot[..., 0] + m - m_new)[..., None] * n + \
+            jnp.einsum("bht,bhtd->bhd", wkv, kj)
+        return (C_new, n_new, m_new), hj
+
+    xs = (
+        qc.transpose(2, 0, 1, 3, 4), kc.transpose(2, 0, 1, 3, 4),
+        vc.transpose(2, 0, 1, 3, 4), lic.transpose(2, 0, 1, 3),
+        lfc.transpose(2, 0, 1, 3),
+    )
+    (C, n, m), hs = jax.lax.scan(body, (C0, n0, m0), xs)
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, Dv)
+    return h, (C, n, m)
+
+
+def mlstm_step(q, k, v, li, lf, C, n, m):
+    """One decode step. q,k (B,H,Dk); v (B,H,Dv); li,lf (B,H)."""
+    Dk = q.shape[-1]
+    m_new = jnp.maximum(lf + m, li)
+    fs = jnp.exp(lf + m - m_new)
+    is_ = jnp.exp(li - m_new)
+    C_new = fs[..., None, None] * C + is_[..., None, None] * \
+        jnp.einsum("bhd,bhv->bhdv", k, v)
+    n_new = fs[..., None] * n + is_[..., None] * k
+    qn = q * Dk ** -0.5
+    num = jnp.einsum("bhd,bhdv->bhv", qn, C_new)
+    den = jnp.einsum("bhd,bhd->bh", qn, n_new)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return h, (C_new, n_new, m_new)
+
+
+def mlstm_sequential_ref(q, k, v, li, lf, C0, n0, m0):
+    """Step-by-step oracle for the chunked form (tests only)."""
+    def body(carry, xs):
+        h, carry2 = mlstm_step(*xs, *carry)
+        return carry2, h
+    xs = tuple(a.transpose(2, 0, 1, 3) for a in (q, k, v))
+    gs = tuple(a.transpose(2, 0, 1) for a in (li, lf))
+    (C, n, m), hs = jax.lax.scan(body, (C0, n0, m0), xs + gs)
+    return hs.transpose(1, 2, 0, 3), (C, n, m)
+
+
+def mlstm_apply(p, x, *, cfg, mode, cache=None, chunk=256):
+    """Full mLSTM block. x (B,S,d) -> (y, new_cache)."""
+    B, S, d = x.shape
+    inner, H, dk, dv = mlstm_dims(cfg)
+    dt = x.dtype
+    up = x @ p["w_m_up"].astype(dt)               # (B,S,inner)
+    z = x @ p["w_m_z"].astype(dt)
+    up = constrain(up, "batch", "none", "rnn_feat")
+    z = constrain(z, "batch", "none", "rnn_feat")
+
+    if mode == "decode":
+        xc_t, conv_state = causal_conv_step(
+            up[:, 0], cache["conv"], p["conv_w"].astype(dt))
+        xc = jax.nn.silu(xc_t.astype(jnp.float32)).astype(dt)[:, None]
+    else:
+        xc = causal_conv(up, p["conv_w"].astype(dt))
+        xc = jax.nn.silu(xc.astype(jnp.float32)).astype(dt)
+        conv_state = up[:, -(cfg.conv_width - 1):] if S >= cfg.conv_width \
+            else jnp.pad(up, ((0, 0), (cfg.conv_width - 1 - S, 0), (0, 0)))
+
+    q = jnp.einsum("bsi,ihd->bhsd", xc, p["w_m_q"].astype(dt))
+    k = jnp.einsum("bsi,ihd->bhsd", xc, p["w_m_k"].astype(dt))
+    v = up.reshape(B, S, H, dv).transpose(0, 2, 1, 3)
+    v = constrain(v, "batch", "none", "none", "rnn_feat")
+    gates = (xc @ p["w_m_gates"].astype(dt)).astype(jnp.float32) + \
+        p["b_gates"].astype(jnp.float32)
+    li = gates[..., :H].transpose(0, 2, 1)        # (B,H,S) log input gate
+    lf = jax.nn.log_sigmoid(gates[..., H:]).transpose(0, 2, 1)
+
+    if mode == "decode":
+        C0, n0, m0 = cache["C"], cache["m_n"], cache["m_m"]
+        h, (C, n, m) = mlstm_step(
+            q[:, :, 0].astype(jnp.float32), k[:, :, 0].astype(jnp.float32),
+            v[:, :, 0].astype(jnp.float32), li[:, :, 0], lf[:, :, 0],
+            C0, n0, m0)
+        h = h[:, :, None]
+    else:
+        C0 = jnp.zeros((B, H, dk, dv), jnp.float32)
+        n0 = jnp.zeros((B, H, dk), jnp.float32)
+        m0 = jnp.zeros((B, H), jnp.float32)
+        h, (C, n, m) = _mlstm_chunk_scan(
+            q.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), li, lf, C0, n0, m0, chunk)
+
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, inner).astype(dt)
+    out = h * jax.nn.silu(z.astype(jnp.float32)).astype(dt)
+    y = out @ p["w_m_down"].astype(dt)
+    new_cache = {"C": C, "m_n": n, "m_m": m, "conv": conv_state} \
+        if mode in ("decode", "prefill") else None
+    return y, new_cache
+
+
+def init_mlstm_cache(cfg, batch, dtype):
+    inner, H, dk, dv = mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, H, dk, dv), jnp.float32),
+        "m_n": jnp.zeros((batch, H, dk), jnp.float32),
+        "m_m": jnp.zeros((batch, H), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, inner), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    ks = jax.random.split(key, 3)
+    return {
+        "w_s_in": dense_init(ks[0], (d, 4 * d), dtype),
+        "r_s": dense_init(ks[1], (4, H, dh, dh), dtype, fan_in=dh) * 0.1,
+        "b_s": jnp.concatenate(
+            [jnp.zeros((2 * d,)), jnp.linspace(3.0, 6.0, d),
+             jnp.zeros((d,))]).astype(dtype),
+        "w_s_out": dense_init(ks[2], (d, d), dtype),
+    }
+
+
+def slstm_cell(zx, ix, fx, ox, state, r_s, H):
+    """One sLSTM step. gate inputs (B, d) f32; state (c,n,m,h) (B, d)."""
+    c, n, m, h = state
+    B, d = zx.shape
+    dh = d // H
+    hh = h.reshape(B, H, dh)
+    rec = jnp.einsum("bhd,ghde->gbhe", hh, r_s.astype(h.dtype))
+    rec = rec.reshape(4, B, d)
+    z = jnp.tanh(zx + rec[0])
+    li = ix + rec[1]
+    lf = jax.nn.log_sigmoid(fx + rec[2])
+    o = jax.nn.sigmoid(ox + rec[3])
+    m_new = jnp.maximum(lf + m, li)
+    i_ = jnp.exp(li - m_new)
+    f_ = jnp.exp(lf + m - m_new)
+    c_new = f_ * c + i_ * z
+    n_new = f_ * n + i_
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, m_new, h_new)
+
+
+def slstm_apply(p, x, *, cfg, mode, cache=None):
+    """Sequential sLSTM block. x (B,S,d) -> (y, new_cache)."""
+    B, S, d = x.shape
+    H = cfg.num_heads
+    dt = x.dtype
+    gates = (x @ p["w_s_in"].astype(dt)).astype(jnp.float32) + \
+        p["b_s"].astype(jnp.float32)
+    zx, ix, fx, ox = jnp.split(gates, 4, axis=-1)
+
+    if mode == "decode":
+        state = (cache["s_c"], cache["s_n"], cache["s_m"], cache["s_h"])
+        state = slstm_cell(zx[:, 0], ix[:, 0], fx[:, 0], ox[:, 0],
+                           state, p["r_s"], H)
+        hs = state[3][:, None]
+    else:
+        zero = jnp.zeros((B, d), jnp.float32)
+        init = (zero, zero, zero, zero)
+        W = cfg.slstm_chunk
+        if W and S % W == 0 and S > W:
+            # chunked scan (§Perf it4): the recurrent weights R stream
+            # from HBM once per CHUNK body instead of once per timestep —
+            # the per-step scan re-reads R (4*H*dh^2 f32) every step,
+            # which dominates the xlstm memory roofline term.
+            def chunk_body(carry, xs):
+                zc, ic, fc, oc = xs            # (W, B, d)
+                st = carry
+                outs = []
+                for t in range(W):
+                    st = slstm_cell(zc[t], ic[t], fc[t], oc[t], st,
+                                    p["r_s"], H)
+                    outs.append(st[3])
+                return st, jnp.stack(outs)
+
+            resh = lambda a: a.swapaxes(0, 1).reshape(S // W, W, B, d)
+            state, hs = jax.lax.scan(
+                chunk_body, init, (resh(zx), resh(ix), resh(fx),
+                                   resh(ox)))
+            hs = hs.reshape(S, B, d).swapaxes(0, 1)
+        else:
+            def body(carry, xs):
+                st = slstm_cell(*xs, carry, p["r_s"], H)
+                return st, st[3]
+
+            state, hs = jax.lax.scan(
+                body, init,
+                (zx.swapaxes(0, 1), ix.swapaxes(0, 1),
+                 fx.swapaxes(0, 1), ox.swapaxes(0, 1)))
+            hs = hs.swapaxes(0, 1)                 # (B,S,d)
+
+    y = hs.astype(dt) @ p["w_s_out"].astype(dt)
+    new_cache = {"s_c": state[0], "s_n": state[1],
+                 "s_m": state[2], "s_h": state[3]} \
+        if mode in ("decode", "prefill") else None
+    return y, new_cache
+
+
+def init_slstm_cache(cfg, batch, dtype):
+    z = jnp.zeros((batch, cfg.d_model), jnp.float32)
+    return {"s_c": z, "s_n": z, "s_m": z, "s_h": z}

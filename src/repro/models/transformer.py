@@ -1,0 +1,518 @@
+"""Decoder-stack assembly for all assigned architectures.
+
+Layers are grouped by the arch's repeating block `pattern`; full pattern
+periods are jax.lax.scan-ned (keeps HLO tiny so 88-layer models lower in
+seconds) with the remainder unrolled as a tail. Every block type (full /
+swa / local / global attention, mlstm, slstm, rglru) plus dense-MLP / MoE
+FFNs composes here.
+
+Paper integration (first-class feature):
+  * sketch_mode == "backprop": dense-FFN matmuls (or the attention
+    out-projection for MoE archs, whose expert sub-batches break the fixed
+    batch-projection premise — DESIGN.md §3) run through
+    core.sketched_linear.sketched_matmul with per-layer EMA triples.
+  * sketch_mode == "monitor": the residual stream after every block feeds
+    monitoring-only EMA triples (stop-gradient), mirroring the paper's
+    PINN deployment.
+Sketch state is threaded through the layer scan as xs/ys so updates happen
+where activations are live — no activation is ever stored for sketching.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.sketched_linear import ema_node_update, sketched_matmul
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    dense_init, embed_apply, embed_init, mlp_apply, mlp_init, rmsnorm_apply,
+    rmsnorm_init, unembed_apply,
+)
+from repro.parallel.sharding import constrain
+
+Array = jax.Array
+ATTN_KINDS = ("full", "swa", "local", "global")
+
+
+# ---------------------------------------------------------------------------
+# Sketch plan: which node group(s) an arch sketches, and their widths
+# ---------------------------------------------------------------------------
+
+
+def sketch_groups(cfg: ArchConfig) -> dict[str, int]:
+    """{group_name: width} of sketched activation nodes per layer."""
+    if cfg.sketch_mode == "none":
+        return {}
+    if cfg.sketch_mode == "monitor":
+        return {"res": cfg.d_model}
+    if cfg.is_moe:
+        return {"attn_o": cfg.num_heads * cfg.resolved_head_dim}
+    groups = {"ffn_in": cfg.d_model}
+    if cfg.mlp_type in ("swiglu", "gelu"):
+        groups["ffn_h"] = cfg.d_ff
+    return groups
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchSettings:
+    """Static sketching hyper-params threaded into the forward."""
+    enabled: bool = False
+    beta: float = 0.95
+    k_max: int = 33                 # 2*r_max+1
+    recon_mode: str = "fast"        # faithful | fast
+    ridge: float = 1e-4             # relative ridge (see reconstruct.py)
+    factored: bool = True           # beyond-paper low-rank grad matmuls
+    sketch_dtype: Any = jnp.float32
+
+
+def init_lm_sketch_state(key, cfg: ArchConfig, st: SketchSettings,
+                         num_tokens: int):
+    """Sketch pytree: per-group (L, w, k_max) triples + shared projections
+    (num_tokens, k_max) + per-layer psi + active rank scalar."""
+    if not st.enabled:
+        return None
+    groups = sketch_groups(cfg)
+    ks = jax.random.split(key, 4 + len(groups))
+    L = cfg.num_layers
+    state: dict[str, Any] = {
+        "proj": {
+            "upsilon": jax.random.normal(
+                ks[0], (num_tokens, st.k_max), st.sketch_dtype),
+            "omega": jax.random.normal(
+                ks[1], (num_tokens, st.k_max), st.sketch_dtype),
+            "phi": jax.random.normal(
+                ks[2], (num_tokens, st.k_max), st.sketch_dtype),
+        },
+        "rank": jnp.asarray((st.k_max - 1) // 2, jnp.int32),
+        "step": jnp.asarray(0, jnp.int32),
+    }
+    for i, (g, w) in enumerate(groups.items()):
+        state[g] = {
+            "sk_x": jnp.zeros((L, w, st.k_max), st.sketch_dtype),
+            "sk_y": jnp.zeros((L, w, st.k_max), st.sketch_dtype),
+            "sk_z": jnp.zeros((L, w, st.k_max), st.sketch_dtype),
+            "psi": jax.random.normal(ks[4 + i], (L, st.k_max),
+                                     st.sketch_dtype),
+        }
+    return state
+
+
+def _slice_sketch(state, lo: int, hi: int, reshape_groups: int | None):
+    """Per-layer slices [lo:hi) of every group triple (optionally reshaped
+    to (G, P, ...) for the scan)."""
+    if state is None:
+        return None
+    out = {}
+    for g, v in state.items():
+        if g in ("proj", "rank", "step"):
+            continue
+        sl = {k: a[lo:hi] for k, a in v.items()}
+        if reshape_groups is not None:
+            sl = {k: a.reshape((reshape_groups, -1) + a.shape[1:])
+                  for k, a in sl.items()}
+        out[g] = sl
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def _block_init(key, cfg: ArchConfig, kind: str, dtype):
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"norm1": rmsnorm_init(cfg.d_model, dtype)}
+    if kind in ATTN_KINDS:
+        p["attn"] = attn.attn_init(ks[0], cfg, dtype)
+    elif kind == "mlstm":
+        p["mix"] = ssm_mod.mlstm_init(ks[0], cfg, dtype)
+    elif kind == "slstm":
+        p["mix"] = ssm_mod.slstm_init(ks[0], cfg, dtype)
+    elif kind == "rglru":
+        p["mix"] = rglru_mod.rglru_init(ks[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if cfg.is_moe:
+        p["norm2"] = rmsnorm_init(cfg.d_model, dtype)
+        p["moe"] = moe_mod.moe_init(ks[1], cfg, dtype)
+    elif cfg.mlp_type != "none":
+        p["norm2"] = rmsnorm_init(cfg.d_model, dtype)
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_type, dtype)
+    return p
+
+
+def init_params(key, cfg: ArchConfig):
+    dtype = cfg.param_dtype
+    kE, kB, kT = jax.random.split(key, 3)
+    params: dict[str, Any] = {
+        "embed": embed_init(kE, cfg.vocab_size, cfg.d_model, dtype,
+                            cfg.tie_embeddings),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+    P = len(cfg.pattern)
+    G = cfg.num_groups
+
+    def layer_params(layer_idx):
+        kind = cfg.pattern[layer_idx % P]
+        return _block_init(jax.random.fold_in(kB, layer_idx), cfg, kind,
+                           dtype)
+
+    # stacked group params: for each pattern position, stack over groups
+    groups = []
+    for i in range(P):
+        per_group = [layer_params(g * P + i) for g in range(G)]
+        groups.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_group)
+                      if G > 1 else jax.tree.map(lambda x: x[None],
+                                                 per_group[0]))
+    params["groups"] = groups
+    params["tail"] = [
+        _block_init(jax.random.fold_in(kT, i), cfg, kind, dtype)
+        for i, kind in enumerate(cfg.tail_types)
+    ]
+    return params
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(lambda k: init_params(k, cfg),
+                          jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# KV / recurrent cache init
+# ---------------------------------------------------------------------------
+
+
+def _block_cache(cfg: ArchConfig, kind: str, batch: int, seq_len_ctx: int):
+    if kind in ATTN_KINDS:
+        return attn.init_attn_cache(cfg, kind, batch, seq_len_ctx, cfg.dtype)
+    if kind == "mlstm":
+        return ssm_mod.init_mlstm_cache(cfg, batch, cfg.dtype)
+    if kind == "slstm":
+        return ssm_mod.init_slstm_cache(cfg, batch, cfg.dtype)
+    if kind == "rglru":
+        return rglru_mod.init_rglru_cache(cfg, batch, cfg.dtype)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len_ctx: int):
+    P = len(cfg.pattern)
+    G = cfg.num_groups
+    groups = []
+    for i in range(P):
+        one = _block_cache(cfg, cfg.pattern[i], batch, seq_len_ctx)
+        groups.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (G,) + x.shape), one))
+    tail = [_block_cache(cfg, kind, batch, seq_len_ctx)
+            for kind in cfg.tail_types]
+    return {"groups": groups, "tail": tail}
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, seq_len_ctx: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, seq_len_ctx))
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _apply_sketched_mlp(p, x, cfg, sk, proj, k_active, st: SketchSettings):
+    """Dense FFN with paper sketched backprop on both matmuls."""
+    B, S, d = x.shape
+    xf = x.reshape(B * S, d)
+    tri_in = sk["ffn_in"]
+    xs, ys, zs = ema_node_update(
+        tri_in["sk_x"], tri_in["sk_y"], tri_in["sk_z"], xf,
+        proj["upsilon"], proj["omega"], proj["phi"], tri_in["psi"],
+        st.beta, k_active)
+    mm = lambda a, w, t: sketched_matmul(
+        a, w.astype(a.dtype), t[0], t[1], t[2], proj["omega"], k_active,
+        st.recon_mode, st.ridge, st.factored)
+    if cfg.mlp_type == "swiglu":
+        g = mm(xf, p["w_gate"], (xs, ys, zs))
+        u = mm(xf, p["w_up"], (xs, ys, zs))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = jax.nn.gelu(
+            mm(xf, p["w_up"], (xs, ys, zs)).astype(jnp.float32)
+        ).astype(x.dtype)
+    h = constrain(h, "tokens", "mlp_act")
+    tri_h = sk["ffn_h"]
+    hxs, hys, hzs = ema_node_update(
+        tri_h["sk_x"], tri_h["sk_y"], tri_h["sk_z"], h,
+        proj["upsilon"], proj["omega"], proj["phi"], tri_h["psi"],
+        st.beta, k_active)
+    y = mm(h, p["w_down"], (hxs, hys, hzs))
+    new_sk = {
+        "ffn_in": {"sk_x": xs, "sk_y": ys, "sk_z": zs,
+                   "psi": tri_in["psi"]},
+        "ffn_h": {"sk_x": hxs, "sk_y": hys, "sk_z": hzs,
+                  "psi": tri_h["psi"]},
+    }
+    return y.reshape(B, S, d), new_sk
+
+
+def _apply_block(
+    kind: str,
+    p: dict,
+    x: Array,
+    *,
+    cfg: ArchConfig,
+    positions: Array,
+    mode: str,
+    cache: dict | None,
+    seq_len_ctx: int,
+    sk: dict | None,          # this layer's sketch triples (by group)
+    proj: dict | None,
+    k_active,
+    st: SketchSettings,
+):
+    """One decoder block. Returns (x, new_cache, aux_loss, new_sk)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_sk = sk
+    B, S, d = x.shape
+    h = rmsnorm_apply(p["norm1"], x, cfg.norm_eps)
+
+    if kind in ATTN_KINDS:
+        if sk is not None and "attn_o" in sk and mode == "train":
+            # MoE archs: sketched backprop on the attention out-projection
+            mix, new_cache, new_attn_sk = _attn_with_sketch(
+                p["attn"], h, cfg=cfg, layer_type=kind, positions=positions,
+                mode=mode, cache=cache, seq_len_ctx=seq_len_ctx,
+                sk=sk["attn_o"], proj=proj, k_active=k_active, st=st)
+            new_sk = dict(sk, attn_o=new_attn_sk)
+        else:
+            mix, new_cache = attn.attn_apply(
+                p["attn"], h, cfg=cfg, layer_type=kind, positions=positions,
+                mode=mode, cache=cache, seq_len_ctx=seq_len_ctx)
+    elif kind == "mlstm":
+        mix, new_cache = ssm_mod.mlstm_apply(
+            p["mix"], h, cfg=cfg, mode=mode, cache=cache)
+    elif kind == "slstm":
+        mix, new_cache = ssm_mod.slstm_apply(
+            p["mix"], h, cfg=cfg, mode=mode, cache=cache)
+    elif kind == "rglru":
+        mix, new_cache = rglru_mod.rglru_apply(
+            p["mix"], h, cfg=cfg, mode=mode, cache=cache)
+    else:
+        raise ValueError(kind)
+
+    x = x + mix
+    x = constrain(x, "batch", "seq_sp", "none")
+
+    if cfg.is_moe:
+        h2 = rmsnorm_apply(p["norm2"], x, cfg.norm_eps)
+        y, aux = moe_mod.moe_apply(p["moe"], h2, cfg)
+        x = x + y
+    elif cfg.mlp_type != "none":
+        h2 = rmsnorm_apply(p["norm2"], x, cfg.norm_eps)
+        if sk is not None and "ffn_in" in sk and mode == "train":
+            y, new_sk = _apply_sketched_mlp(
+                p["mlp"], h2, cfg, sk, proj, k_active, st)
+        else:
+            y = mlp_apply(p["mlp"], h2, cfg.mlp_type)
+        x = x + y
+    x = constrain(x, "batch", "seq_sp", "none")
+
+    if sk is not None and "res" in sk and mode == "train":
+        # monitoring-only residual-stream sketches (stop-grad inside)
+        tri = sk["res"]
+        rx, ry, rz = ema_node_update(
+            tri["sk_x"], tri["sk_y"], tri["sk_z"], x.reshape(B * S, d),
+            proj["upsilon"], proj["omega"], proj["phi"], tri["psi"],
+            st.beta, k_active)
+        new_sk = dict(sk, res={"sk_x": rx, "sk_y": ry, "sk_z": rz,
+                               "psi": tri["psi"]})
+    return x, new_cache, aux, new_sk
+
+
+def _attn_with_sketch(p, h, *, cfg, layer_type, positions, mode, cache,
+                      seq_len_ctx, sk, proj, k_active, st):
+    """Attention whose out-projection runs sketched backprop (MoE archs)."""
+    B, S, d = h.shape
+    KV, Hq, D = cfg.num_kv_heads, cfg.num_heads, cfg.resolved_head_dim
+    dt = h.dtype
+    # inline qkv/rope/attention from attn_apply, but split the out-proj
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"].astype(dt))
+    q = constrain(q, "batch", "seq_attn", "heads_act", "none")
+    from repro.models.layers import rope
+    pos2d = positions if positions.ndim == 2 else positions[:, None]
+    q = rope(q, pos2d, cfg.rope_theta)
+    k = rope(k, pos2d, cfg.rope_theta)
+    window = attn.resolve_window(cfg, layer_type, seq_len_ctx)
+    out = attn.chunked_causal_attention(
+        q.reshape(B, S, KV, Hq // KV, D), k, v, window=window)
+    out = out.reshape(B, S, Hq, D)
+    out = constrain(out, "batch", "seq_attn", "heads_act", "none")
+    flat = out.reshape(B * S, Hq * D)
+    xs, ys, zs = ema_node_update(
+        sk["sk_x"], sk["sk_y"], sk["sk_z"], flat,
+        proj["upsilon"], proj["omega"], proj["phi"], sk["psi"],
+        st.beta, k_active)
+    wo = p["wo"].astype(dt).reshape(Hq * D, d)
+    y = sketched_matmul(flat, wo, xs, ys, zs, proj["omega"], k_active,
+                        st.recon_mode, st.ridge, st.factored)
+    new_sk = {"sk_x": xs, "sk_y": ys, "sk_z": zs, "psi": sk["psi"]}
+    return y.reshape(B, S, d), None, new_sk
+
+
+def forward(
+    params: dict,
+    tokens: Array,                 # (B, S) int32
+    *,
+    cfg: ArchConfig,
+    mode: str = "train",           # train | prefill | decode
+    positions: Array | None = None,
+    cache: dict | None = None,
+    patch_embeds: Array | None = None,
+    sketch_state: dict | None = None,
+    settings: SketchSettings = SketchSettings(),
+    logits_only_last: bool = False,
+    seq_len_ctx: int | None = None,
+):
+    """Full decoder forward.
+
+    Returns dict(logits, cache, aux, sketch_state). `seq_len_ctx` is the
+    context length caches are sized for (decode must pass it; train and
+    prefill default to S).
+    """
+    B, S = tokens.shape
+    dt = cfg.dtype
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = embed_apply(params["embed"], tokens, dt)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+    if patch_embeds is not None and cfg.frontend == "vision":
+        f = patch_embeds.shape[1]
+        x = jax.lax.dynamic_update_slice_in_dim(
+            x, patch_embeds.astype(dt), 0, axis=1) if f <= S else x
+    x = constrain(x, "batch", "seq_sp", "none")
+
+    P = len(cfg.pattern)
+    G = cfg.num_groups
+    if seq_len_ctx is None:
+        seq_len_ctx = S
+    wants_cache = mode in ("prefill", "decode")
+    proj = sketch_state["proj"] if sketch_state is not None else None
+    k_active = (2 * sketch_state["rank"] + 1) \
+        if sketch_state is not None else None
+
+    group_sk = _slice_sketch(sketch_state, 0, G * P, reshape_groups=G)
+    tail_sk = _slice_sketch(sketch_state, G * P, cfg.num_layers, None)
+
+    def group_body(carry, xs_slice):
+        x, aux = carry
+        gp, gc, gs = xs_slice
+        new_caches = []
+        new_sks = []
+        for i, kind in enumerate(cfg.pattern):
+            sk_i = ({g: {k: v[k][i] for k in v} for g, v in gs.items()}
+                    if gs is not None else None)
+            x, nc, a, nsk = _apply_block(
+                kind, gp[i], x,
+                cfg=cfg, positions=positions, mode=mode,
+                cache=(gc[i] if gc is not None else None),
+                seq_len_ctx=seq_len_ctx, sk=sk_i, proj=proj,
+                k_active=k_active, st=settings)
+            new_caches.append(nc)
+            new_sks.append(nsk)
+            aux = aux + a
+        ys = (
+            tuple(new_caches) if wants_cache else None,
+            _restack_sk(new_sks, cfg.pattern) if gs is not None else None,
+        )
+        return (x, aux), ys
+
+    body = group_body
+    if mode == "train" and cfg.remat_policy != "nothing":
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots_no_batch" else None)
+        body = jax.checkpoint(group_body, policy=policy,
+                              prevent_cse=False)
+
+    group_caches = cache["groups"] if cache is not None else None
+    xs = (
+        tuple(params["groups"]),
+        tuple(group_caches) if group_caches is not None else None,
+        group_sk,
+    )
+    aux0 = jnp.zeros((), jnp.float32)
+    if G > 0:
+        (x, aux), (new_group_caches, new_group_sk) = jax.lax.scan(
+            body, (x, aux0), xs)
+    else:
+        aux = aux0
+        new_group_caches, new_group_sk = None, None
+
+    # unrolled tail layers
+    new_tail_caches = []
+    new_tail_sk = []
+    for i, kind in enumerate(cfg.tail_types):
+        sk_i = ({g: {k: v[k][i] for k in v} for g, v in tail_sk.items()}
+                if tail_sk is not None else None)
+        x, nc, a, nsk = _apply_block(
+            kind, params["tail"][i], x, cfg=cfg, positions=positions,
+            mode=mode, cache=(cache["tail"][i] if cache is not None
+                              else None),
+            seq_len_ctx=seq_len_ctx, sk=sk_i, proj=proj,
+            k_active=k_active, st=settings)
+        new_tail_caches.append(nc)
+        new_tail_sk.append(nsk)
+        aux = aux + a
+
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    if logits_only_last:
+        x = x[:, -1:]
+    logits = unembed_apply(params["embed"], x, dt)
+
+    new_cache = None
+    if wants_cache:
+        new_cache = {"groups": list(new_group_caches),
+                     "tail": new_tail_caches}
+    new_sketch = None
+    if sketch_state is not None:
+        new_sketch = _merge_sketch(sketch_state, new_group_sk, new_tail_sk,
+                                   cfg)
+    return {"logits": logits, "cache": new_cache, "aux": aux,
+            "sketch_state": new_sketch}
+
+
+def _restack_sk(new_sks: list, pattern) -> dict:
+    """list-per-position of {group: triple} -> {group: {k: stacked (P,...)}}"""
+    out = {}
+    for g in new_sks[0]:
+        out[g] = {k: jnp.stack([s[g][k] for s in new_sks])
+                  for k in new_sks[0][g]}
+    return out
+
+
+def _merge_sketch(state, group_sk, tail_sk, cfg):
+    """Reassemble the (L, w, k) arrays from scan ys + tail updates."""
+    P = len(cfg.pattern)
+    G = cfg.num_groups
+    new = {k: state[k] for k in ("proj", "rank")}
+    new["step"] = state["step"] + 1
+    for g, v in state.items():
+        if g in ("proj", "rank", "step"):
+            continue
+        merged = {}
+        for leaf in v:
+            parts = []
+            if group_sk is not None and G > 0:
+                arr = group_sk[g][leaf]           # (G, P, ...) scan-stacked
+                parts.append(arr.reshape((G * P,) + arr.shape[2:]))
+            if tail_sk:
+                parts.append(jnp.stack([t[g][leaf] for t in tail_sk]))
+            merged[leaf] = jnp.concatenate(parts) if len(parts) > 1 \
+                else parts[0]
+        new[g] = merged
+    return new

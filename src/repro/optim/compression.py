@@ -1,0 +1,66 @@
+"""Gradient compression for the data-parallel axis (DESIGN.md §4).
+
+Top-k sparsification with ERROR FEEDBACK: each step transmits only the
+largest-|g| fraction per tensor; the residual accumulates locally and is
+re-injected next step (unbiased over time — tested for convergence
+preservation in tests/test_optim.py). int8 quantization halves/quarters
+DP all-reduce bytes; the collective-term effect shows up in §Perf.
+
+Shapes are static (k from a fixed fraction) so this composes with jit.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    topk_frac: float = 0.05         # fraction of entries transmitted
+    int8: bool = True               # quantize transmitted values
+    min_k: int = 16
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _compress_one(g, err, cfg: CompressionConfig):
+    gf = g.astype(jnp.float32) + err
+    flat = gf.reshape(-1)
+    k = max(cfg.min_k, int(flat.shape[0] * cfg.topk_frac))
+    k = min(k, flat.shape[0])
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    sel = flat[idx]
+    if cfg.int8:
+        scale = jnp.maximum(jnp.abs(sel).max(), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(sel / scale), -127, 127).astype(jnp.int8)
+        sel = q.astype(jnp.float32) * scale
+    sparse = jnp.zeros_like(flat).at[idx].set(sel)
+    new_err = flat - sparse
+    return sparse.reshape(g.shape), new_err.reshape(g.shape)
+
+
+def compress_grads(grads, err_state, cfg: CompressionConfig):
+    """Returns (compressed grads, new error-feedback state, stats)."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(err_state)
+    outs = [_compress_one(g, e, cfg) for g, e in zip(flat_g, flat_e)]
+    comp = treedef.unflatten([o[0] for o in outs])
+    new_err = treedef.unflatten([o[1] for o in outs])
+    total = sum(g.size for g in flat_g)
+    sent = sum(max(cfg.min_k, int(g.size * cfg.topk_frac))
+               for g in flat_g)
+    bytes_per = 1 if cfg.int8 else 4
+    stats = {
+        "compression_ratio": (sent * (bytes_per + 4)) / (total * 4.0),
+    }
+    return comp, new_err, stats
+
+
+def compressed_bytes(num_params: int, cfg: CompressionConfig) -> int:
+    """Bytes on the DP wire per step (values + int32 indices)."""
+    k = int(num_params * cfg.topk_frac)
+    return k * ((1 if cfg.int8 else 4) + 4)

@@ -1,0 +1,19 @@
+"""LR schedules (pure functions of the step scalar; jit-safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1):
+    s = step.astype(jnp.float32) if hasattr(step, "astype") \
+        else jnp.asarray(step, jnp.float32)
+    warm = s / jnp.maximum(warmup_steps, 1)
+    t = (s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(s < warmup_steps, warm, cos)
+
+
+def constant(step):
+    return jnp.ones_like(jnp.asarray(step, jnp.float32))

@@ -1,0 +1,51 @@
+"""Explicit collective patterns used by the distributed runtime.
+
+merge_partial_attn: flash-decoding-style merge of per-shard partial
+attention results when the KV cache is SEQUENCE-sharded over the model
+axis (kv_heads < TP). Each shard computes attention over its cache slice
+plus the local (max, sumexp) statistics; the merge is a log-sum-exp psum
+over the model axis — numerically identical to attending over the full
+cache (tested in tests/test_parallel.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def partial_attn_stats(q: Array, k_shard: Array, v_shard: Array,
+                       mask: Array):
+    """Per-shard partial attention.
+
+    q (B, H, 1, D); k/v shard (B, H, C_loc, D); mask (B, C_loc) bool.
+    Returns (acc (B,H,1,D) f32 unnormalized, m (B,H,1), l (B,H,1)).
+    """
+    s = jnp.einsum("bhqd,bhcd->bhqc", q, k_shard).astype(jnp.float32)
+    s = s * (q.shape[-1] ** -0.5)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    acc = jnp.einsum("bhqc,bhcd->bhqd", p.astype(v_shard.dtype),
+                     v_shard).astype(jnp.float32)
+    return acc, m, l
+
+
+def merge_partial_attn(acc: Array, m: Array, l: Array,
+                       axis_name: str) -> Array:
+    """Merge shard-local (acc, m, l) across `axis_name` (log-sum-exp)."""
+    m_glob = jax.lax.pmax(m, axis_name)
+    corr = jnp.exp(m - m_glob)
+    l_glob = jax.lax.psum(l * corr, axis_name)
+    acc_glob = jax.lax.psum(acc * corr[..., None], axis_name)
+    return acc_glob / jnp.maximum(l_glob, 1e-30)[..., None]
+
+
+def merge_partial_attn_pair(parts: list[tuple[Array, Array, Array]]):
+    """Host-side reference merge of a list of shard partials (tests)."""
+    m_glob = jnp.max(jnp.stack([m for _, m, _ in parts]), axis=0)
+    l_glob = sum(jnp.exp(m - m_glob) * l for _, m, l in parts)
+    acc_glob = sum(jnp.exp(m - m_glob)[..., None] * a for a, m, _ in parts)
+    return acc_glob / jnp.maximum(l_glob, 1e-30)[..., None]

@@ -1,0 +1,299 @@
+"""Logical-axis sharding rules (Megatron-TP + sequence-parallel + ZeRO-3).
+
+Model code never names mesh axes directly: it calls ``constrain(x, axes)``
+with LOGICAL axis names; the active ``ShardingRules`` (installed via the
+``use_rules`` context or passed explicitly) maps them to mesh axes. With no
+rules installed, ``constrain`` is the identity, so the same model code runs
+un-sharded on one CPU device for smoke tests.
+
+Logical activation axes
+    batch     -> ("pod","data")  [dp]
+    seq_sp    -> "model"         sequence-parallel residual stream
+    embed_act -> None            activation feature dim
+    heads_act -> "model"         attention heads in flight
+    vocab_act -> "model"         logits vocab dim
+    expert_act-> "model"         dispatched expert dim (EP)
+    kvseq     -> "model"         sequence-sharded KV cache (kv_heads < TP)
+    none      -> None
+
+Parameter leaves are sharded by name via ``spec_for_param`` (ZeRO-3: the
+``embed``/input feature dim of every weight is sharded over dp in addition
+to the tensor-parallel dim; XLA SPMD then materializes per-group
+all-gathers inside the scan body so only one group's weights are live).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    dp_axes: tuple[str, ...]          # ("data",) or ("pod", "data")
+    tp_axis: str = "model"
+    zero3: bool = True                # shard params over dp too (FSDP)
+    sequence_parallel: bool = True    # residual stream seq-sharded over TP
+    # "megatron": TP weights + SP residual (activation gathers at block
+    #             boundaries) — the baseline.
+    # "fsdp":     weights fully sharded over dp x tp and gathered per
+    #             layer; activations stay token-sharded end-to-end (the
+    #             §Perf beyond-paper strategy: gathering 100s-MB weights
+    #             beats gathering 10s-GB full-sequence activations).
+    strategy: str = "megatron"
+
+    @property
+    def dp(self):
+        return self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+
+    @property
+    def dp_size(self) -> int:
+        n = 1
+        for a in self.dp_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def tp_size(self) -> int:
+        return self.mesh.shape[self.tp_axis]
+
+    def act_axis(self, name: str):
+        """Map a logical ACTIVATION axis name to a mesh axis (or None)."""
+        table = {
+            "batch": self.dp,
+            "seq_sp": self.tp_axis if self.sequence_parallel else None,
+            # seq dim of attention/FFN intermediates: gathered under
+            # megatron (feature dims carry TP), sharded under fsdp
+            "seq_attn": None,
+            # flattened token dim (B*S): dp under megatron (seq gathered),
+            # dp x tp under fsdp
+            "tokens": self.dp,
+            "heads_act": self.tp_axis,
+            "vocab_act": self.tp_axis,
+            "expert_act": self.tp_axis,
+            "mlp_act": self.tp_axis,
+            # recurrent-block feature dims keep TP under BOTH strategies
+            "rnn_feat": self.tp_axis,
+            "kvseq": self.tp_axis,
+            "embed_act": None,
+            "none": None,
+        }
+        if self.strategy == "fsdp":
+            # activations stay token-sharded; no feature-dim TP in flight
+            table.update(
+                heads_act=None, vocab_act=None, mlp_act=None,
+                seq_attn=self.tp_axis,
+                tokens=tuple(self.dp_axes) + (self.tp_axis,),
+            )
+        return table[name]
+
+    def logits_axes(self) -> tuple[str, str, str]:
+        """Sharding of (B, S, V) logits: vocab-TP under megatron (seq was
+        gathered for the unembed matmul), seq-sharded under fsdp (full
+        vocab locally — CE softmax needs no collective)."""
+        if self.strategy == "fsdp":
+            return ("batch", "seq_sp", "none")
+        return ("batch", "none", "vocab_act")
+
+    def spec(self, *axes: str) -> P:
+        return P(*(self.act_axis(a) for a in axes))
+
+
+_tls = threading.local()
+
+
+def current_rules() -> ShardingRules | None:
+    return getattr(_tls, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: ShardingRules | None):
+    prev = current_rules()
+    _tls.rules = rules
+    try:
+        yield rules
+    finally:
+        _tls.rules = prev
+
+
+def constrain(x, *axes: str):
+    """with_sharding_constraint by logical axis names; identity w/o rules.
+
+    Axis count must match x.ndim. Dims whose size does not divide the mesh
+    axis are silently demoted to replicated (keeps decode S=1 / batch=1
+    cells valid without per-call branching).
+    """
+    rules = current_rules()
+    if rules is None:
+        return x
+    assert len(axes) == x.ndim, (axes, x.shape)
+    mesh_axes = []
+    for dim, name in enumerate(axes):
+        ax = rules.act_axis(name)
+        if ax is not None:
+            size = 1
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                size *= rules.mesh.shape[a]
+            if x.shape[dim] % size != 0:
+                ax = None
+        mesh_axes.append(ax)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, P(*mesh_axes))
+    )
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding by leaf path
+# ---------------------------------------------------------------------------
+
+# name -> logical axes per trailing dims (leading stacked 'groups' dims get
+# None). Convention: weights store (in_features, out_features...) with
+# named structure below (see models/*.py init functions).
+_PARAM_AXES: dict[str, tuple[str | None, ...]] = {
+    # embeddings
+    "embedding": ("vocab", "embed"),
+    "head": ("vocab", "embed"),
+    "patch_proj": (None, "embed"),
+    # attention
+    "wq": ("embed", "heads", None),
+    "wk": ("embed", "kv_heads", None),
+    "wv": ("embed", "kv_heads", None),
+    "wo": ("heads", None, "embed"),
+    # dense mlp
+    "w_gate": ("embed", "mlp"),
+    "w_up": ("embed", "mlp"),
+    "w_down": ("mlp", "embed"),
+    # moe
+    "router": ("embed", None),
+    "we_gate": ("experts", "embed", "expert_mlp"),
+    "we_up": ("experts", "embed", "expert_mlp"),
+    "we_down": ("experts", "expert_mlp", "embed"),
+    # rglru
+    "w_x": ("embed", "lru"),
+    "w_gate_branch": ("embed", "lru"),
+    "w_out": ("lru", "embed"),
+    "a_param": ("lru",),
+    "w_input_gate": ("lru_in", "lru"),
+    "w_rec_gate": ("lru_in", "lru"),
+    "conv_w": (None, "lru"),
+    "conv_b": ("lru",),
+    # mlstm
+    "w_m_up": ("embed", "mlstm_inner"),
+    "w_m_z": ("embed", "mlstm_inner"),
+    "w_m_q": ("mlstm_in", None, None),
+    "w_m_k": ("mlstm_in", None, None),
+    "w_m_v": ("mlstm_in", "m_heads", "m_vdim"),
+    "w_m_gates": ("mlstm_in", None),
+    "w_m_down": ("mlstm_inner", "embed"),
+    # slstm
+    "w_s_in": ("embed", "slstm_units"),
+    "r_s": (None, None, "slstm_units"),
+    "b_s": ("slstm_units",),
+    # norms / biases / scalars
+    "scale": (None,),
+    "bias": (None,),
+    "b_gates": (None,),
+}
+
+# logical param axis -> (tp_axis?, dp?) mapping
+def _param_axis_to_mesh(rules: ShardingRules, name: str | None):
+    if name is None:
+        return None
+    tp, dp = rules.tp_axis, (rules.dp if rules.zero3 else None)
+    table = {
+        "vocab": tp,
+        "embed": dp,             # ZeRO-3 dim
+        "heads": tp,
+        "kv_heads": tp,          # auto-replicated when KV < tp (guard below)
+        "mlp": tp,
+        "expert_mlp": None,
+        "experts": tp,           # EP over the TP axis (E >= tp archs)
+        "lru": tp,
+        "lru_in": None,
+        "mlstm_inner": tp,
+        "mlstm_in": None,
+        "m_heads": None,
+        "m_vdim": tp,
+        "slstm_units": tp,
+    }
+    if rules.strategy == "fsdp":
+        # weights fully sharded over dp x tp on the embed/input dim,
+        # gathered whole per layer; no feature-dim TP
+        fsdp_dim = (rules.dp_axes + (tp,)) if rules.zero3 else (tp,)
+        table.update(
+            vocab=None, embed=fsdp_dim, heads=None, kv_heads=None,
+            mlp=None,
+        )
+    return table[name]
+
+
+def spec_for_param(rules: ShardingRules, path: tuple, leaf) -> P:
+    """PartitionSpec for one param leaf, from its pytree path + shape."""
+    # last DictKey string in the path identifies the weight
+    name = None
+    for part in reversed(path):
+        key = getattr(part, "key", None)
+        if isinstance(key, str):
+            name = key
+            break
+    axes = _PARAM_AXES.get(name)
+    if axes is None:
+        return P()          # unknown -> replicated
+    ndim = leaf.ndim if hasattr(leaf, "ndim") else len(leaf.shape)
+    lead = ndim - len(axes)  # leading stacked (groups) dims
+    mesh_axes = [None] * lead + [
+        _param_axis_to_mesh(rules, a) for a in axes
+    ]
+    # divisibility guard (e.g. E=8 experts on tp=16 -> replicate that dim)
+    shape = leaf.shape
+
+    def _size(ax):
+        size = 1
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            size *= rules.mesh.shape[a]
+        return size
+
+    # a mesh axis may appear in at most one dim: when the fsdp embed
+    # tuple collides with a tensor-parallel dim (recurrent/expert
+    # weights keep feature-TP), strip the duplicated member(s)
+    used: set = set()
+    for i, ax in enumerate(mesh_axes):
+        if ax is None:
+            continue
+        members = tuple(ax) if isinstance(ax, tuple) else (ax,)
+        if isinstance(ax, tuple):
+            kept = tuple(m for m in members if m not in used)
+            mesh_axes[i] = kept if len(kept) > 1 else \
+                (kept[0] if kept else None)
+            members = kept
+        elif ax in used:
+            mesh_axes[i] = None
+            members = ()
+        used.update(members)
+
+    for i, ax in enumerate(mesh_axes):
+        if ax is not None and shape[i] % _size(ax) != 0:
+            mesh_axes[i] = None
+    # MoE fallback: when the experts dim cannot shard over tp (E < tp, e.g.
+    # mixtral 8e on model=16), switch to tensor-parallel expert FFNs by
+    # sharding the expert_mlp dim instead (DESIGN.md §4 EP/TP hybrid).
+    if name in ("we_gate", "we_up", "we_down") and mesh_axes[lead] is None:
+        j = lead + axes.index("expert_mlp")
+        if shape[j] % _size(rules.tp_axis) == 0:
+            mesh_axes[j] = rules.tp_axis
+    return P(*mesh_axes)
+
+
+def param_shardings(rules: ShardingRules, params) -> Any:
+    """NamedSharding pytree matching `params` (works on ShapeDtypeStructs)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            rules.mesh, spec_for_param(rules, path, leaf)
+        ),
+        params,
+    )

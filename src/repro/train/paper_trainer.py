@@ -1,0 +1,241 @@
+"""Paper-faithful MLP trainer (§5.1 experimental variants).
+
+Variants:
+  standard          exact backprop (baseline)
+  sketched_fixed    Algorithm 1 with fixed rank r
+  sketched_adaptive + the adaptive rank controller (§4.3)
+  monitor           exact backprop + monitoring-only sketches (PINN mode)
+  corange           beyond-paper: sketched backprop with the Tropp
+                    co-range triple (provable sqrt(6)-tail bound)
+
+Sketching is per-NODE: each hidden activation node n (input to layer n+1)
+owns an EMA triple; layer l >= 1 reconstructs its input from node l-1's
+triple. This is the paper's per-layer (X^[l], Y^[l-1], Z^[l-1]) grouping
+re-indexed by node (DESIGN.md §1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper import MLPConfig
+from repro.core.adaptive import AdaptiveConfig, adaptive_step, \
+    init_adaptive_state
+from repro.core.corange import (
+    corange_reconstruct, corange_update, make_corange_projections, s_of,
+)
+from repro.core.monitor import (
+    init_monitor_state, monitor_record, stack_metrics,
+)
+from repro.core.reconstruct import reconstruct
+from repro.core.sketch import SketchConfig
+from repro.core.sketched_linear import ema_node_update, sketched_matmul
+from repro.models.mlp import _act, mlp_init
+from repro.optim.adamw import AdamWConfig, adamw_update, init_adamw, \
+    sgd_update
+
+Array = jax.Array
+
+
+# -- low-rank grad matmul for the corange variant ---------------------------
+
+
+@jax.custom_vjp
+def lowrank_grad_matmul(x, w, left, right):
+    """y = x @ w, but grad_w = right @ (left^T @ g) with A~ = left right^T
+    (the reconstruction is computed before the call; residuals are the
+    k-sized factors, never x)."""
+    return x @ w
+
+
+def _lr_fwd(x, w, left, right):
+    return x @ w, (w, left, right)
+
+
+def _lr_bwd(res, g):
+    w, left, right = res
+    grad_w = right @ (left.T @ g.astype(left.dtype))
+    return g @ w.T, grad_w.astype(w.dtype), \
+        jnp.zeros_like(left), jnp.zeros_like(right)
+
+
+lowrank_grad_matmul.defvjp(_lr_fwd, _lr_bwd)
+
+
+# -- sketch state ------------------------------------------------------------
+
+
+def init_mlp_sketch(key, cfg: MLPConfig, scfg: SketchConfig,
+                    variant: str):
+    n_nodes = cfg.num_hidden_layers          # hidden activation nodes
+    d = cfg.d_hidden
+    k_max = scfg.k_max
+    ks = jax.random.split(key, 6)
+    if variant == "corange":
+        proj = make_corange_projections(ks[0], d, cfg.batch_size, k_max)
+        return {
+            "proj": proj,
+            "x": jnp.zeros((n_nodes, k_max, cfg.batch_size)),
+            "y": jnp.zeros((n_nodes, d, k_max)),
+            "z": jnp.zeros((n_nodes, s_of(k_max), s_of(k_max))),
+            "rank": jnp.asarray(scfg.rank, jnp.int32),
+            "step": jnp.asarray(0, jnp.int32),
+        }
+    return {
+        "proj": {
+            "upsilon": jax.random.normal(ks[0], (cfg.batch_size, k_max)),
+            "omega": jax.random.normal(ks[1], (cfg.batch_size, k_max)),
+            "phi": jax.random.normal(ks[2], (cfg.batch_size, k_max)),
+        },
+        "psi": jax.random.normal(ks[3], (n_nodes, k_max)),
+        "x": jnp.zeros((n_nodes, d, k_max)),
+        "y": jnp.zeros((n_nodes, d, k_max)),
+        "z": jnp.zeros((n_nodes, d, k_max)),
+        "rank": jnp.asarray(scfg.rank, jnp.int32),
+        "step": jnp.asarray(0, jnp.int32),
+    }
+
+
+# -- forward with sketched backward -----------------------------------------
+
+
+def sketched_forward(params, x, sk, cfg: MLPConfig, scfg: SketchConfig,
+                     variant: str):
+    """Returns (logits, new_sketch_state)."""
+    act = _act(cfg.activation)
+    k_active = 2 * sk["rank"] + 1
+    n = len(params)
+    h = x
+    new = {key: ([] if key in ("x", "y", "z") else sk[key])
+           for key in sk}
+    for i, p in enumerate(params):
+        node = i - 1                       # node feeding layer i
+        if 1 <= i and variant in ("sketched_fixed", "sketched_adaptive",
+                                  "monitor", "corange"):
+            if variant == "corange":
+                xc, yc, zc = corange_update(
+                    sk["x"][node], sk["y"][node], sk["z"][node], h,
+                    sk["proj"], scfg.beta, k_active)
+                for key, v in (("x", xc), ("y", yc), ("z", zc)):
+                    new[key].append(v)
+                rec = corange_reconstruct(xc, yc, zc, sk["proj"], k_active)
+                z = lowrank_grad_matmul(
+                    h, p["w"], rec.left.astype(h.dtype),
+                    rec.right.astype(h.dtype)) + p["bias"]
+            else:
+                xs, ys, zs = ema_node_update(
+                    sk["x"][node], sk["y"][node], sk["z"][node], h,
+                    sk["proj"]["upsilon"], sk["proj"]["omega"],
+                    sk["proj"]["phi"], sk["psi"][node], scfg.beta,
+                    k_active)
+                for key, v in (("x", xs), ("y", ys), ("z", zs)):
+                    new[key].append(v)
+                if variant == "monitor":
+                    z = h @ p["w"] + p["bias"]
+                else:
+                    z = sketched_matmul(
+                        h, p["w"], xs, ys, zs, sk["proj"]["omega"],
+                        k_active, scfg.recon_mode, scfg.ridge, True
+                    ) + p["bias"]
+        else:
+            z = h @ p["w"] + p["bias"]
+        h = act(z) if i < n - 1 else z
+    for key in ("x", "y", "z"):
+        new[key] = jnp.stack(new[key]) if new[key] else sk[key]
+    new["step"] = sk["step"] + 1
+    return h, new
+
+
+def plain_forward(params, x, cfg: MLPConfig):
+    act = _act(cfg.activation)
+    h = x
+    n = len(params)
+    for i, p in enumerate(params):
+        z = h @ p["w"] + p["bias"]
+        h = act(z) if i < n - 1 else z
+    return h
+
+
+# -- training step -----------------------------------------------------------
+
+
+def ce_loss(logits, y):
+    ls = jax.nn.log_softmax(logits.astype(jnp.float32))
+    return -jnp.take_along_axis(ls, y[:, None], 1).mean()
+
+
+def make_step(cfg: MLPConfig, scfg: SketchConfig, variant: str,
+              opt_cfg: AdamWConfig):
+    def step(params, opt, sk, x, y):
+        def loss_fn(p):
+            if variant == "standard":
+                return ce_loss(plain_forward(p, x, cfg), y), sk
+            logits, new_sk = sketched_forward(p, x, sk, cfg, scfg, variant)
+            return ce_loss(logits, y), new_sk
+
+        (loss, new_sk), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        if cfg.optimizer == "adam":
+            params, opt, _ = adamw_update(params, grads, opt, opt_cfg)
+        else:
+            params = sgd_update(params, grads, opt_cfg.lr)
+        return params, opt, new_sk, loss
+
+    return jax.jit(step)
+
+
+@dataclasses.dataclass
+class PaperTrainResult:
+    params: Any
+    history: list
+    sketch: Any
+    monitor: Any
+
+
+def train(cfg: MLPConfig, scfg: SketchConfig, variant: str, *,
+          steps: int, batch_fn, eval_fn=None, seed: int = 0,
+          steps_per_epoch: int = 50,
+          adaptive: AdaptiveConfig | None = None,
+          monitor_window: int = 64) -> PaperTrainResult:
+    """Generic driver: batch_fn(key) -> (x, y); eval_fn(params) -> dict."""
+    key = jax.random.PRNGKey(seed)
+    kp, ks = jax.random.split(key)
+    params = mlp_init(kp, cfg)
+    opt_cfg = AdamWConfig(lr=cfg.learning_rate, b2=0.999)
+    opt = init_adamw(params, opt_cfg)
+    sk = init_mlp_sketch(ks, cfg, scfg, variant)
+    astate = init_adaptive_state()
+    monitor = init_monitor_state(monitor_window, cfg.num_hidden_layers)
+    step = make_step(cfg, scfg, variant, opt_cfg)
+    history = []
+    for s in range(steps):
+        x, y = batch_fn(jax.random.fold_in(key, s))
+        params, opt, sk, loss = step(params, opt, sk, x, y)
+        rec = {"step": s, "loss": float(loss),
+               "rank": int(sk["rank"])}
+        if variant != "standard" and variant != "corange":
+            monitor = monitor_record(
+                monitor, stack_metrics(sk["x"], sk["y"], sk["z"]))
+        if eval_fn is not None and (s + 1) % steps_per_epoch == 0:
+            rec.update(eval_fn(params))
+            if adaptive is not None and variant == "sketched_adaptive":
+                astate, new_rank, changed = adaptive_step(
+                    astate, sk["rank"],
+                    jnp.asarray(rec["loss"], jnp.float32), adaptive)
+                sk = dict(sk, rank=new_rank)
+                if bool(changed):
+                    sk = dict(sk, x=jnp.zeros_like(sk["x"]),
+                              y=jnp.zeros_like(sk["y"]),
+                              z=jnp.zeros_like(sk["z"]))
+        history.append(rec)
+    return PaperTrainResult(params=params, history=history, sketch=sk,
+                            monitor=monitor)
+
+
+def accuracy(params, cfg: MLPConfig, x, y) -> float:
+    logits = plain_forward(params, x, cfg)
+    return float((jnp.argmax(logits, -1) == y).mean())

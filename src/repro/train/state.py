@@ -1,0 +1,74 @@
+"""Train-state pytree + run configuration."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adaptive import AdaptiveConfig, AdaptiveState, \
+    init_adaptive_state
+from repro.core.monitor import init_monitor_state, MonitorState
+from repro.models.transformer import (
+    SketchSettings, init_lm_sketch_state, init_params, sketch_groups,
+)
+from repro.optim.adamw import AdamWConfig, init_adamw
+from repro.optim.compression import CompressionConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """Everything the training step needs besides the architecture."""
+    seq_len: int
+    global_batch: int
+    optimizer: AdamWConfig = AdamWConfig()
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    aux_weight: float = 0.01          # MoE load-balance loss weight
+    z_weight: float = 1e-4            # z-loss (logit drift control)
+    sketch: SketchSettings = SketchSettings()
+    adaptive: AdaptiveConfig | None = None
+    compression: CompressionConfig | None = None
+    monitor_window: int = 32
+    nan_guard: bool = True
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    sketch: Any                       # LM sketch dict or None
+    adaptive: AdaptiveState
+    monitor: MonitorState
+    step: jax.Array                   # () i32
+    skipped: jax.Array                # () i32 NaN-guard skip count
+
+
+def init_train_state(key, cfg, run: RunConfig) -> TrainState:
+    kp, ks = jax.random.split(key)
+    params = init_params(kp, cfg)
+    opt = init_adamw(params, run.optimizer)
+    if run.compression is not None:
+        from repro.optim.compression import init_error_feedback
+        opt["err"] = init_error_feedback(params)
+    n_tokens = run.global_batch * run.seq_len
+    sketch = init_lm_sketch_state(ks, cfg, run.sketch, n_tokens)
+    n_groups = max(1, len(sketch_groups(cfg)))
+    monitor = init_monitor_state(run.monitor_window,
+                                 n_groups * cfg.num_layers)
+    return TrainState(
+        params=params,
+        opt=opt,
+        sketch=sketch,
+        adaptive=init_adaptive_state(),
+        monitor=monitor,
+        step=jnp.zeros((), jnp.int32),
+        skipped=jnp.zeros((), jnp.int32),
+    )
+
+
+def abstract_train_state(cfg, run: RunConfig):
+    return jax.eval_shape(
+        lambda k: init_train_state(k, cfg, run), jax.random.PRNGKey(0))

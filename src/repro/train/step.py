@@ -1,0 +1,98 @@
+"""The jitted training step: forward + sketched/standard backward +
+AdamW + NaN guard + sketch monitoring, all inside one XLA program."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.monitor import monitor_record, stack_metrics
+from repro.models.transformer import forward
+from repro.optim.adamw import adamw_update
+from repro.optim.compression import compress_grads, init_error_feedback
+from repro.optim.schedule import warmup_cosine
+from repro.parallel.sharding import constrain
+from repro.train.state import RunConfig, TrainState
+
+
+def cross_entropy(logits, labels, z_weight: float = 0.0):
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    true = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    ce = (lse - true).mean()
+    if z_weight > 0:
+        ce = ce + z_weight * (lse ** 2).mean()
+    return ce
+
+
+def make_train_step(cfg: ArchConfig, run: RunConfig):
+    def train_step(state: TrainState, batch):
+        tokens = constrain(batch["tokens"], "batch", "none")
+        labels = constrain(batch["labels"], "batch", "none")
+
+        def loss_fn(params, sketch):
+            out = forward(
+                params, tokens, cfg=cfg, mode="train",
+                sketch_state=sketch, settings=run.sketch,
+                patch_embeds=batch.get("patch_embeds"))
+            ce = cross_entropy(out["logits"], labels, run.z_weight)
+            loss = ce + run.aux_weight * out["aux"]
+            return loss, (out["sketch_state"], ce, out["aux"])
+
+        (loss, (new_sketch, ce, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params, state.sketch)
+
+        new_err = None
+        if run.compression is not None:
+            grads, new_err, _ = compress_grads(
+                grads, state.opt["err"], run.compression)
+
+        lr_scale = warmup_cosine(
+            state.step, warmup_steps=run.warmup_steps,
+            total_steps=run.total_steps)
+        opt_in = {k: v for k, v in state.opt.items() if k != "err"}
+        new_params, new_opt, om = adamw_update(
+            state.params, grads, opt_in, run.optimizer, lr_scale)
+        if new_err is not None:
+            new_opt["err"] = new_err
+
+        good = jnp.isfinite(loss) & jnp.isfinite(om["grad_norm"])
+        if run.nan_guard:
+            pick = lambda n, o: jax.tree.map(
+                lambda a, b: jnp.where(good, a, b), n, o)
+            new_params = pick(new_params, state.params)
+            new_opt = pick(new_opt, state.opt)
+            if new_sketch is not None:
+                new_sketch = pick(new_sketch, state.sketch)
+
+        monitor = state.monitor
+        if new_sketch is not None:
+            mets = []
+            for g, v in new_sketch.items():
+                if g in ("proj", "rank", "step"):
+                    continue
+                mets.append(stack_metrics(v["sk_x"], v["sk_y"], v["sk_z"]))
+            monitor = monitor_record(monitor, jnp.concatenate(mets, 0))
+
+        new_state = TrainState(
+            params=new_params, opt=new_opt, sketch=new_sketch,
+            adaptive=state.adaptive, monitor=monitor,
+            step=state.step + 1,
+            skipped=state.skipped + (~good).astype(jnp.int32),
+        )
+        metrics = {"loss": loss, "ce": ce, "aux": aux,
+                   "grad_norm": om["grad_norm"],
+                   "lr_scale": lr_scale,
+                   "skipped_total": new_state.skipped}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig, run: RunConfig):
+    def eval_step(params, batch):
+        out = forward(params, batch["tokens"], cfg=cfg, mode="train")
+        return cross_entropy(out["logits"], batch["labels"])
+    return eval_step

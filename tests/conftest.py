@@ -1,0 +1,13 @@
+import jax
+import pytest
+
+# NOTE: no xla_force_host_platform_device_count here — smoke tests and
+# benches must see 1 device (DESIGN.md / assignment). Distributed tests
+# spawn subprocesses with their own XLA_FLAGS.
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture
+def rng():
+    return jax.random.PRNGKey(0)

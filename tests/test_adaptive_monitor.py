@@ -1,0 +1,80 @@
+"""Adaptive rank controller (Alg. 1) + monitoring metrics/pathologies."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    AdaptiveConfig, adaptive_step, detect_pathologies, init_adaptive_state,
+    init_monitor_state, layer_metrics, monitor_record, stable_rank,
+)
+
+
+def _drive(metrics, cfg):
+    st = init_adaptive_state()
+    rank = jnp.asarray(cfg.r0, jnp.int32)
+    events = []
+    for m in metrics:
+        st, rank, changed = adaptive_step(st, rank,
+                                          jnp.asarray(m, jnp.float32), cfg)
+        events.append((int(rank), bool(changed)))
+    return events
+
+
+def test_rank_decreases_on_sustained_improvement():
+    cfg = AdaptiveConfig(r0=4, patience_decrease=3, patience_increase=99)
+    events = _drive([10.0, 9.0, 8.0, 7.0, 6.0, 5.0, 4.0], cfg)
+    ranks = [r for r, _ in events]
+    assert ranks[2] == 3          # after 3 improving epochs
+    assert min(ranks) >= cfg.r_min
+
+
+def test_rank_increases_on_stall_and_resets_at_threshold():
+    cfg = AdaptiveConfig(r0=2, patience_decrease=99, patience_increase=2,
+                         dr_up=4, tau_reset=10)
+    # constant metric -> stall every epoch
+    events = _drive([5.0] * 12, cfg)
+    ranks = [r for r, _ in events]
+    assert 6 in ranks             # grew 2 -> 6
+    assert ranks[-1] == cfg.r0 or 2 in ranks[4:]   # reset fired
+
+
+def test_monitor_ring_buffer_wraps():
+    st = init_monitor_state(window=4, num_layers=2)
+    for i in range(6):
+        st = monitor_record(st, jnp.full((2, 3), float(i)))
+    assert int(st.count) == 6
+    assert int(st.idx) == 2
+    # slots 0,1 hold steps 4,5; slots 2,3 hold steps 2,3
+    np.testing.assert_allclose(np.asarray(st.buffer[0, 0, 0]), 4.0)
+    np.testing.assert_allclose(np.asarray(st.buffer[3, 0, 0]), 3.0)
+
+
+def test_stable_rank_limits(rng):
+    # rank-1 matrix -> stable rank ~ 1
+    u = jax.random.normal(rng, (32, 1))
+    v = jax.random.normal(jax.random.fold_in(rng, 1), (5, 1))
+    sr1 = float(stable_rank(u @ v.T))
+    assert abs(sr1 - 1.0) < 1e-3
+    # orthogonal columns -> stable rank ~ k
+    q = jnp.linalg.qr(jax.random.normal(rng, (32, 5)))[0]
+    assert float(stable_rank(q)) > 4.9
+
+
+def test_pathology_detection_vanishing_vs_healthy():
+    st = init_monitor_state(window=8, num_layers=2)
+    for i in range(8):
+        # layer 0 healthy (varying norms), layer 1 vanishing
+        m = jnp.asarray([[100.0 + 10 * i, 8.0, 5.0],
+                         [1e-7, 1.0, 1e-7]])
+        st = monitor_record(st, m)
+    flags = detect_pathologies(st, k_active=9)
+    assert not bool(flags["vanishing"][0])
+    assert bool(flags["vanishing"][1])
+    assert bool(flags["diversity_collapse"][1])
+
+
+def test_layer_metrics_shapes(rng):
+    x = jax.random.normal(rng, (16, 9))
+    m = layer_metrics(x, x, x)
+    assert m.shape == (3,)
+    assert bool(jnp.all(jnp.isfinite(m)))

@@ -1,0 +1,76 @@
+"""HLO parser: synthetic module + a real lowered train step."""
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_analysis import (
+    aggregate, analyze_hlo_text, parse_hlo, shape_bytes,
+)
+
+SYNTH = """\
+HloModule test
+
+%loop_cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %c = s32[] constant(7)
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%loop_body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %y = f32[8,8]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8]{1,0} all-reduce(%y), to_apply=%add_comp
+  %i = s32[] get-tuple-element(%p), index=0
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]{1,0}) tuple(%i2, %ar)
+}
+
+%add_comp (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (arg: f32[8,8]) -> (s32[], f32[8,8]) {
+  %arg = f32[8,8]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %t0 = (s32[], f32[8,8]{1,0}) tuple(%zero, %arg)
+  ROOT %w = (s32[], f32[8,8]{1,0}) while(%t0), condition=%loop_cond, body=%loop_body
+}
+"""
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[4,4]") == 64
+    assert shape_bytes("bf16[2,3]{1,0}") == 12
+    assert shape_bytes("(s32[], f32[8,8])") == 4 + 256
+    assert shape_bytes("pred[10]") == 10
+
+
+def test_synthetic_module_trip_attribution():
+    tot = analyze_hlo_text(SYNTH, default_trip=1)
+    # dot: 2*8*8*8 flops, x7 trips from the condition constant
+    assert tot["dot_flops"] == 2 * 8 * 8 * 8 * 7
+    assert tot["coll_bytes"]["all-reduce"] == 256 * 7
+    assert tot["entry"] == "main"
+
+
+def test_real_lowered_module_flops_sane(rng):
+    """Lower a matmul chain in a scan; parsed flops within 2x of truth."""
+    w = jax.random.normal(rng, (64, 64))
+
+    def f(x):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y.sum()
+
+    lowered = jax.jit(f).lower(jax.ShapeDtypeStruct((32, 64),
+                                                    jnp.float32))
+    text = lowered.compile().as_text()
+    tot = analyze_hlo_text(text, default_trip=10)
+    truth = 2 * 32 * 64 * 64 * 10
+    assert 0.5 * truth <= tot["dot_flops"] <= 2.5 * truth, \
+        (tot["dot_flops"], truth)

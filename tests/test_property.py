@@ -1,0 +1,137 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    SketchConfig, ema_activation_matrix, make_projections, mask_columns,
+    sketch_update_single,
+)
+from repro.core.reconstruct import masked_qr, reconstruct
+from repro.models.moe import capacity, dispatch_meta, route
+from repro.optim.adamw import AdamWConfig, adamw_update, init_adamw
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.5, 0.99),
+       st.integers(1, 12))
+@settings(**SETTINGS)
+def test_ema_sketch_is_linear_projection(seed, beta, n_batches):
+    """Lemma 4.1 for arbitrary batch streams and betas."""
+    key = jax.random.PRNGKey(seed)
+    cfg = SketchConfig(rank=2, max_rank=3, beta=beta, batch_size=8)
+    d = 10
+    proj = make_projections(key, cfg, 1)
+    ka = jnp.asarray(cfg.k0)
+    xs = ys = zs = jnp.zeros((d, cfg.k_max))
+    hist = []
+    for t in range(n_batches):
+        a = jax.random.normal(jax.random.fold_in(key, t), (8, d))
+        hist.append(a)
+        xs, ys, zs = sketch_update_single(xs, ys, zs, a, a, proj, 0,
+                                          beta, ka)
+    want = mask_columns(ema_activation_matrix(hist, beta) @ proj.upsilon,
+                        ka)
+    np.testing.assert_allclose(np.asarray(xs), np.asarray(want),
+                               atol=1e-4, rtol=1e-3)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 9))
+@settings(**SETTINGS)
+def test_mask_columns_idempotent_and_bounded(seed, k_active):
+    key = jax.random.PRNGKey(seed)
+    m = jax.random.normal(key, (7, 9))
+    ka = jnp.asarray(k_active)
+    m1 = mask_columns(m, ka)
+    m2 = mask_columns(m1, ka)
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+    assert float(jnp.abs(m1[:, k_active:]).max() if k_active < 9
+                 else 0.0) == 0.0
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_masked_qr_orthonormal_active_block(seed):
+    key = jax.random.PRNGKey(seed)
+    a = jax.random.normal(key, (20, 9))
+    ka = jnp.asarray(5)
+    q = masked_qr(mask_columns(a, ka), ka)
+    g = q.T @ q
+    np.testing.assert_allclose(np.asarray(g[:5, :5]), np.eye(5),
+                               atol=1e-4)
+    assert float(jnp.abs(q[:, 5:]).max()) == 0.0
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(4, 64),
+       st.integers(2, 8), st.integers(1, 4))
+@settings(**SETTINGS)
+def test_moe_dispatch_conserves_tokens(seed, T, E, K):
+    """Every slot is either invalid or holds a real (token, weight) with
+    weights renormalized per token; no token appears twice for the same
+    expert; combine weight mass <= 1 per token."""
+    K = min(K, E)
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (T, 8))
+    router = jax.random.normal(jax.random.fold_in(key, 1), (8, E))
+    probs, topw, tope = route(x, router, K)
+    C = capacity(T, E, K, 1.25)
+    tok, wgt, valid = dispatch_meta(tope, topw, E, C)
+    tok = np.asarray(tok)
+    wgt = np.asarray(wgt)
+    valid = np.asarray(valid)
+    assert ((tok >= 0) & (tok < T)).all()
+    # per-token combined weight mass in (0, 1+eps]
+    mass = np.zeros(T)
+    np.add.at(mass, tok[valid], wgt[valid])
+    assert (mass <= 1.0 + 1e-5).all()
+    # valid slots of one expert never repeat a token
+    for e in range(E):
+        seg = tok[e * C:(e + 1) * C][valid[e * C:(e + 1) * C]]
+        assert len(seg) == len(set(seg.tolist()))
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_adamw_step_finite_and_descends_quadratic(seed):
+    key = jax.random.PRNGKey(seed)
+    p = {"w": jax.random.normal(key, (6,))}
+    cfg = AdamWConfig(lr=0.1, grad_clip=0.0)
+    opt = init_adamw(p, cfg)
+    loss = lambda p_: jnp.sum(p_["w"] ** 2)
+    l0 = float(loss(p))
+    for _ in range(20):
+        g = jax.grad(loss)(p)
+        p, opt, m = adamw_update(p, g, opt, cfg)
+        assert bool(jnp.isfinite(m["grad_norm"]))
+    assert float(loss(p)) < l0
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 4))
+@settings(**SETTINGS)
+def test_reconstruction_rank_monotone_on_fixed_stream(seed, r):
+    """Higher active rank never hurts exact-low-rank recovery (corange)."""
+    from repro.core.corange import (
+        corange_reconstruct, corange_update, make_corange_projections,
+        s_of,
+    )
+    key = jax.random.PRNGKey(seed)
+    nb, d = 12, 16
+    k_max = 2 * 4 + 1
+    U = jax.random.normal(key, (d, 2))
+    batches = [jax.random.normal(jax.random.fold_in(key, t),
+                                 (nb, 2)) @ U.T for t in range(6)]
+    proj = make_corange_projections(key, d, nb, k_max)
+    errs = []
+    for rr in (r, 4):
+        ka = jnp.asarray(2 * rr + 1)
+        xc = jnp.zeros((k_max, nb))
+        yc = jnp.zeros((d, k_max))
+        zc = jnp.zeros((s_of(k_max), s_of(k_max)))
+        for a in batches:
+            xc, yc, zc = corange_update(xc, yc, zc, a, proj, 0.9, ka)
+        m = ema_activation_matrix(batches, 0.9)
+        rec = corange_reconstruct(xc, yc, zc, proj, ka).dense()
+        errs.append(float(jnp.linalg.norm(rec - m.T)))
+    assert errs[1] <= errs[0] + 1e-3

@@ -1,0 +1,124 @@
+"""Reconstruction: factored==faithful, corange exact recovery + the
+sqrt(6)-tail bound (Thm 4.2), paper-path behavior documented."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    SQRT6, make_projections, reconstruct, reconstruct_dense_faithful,
+    SketchConfig, sketch_update_single, ema_activation_matrix,
+    tail_energy,
+)
+from repro.core.corange import (
+    corange_reconstruct, corange_update, make_corange_projections, s_of,
+)
+
+K_MAX = 9
+
+
+def _paper_triple(key, batches, k_active, beta=0.9):
+    d = batches[0].shape[1]
+    nb = batches[0].shape[0]
+    cfg = SketchConfig(rank=(K_MAX - 1) // 2, max_rank=(K_MAX - 1) // 2,
+                       beta=beta, batch_size=nb)
+    proj = make_projections(key, cfg, 1)
+    xs = ys = zs = jnp.zeros((d, K_MAX))
+    for a in batches:
+        xs, ys, zs = sketch_update_single(xs, ys, zs, a, a, proj, 0,
+                                          beta, k_active)
+    return xs, ys, zs, proj
+
+
+def _low_rank_batches(key, n, nb, d, r):
+    U = jax.random.normal(jax.random.fold_in(key, 1), (d, r))
+    return [jax.random.normal(jax.random.fold_in(key, 10 + t),
+                              (nb, r)) @ U.T for t in range(n)]
+
+
+def test_factored_equals_faithful(rng):
+    ka = jnp.asarray(K_MAX)
+    batches = _low_rank_batches(rng, 8, 16, 32, 3)
+    xs, ys, zs, proj = _paper_triple(rng, batches, ka)
+    fac = reconstruct(xs, ys, zs, proj.omega, ka).dense()
+    dense = reconstruct_dense_faithful(xs, ys, zs, proj.omega, ka)
+    np.testing.assert_allclose(np.asarray(fac), np.asarray(dense),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_fast_mode_close_to_faithful(rng):
+    """Relative-ridge normal equations track the SVD pinv path even on a
+    RANK-DEFICIENT sketch (rank-3 data, k=9) — the regime where an
+    absolute ridge amplifies null-space noise by 1/ridge."""
+    ka = jnp.asarray(K_MAX)
+    batches = _low_rank_batches(rng, 8, 16, 32, 3)
+    xs, ys, zs, proj = _paper_triple(rng, batches, ka)
+    a = reconstruct(xs, ys, zs, proj.omega, ka, mode="faithful").dense()
+    b = reconstruct(xs, ys, zs, proj.omega, ka, mode="fast").dense()
+    assert float(jnp.linalg.norm(a - b) / jnp.linalg.norm(a)) < 5e-2
+
+
+def test_corange_exact_recovery_low_rank(rng):
+    """Tropp triple recovers an exactly-rank-r EMA matrix (tau ~ 0)."""
+    nb, d, r = 16, 40, 3
+    ka = jnp.asarray(2 * 4 + 1)
+    batches = _low_rank_batches(rng, 10, nb, d, r)
+    proj = make_corange_projections(rng, d, nb, K_MAX)
+    xc = jnp.zeros((K_MAX, nb))
+    yc = jnp.zeros((d, K_MAX))
+    zc = jnp.zeros((s_of(K_MAX), s_of(K_MAX)))
+    for a in batches:
+        xc, yc, zc = corange_update(xc, yc, zc, a, proj, 0.9, ka)
+    m = ema_activation_matrix(batches, 0.9)
+    rec = corange_reconstruct(xc, yc, zc, proj, ka).dense()
+    rel = float(jnp.linalg.norm(rec - m.T) / jnp.linalg.norm(m))
+    assert rel < 1e-3, rel
+
+
+def test_corange_respects_sqrt6_bound(rng):
+    """E||M - M~|| <= sqrt6 tau_{r+1} — single-draw check with slack."""
+    nb, d, r = 24, 48, 4
+    ka = jnp.asarray(2 * r + 1)
+    sv = jnp.exp(-0.4 * jnp.arange(nb))
+    batches = []
+    for t in range(20):
+        g = jax.random.normal(jax.random.fold_in(rng, t), (nb, d))
+        u, _, vt = jnp.linalg.svd(g, full_matrices=False)
+        batches.append((u * sv) @ vt)
+    proj = make_corange_projections(rng, d, nb, K_MAX)
+    xc = jnp.zeros((K_MAX, nb))
+    yc = jnp.zeros((d, K_MAX))
+    zc = jnp.zeros((s_of(K_MAX), s_of(K_MAX)))
+    for a in batches:
+        xc, yc, zc = corange_update(xc, yc, zc, a, proj, 0.9, ka)
+    m = ema_activation_matrix(batches, 0.9)
+    err = float(jnp.linalg.norm(
+        corange_reconstruct(xc, yc, zc, proj, ka).dense() - m.T))
+    bound = float(SQRT6 * tail_energy(m, r))
+    assert err <= 2.0 * bound, (err, bound)   # 2x slack: single draw
+
+
+def test_paper_reconstruction_is_heuristic(rng):
+    """The paper's Eqs. 6-7 do NOT recover even exactly-low-rank data
+    (batch co-range never sketched) — documented behavior, not a bug."""
+    ka = jnp.asarray(K_MAX)
+    batches = _low_rank_batches(rng, 10, 16, 32, 3)
+    xs, ys, zs, proj = _paper_triple(rng, batches, ka)
+    m = ema_activation_matrix(batches, 0.9)
+    rec = reconstruct(xs, ys, zs, proj.omega, ka).dense()
+    rel = float(jnp.linalg.norm(rec - m.T) / jnp.linalg.norm(m))
+    assert rel > 0.1        # materially inexact even at tau ~ 0
+
+
+def test_masked_rank_reconstruction_consistent(rng):
+    """Reconstruction at k_active < k_max == reconstruction with buffers
+    physically sized k_active (masking is exact, never approximate)."""
+    nb, d = 16, 24
+    batches = _low_rank_batches(rng, 6, nb, d, 2)
+    ka = jnp.asarray(5)
+    xs, ys, zs, proj = _paper_triple(rng, batches, ka)
+    full = reconstruct(xs, ys, zs, proj.omega, ka).dense()
+    small = reconstruct(
+        xs[:, :5], ys[:, :5], zs[:, :5], proj.omega[:, :5],
+        jnp.asarray(5)).dense()
+    np.testing.assert_allclose(np.asarray(full), np.asarray(small),
+                               atol=1e-4)

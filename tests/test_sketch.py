@@ -1,0 +1,95 @@
+"""Core sketch math: Lemma 4.1 exactness, EMA semantics, rank masking."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    SketchConfig, active_mask, ema_activation_matrix, init_sketch_state,
+    make_projections, mask_columns, refresh_projections,
+    sketch_update_single, sketch_update_stack, sketch_memory_bytes,
+)
+
+
+@pytest.fixture
+def cfg():
+    return SketchConfig(rank=3, max_rank=6, beta=0.9, batch_size=16)
+
+
+def _roll(key, cfg, d, n, rank_data=2):
+    U = jax.random.normal(jax.random.fold_in(key, 99), (d, rank_data))
+    return [
+        jax.random.normal(jax.random.fold_in(key, t), (cfg.batch_size,
+                                                       rank_data)) @ U.T
+        for t in range(n)
+    ]
+
+
+def test_lemma_4_1_exact_projection(rng, cfg):
+    """X_s(n) == A_EMA(n) @ Upsilon to machine precision (paper Lemma 4.1)."""
+    d = 24
+    proj = make_projections(rng, cfg, 1)
+    ka = jnp.asarray(cfg.k0)
+    xs = ys = zs = jnp.zeros((d, cfg.k_max))
+    hist = _roll(rng, cfg, d, 12)
+    for a in hist:
+        xs, ys, zs = sketch_update_single(xs, ys, zs, a, a, proj, 0,
+                                          cfg.beta, ka)
+    a_ema = ema_activation_matrix(hist, cfg.beta)
+    want_x = mask_columns(a_ema @ proj.upsilon, ka)
+    want_y = mask_columns(a_ema @ proj.omega, ka)
+    np.testing.assert_allclose(np.asarray(xs), np.asarray(want_x),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ys), np.asarray(want_y),
+                               atol=1e-5)
+
+
+def test_masked_columns_stay_zero(rng, cfg):
+    d = 16
+    proj = make_projections(rng, cfg, 1)
+    ka = jnp.asarray(5)            # active k < k_max
+    xs = ys = zs = jnp.zeros((d, cfg.k_max))
+    for a in _roll(rng, cfg, d, 5):
+        xs, ys, zs = sketch_update_single(xs, ys, zs, a, a, proj, 0,
+                                          cfg.beta, ka)
+    assert float(jnp.abs(xs[:, 5:]).max()) == 0.0
+    assert float(jnp.abs(zs[:, 5:]).max()) == 0.0
+
+
+def test_active_mask():
+    m = active_mask(jnp.asarray(3), 7)
+    np.testing.assert_array_equal(np.asarray(m),
+                                  [1, 1, 1, 0, 0, 0, 0])
+
+
+def test_stack_update_matches_single(rng, cfg):
+    d, L = 12, 3
+    state = init_sketch_state(rng, cfg, L, d)
+    acts = jax.random.normal(rng, (L + 1, cfg.batch_size, d))
+    new = sketch_update_stack(state, acts, cfg.beta)
+    for layer in range(L):
+        xs, ys, zs = sketch_update_single(
+            state.x[layer], state.y[layer], state.z[layer],
+            acts[layer], acts[layer + 1], state.proj, layer, cfg.beta,
+            state.k_active)
+        np.testing.assert_allclose(np.asarray(new.x[layer]),
+                                   np.asarray(xs), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(new.z[layer]),
+                                   np.asarray(zs), atol=1e-6)
+    assert int(new.step) == 1
+
+
+def test_refresh_projections_changes_values_keeps_shapes(rng, cfg):
+    state = init_sketch_state(rng, cfg, 2, 8)
+    state2 = refresh_projections(state, cfg)
+    assert state2.x.shape == state.x.shape
+    assert float(jnp.abs(state2.x).max()) == 0.0
+    assert not np.allclose(np.asarray(state2.proj.upsilon),
+                           np.asarray(state.proj.upsilon))
+    assert int(state2.epoch) == 1
+
+
+def test_sketch_memory_accounting(cfg):
+    b = sketch_memory_bytes(cfg, num_layers=4, width=512)
+    expect = 3 * 4 * 512 * cfg.k_max * 4 + (3 * 16 + 4) * cfg.k_max * 4
+    assert b == expect

@@ -1,0 +1,169 @@
+"""Checkpointing (atomic/keep-N/async/elastic), data pipeline
+determinism+resume, optimizer math, compression, schedules."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.data.pipeline import PipelineConfig, host_batch
+from repro.optim.adamw import AdamWConfig, adamw_update, init_adamw
+from repro.optim.compression import (
+    CompressionConfig, compress_grads, init_error_feedback,
+)
+from repro.optim.schedule import warmup_cosine
+
+
+# -- checkpointer -----------------------------------------------------------
+
+
+def _state(v: float):
+    return {"a": jnp.full((4, 4), v), "b": {"c": jnp.asarray(int(v))}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    ck.save(10, _state(1.0), {"note": "x"})
+    got, meta = ck.restore(_state(0.0))
+    np.testing.assert_allclose(np.asarray(got["a"]), 1.0)
+    assert meta["step"] == 10 and meta["note"] == "x"
+
+
+def test_checkpoint_keep_n_and_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _state(float(s)))
+    dirs = sorted(os.listdir(tmp_path))
+    assert len(dirs) == 2 and ck.latest_step() == 4
+    got, _ = ck.restore(_state(0.0), step=3)
+    np.testing.assert_allclose(np.asarray(got["a"]), 3.0)
+
+
+def test_checkpoint_async_then_restore(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=3)
+    ck.save_async(5, _state(5.0))
+    ck.wait()
+    got, meta = ck.restore(_state(0.0))
+    assert meta["step"] == 5
+    np.testing.assert_allclose(np.asarray(got["a"]), 5.0)
+
+
+def test_checkpoint_resave_same_step(tmp_path):
+    """Periodic + final save at the same step must not collide (regression:
+    os.replace cannot overwrite a non-empty dir)."""
+    ck = Checkpointer(str(tmp_path), keep=3)
+    ck.save(8, _state(1.0))
+    ck.save(8, _state(2.0))
+    got, _ = ck.restore(_state(0.0))
+    np.testing.assert_allclose(np.asarray(got["a"]), 2.0)
+    assert not any(d.endswith(".old") or d.endswith(".tmp")
+                   for d in os.listdir(tmp_path))
+
+
+def test_checkpoint_no_partial_dirs_on_interrupt(tmp_path):
+    """tmp dirs never count as checkpoints (atomic publish)."""
+    ck = Checkpointer(str(tmp_path), keep=3)
+    os.makedirs(os.path.join(tmp_path, "step_0000000009.tmp"))
+    assert ck.latest_step() is None
+    ck.save(1, _state(1.0))
+    assert ck.latest_step() == 1
+
+
+def test_checkpoint_elastic_resharding(tmp_path):
+    """Restore places logical arrays onto a different sharding."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",))
+    ck = Checkpointer(str(tmp_path), keep=1)
+    ck.save(1, _state(2.0))
+    sh = {"a": NamedSharding(mesh, P("data", None)),
+          "b": {"c": NamedSharding(mesh, P())}}
+    got, _ = ck.restore(_state(0.0), shardings=sh)
+    assert got["a"].sharding == sh["a"]
+
+
+# -- data pipeline ----------------------------------------------------------
+
+
+def test_pipeline_deterministic_and_resumable():
+    cfg = PipelineConfig(seed=7, global_batch=4, seq_len=16, vocab=100)
+    a1, b1 = host_batch(cfg, step=3)
+    a2, b2 = host_batch(cfg, step=3)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    a3, _ = host_batch(cfg, step=4)
+    assert not np.array_equal(np.asarray(a1), np.asarray(a3))
+    # labels are next-token shifted
+    np.testing.assert_array_equal(np.asarray(a1[:, 1:]),
+                                  np.asarray(b1[:, :-1]))
+
+
+def test_pipeline_host_sharding_disjoint():
+    cfg = PipelineConfig(seed=7, global_batch=8, seq_len=8, vocab=100,
+                         num_hosts=2)
+    a0, _ = host_batch(cfg, 0, host=0)
+    a1, _ = host_batch(cfg, 0, host=1)
+    assert a0.shape == (4, 8)
+    assert not np.array_equal(np.asarray(a0), np.asarray(a1))
+
+
+# -- optimizer / compression / schedule -------------------------------------
+
+
+def test_adamw_matches_reference_numpy():
+    cfg = AdamWConfig(lr=0.01, b1=0.9, b2=0.999, eps=1e-8,
+                      weight_decay=0.0, grad_clip=0.0)
+    p = {"w": jnp.asarray([1.0, -2.0])}
+    g = {"w": jnp.asarray([0.5, 0.5])}
+    opt = init_adamw(p, cfg)
+    p2, opt2, _ = adamw_update(p, g, opt, cfg)
+    m = 0.1 * 0.5
+    v = 0.001 * 0.25
+    step = (m / 0.1) / (np.sqrt(v / 0.001) + 1e-8)
+    np.testing.assert_allclose(np.asarray(p2["w"]),
+                               np.asarray(p["w"]) - 0.01 * step,
+                               rtol=1e-5)
+
+
+def test_grad_clip_caps_norm():
+    cfg = AdamWConfig(lr=0.0, grad_clip=1.0)
+    p = {"w": jnp.zeros((3,))}
+    g = {"w": jnp.full((3,), 100.0)}
+    opt = init_adamw(p, cfg)
+    _, _, m = adamw_update(p, g, opt, cfg)
+    assert float(m["grad_norm"]) > 1.0   # reported pre-clip norm
+
+
+def test_compression_error_feedback_is_lossless_over_time():
+    """sum of transmitted grads + final residual == sum of raw grads."""
+    cfg = CompressionConfig(topk_frac=0.25, int8=False, min_k=1)
+    g = {"w": jnp.arange(16.0).reshape(4, 4) / 16.0}
+    err = init_error_feedback(g)
+    sent_total = jnp.zeros((4, 4))
+    for _ in range(5):
+        sent, err, _ = compress_grads(g, err, cfg)
+        sent_total = sent_total + sent["w"]
+    total_in = 5 * g["w"]
+    np.testing.assert_allclose(np.asarray(sent_total + err["w"]),
+                               np.asarray(total_in), atol=1e-5)
+
+
+def test_compression_sparsity():
+    cfg = CompressionConfig(topk_frac=0.1, int8=True, min_k=2)
+    g = {"w": jnp.linspace(-1, 1, 100)}
+    err = init_error_feedback(g)
+    sent, _, stats = compress_grads(g, err, cfg)
+    nz = int((np.asarray(sent["w"]) != 0).sum())
+    assert nz <= 10
+    assert stats["compression_ratio"] < 0.5
+
+
+def test_warmup_cosine_shape():
+    assert float(warmup_cosine(jnp.asarray(0),
+                               warmup_steps=10, total_steps=100)) == 0.0
+    mid = float(warmup_cosine(jnp.asarray(10), warmup_steps=10,
+                              total_steps=100))
+    assert abs(mid - 1.0) < 1e-5
+    end = float(warmup_cosine(jnp.asarray(100), warmup_steps=10,
+                              total_steps=100))
+    assert abs(end - 0.1) < 1e-5

@@ -1,0 +1,68 @@
+"""End-to-end system tests: the fault-tolerant training loop with
+checkpoint/restart + the serving engine, on a reduced arch."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.models.transformer import SketchSettings, init_params
+from repro.serve.engine import ServeEngine
+from repro.train.loop import LoopConfig, run_training
+from repro.train.state import RunConfig
+
+
+def _run_cfg():
+    return RunConfig(
+        seq_len=16, global_batch=2,
+        sketch=SketchSettings(enabled=True, k_max=9, beta=0.9,
+                              recon_mode="fast"),
+        warmup_steps=2, total_steps=40)
+
+
+def test_training_loop_end_to_end(tmp_path):
+    cfg = reduced(get_arch("tinyllama-1.1b"))
+    loop = LoopConfig(num_steps=8, ckpt_every=4,
+                      ckpt_dir=str(tmp_path), log_every=100)
+    state, hist = run_training(cfg, _run_cfg(), loop, donate=False)
+    assert len(hist) == 8
+    assert int(state.step) == 8
+    losses = [h["loss"] for h in hist]
+    assert all(np.isfinite(losses))
+
+
+def test_training_restart_resumes_exactly(tmp_path):
+    """Kill after 6 steps; restart runs 6..10 and matches an unbroken
+    0..10 run bit-for-bit (stateless-resumable pipeline + checkpoint)."""
+    cfg = reduced(get_arch("tinyllama-1.1b"))
+    run = _run_cfg()
+    loop_a = LoopConfig(num_steps=6, ckpt_every=3, ckpt_dir=str(
+        tmp_path / "a"), log_every=100)
+    state_a, _ = run_training(cfg, run, loop_a, donate=False)
+    loop_a2 = LoopConfig(num_steps=10, ckpt_every=100, ckpt_dir=str(
+        tmp_path / "a"), log_every=100)
+    state_a2, hist_a2 = run_training(cfg, run, loop_a2, donate=False)
+    assert hist_a2[0]["step"] == 6          # resumed, not restarted
+
+    loop_b = LoopConfig(num_steps=10, ckpt_every=100, ckpt_dir=str(
+        tmp_path / "b"), log_every=100)
+    state_b, _ = run_training(cfg, run, loop_b, donate=False)
+    for a, b in zip(jax.tree.leaves(state_a2.params),
+                    jax.tree.leaves(state_b.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_serve_engine_greedy_matches_forward(rng):
+    from repro.models.transformer import forward
+    cfg = reduced(get_arch("tinyllama-1.1b"))
+    params = init_params(rng, cfg)
+    eng = ServeEngine(cfg=cfg, params=params, max_context=32)
+    prompts = jax.random.randint(rng, (2, 8), 0, cfg.vocab_size)
+    out = eng.generate(prompts, max_new_tokens=4)
+    assert out.shape == (2, 4)
+    # cross-check the first generated token against a plain forward
+    ref = forward(params, prompts, cfg=cfg, mode="train")["logits"]
+    want0 = jnp.argmax(ref[:, -1], axis=-1)
+    np.testing.assert_array_equal(np.asarray(out[:, 0]),
+                                  np.asarray(want0))
