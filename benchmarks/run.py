@@ -24,13 +24,16 @@ def _run(name, main_fn):
 
 def main() -> None:
     from benchmarks import (
-        bench_cifar_hybrid, bench_factored_grad, bench_kernels,
-        bench_memory_complexity, bench_mnist, bench_monitoring,
-        bench_pinn, bench_reconstruction_error,
+        bench_cifar_hybrid, bench_countsketch, bench_factored_grad,
+        bench_kernels, bench_memory_complexity, bench_mnist,
+        bench_monitoring, bench_pinn, bench_reconstruction_error,
     )
     results = {}
     results["kernels"] = _run("bench_kernels (kernel vs oracle)",
                               bench_kernels.main)
+    results["countsketch"] = _run(
+        "bench_countsketch (DP wire bytes + convergence gate)",
+        bench_countsketch.main)
     results["factored"] = _run(
         "bench_factored_grad (beyond-paper low-rank grads)",
         bench_factored_grad.main)

@@ -194,7 +194,7 @@ def sketch_update_single(
 def sketch_update_stack(
     state: SketchState,
     acts: Array,       # (L+1, Nb, d) — activation trajectory A^[0..L]
-    beta: float | None = None,
+    beta: float,       # SketchConfig.beta — callers must thread it
 ) -> SketchState:
     """Update all L layers' sketches from the full activation trajectory.
 
@@ -202,9 +202,11 @@ def sketch_update_stack(
     acts[l+1] (paper: X uses A^[l-1], Y/Z use A^[l]).  The fused Pallas
     path lives in `repro.kernels.ops.sketch_update` and is wired in by the
     training step; this is the pure-jnp reference used everywhere else.
+
+    `beta` is required: pass `SketchConfig.beta` explicitly (an earlier
+    revision silently substituted 0.95 when it was omitted, which let a
+    config's beta diverge from the update actually applied).
     """
-    if beta is None:
-        beta = 0.95
     k_act = state.k_active
 
     def _update_one(x_s, y_s, z_s, a_prev, a_out, psi_l, proj, beta, k_act):

@@ -1,0 +1,7 @@
+# Count-sketch gradient compression: a LINEAR sketch (unlike top-k), so
+# per-worker sketches aggregate exactly under psum — the mergeable
+# collective the DP axis needs (DESIGN: ISSUE 1).
+from repro.countsketch.csvec import (
+    CSVec, make_csvec, zero_table, insert, query, query_all, merge,
+    unsketch, table_bytes, hash_buckets, hash_signs,
+)

@@ -1,0 +1,150 @@
+"""CSVec — a count-sketch of a length-`dim` vector as a JAX pytree.
+
+The sketch is an (r hash rows x c buckets) table; element i of the
+source vector lands in bucket h_j(i) of row j with sign s_j(i).  Both
+hashes are MULTIPLY-SHIFT (Dietzfelbinger et al.): with a_j odd,
+
+    h_j(i) = (a_j * i + b_j)  >>  (32 - log2 c)      (c a power of two)
+    s_j(i) = 1 - 2 * ((a'_j * i + b'_j) >> 31)
+
+All arithmetic is uint32 with natural wraparound — exactly computable
+both in jnp and inside a Pallas kernel (no gather tables in HBM), so the
+fused insert kernel (`repro.kernels.csvec_insert`) and this reference
+agree bit-for-bit on the hash values.
+
+Key properties (tested in tests/test_countsketch.py):
+  * LINEARITY — sketch(g1 + g2) == merge(sketch(g1), sketch(g2)); the
+    table is a linear image of the input, so a `psum` over the DP axis
+    aggregates worker sketches exactly (unlike top-k sparsification).
+  * Heavy hitters — `unsketch` recovers the top-k coordinates by
+    median-of-r magnitude estimate (SketchedSGD, Ivkin et al.).
+
+Shapes are static (dim/rows/cols fixed at construction), so every op
+here composes with jit/vmap/shard_map without recompilation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.ops import segment_sum
+
+Array = jax.Array
+
+_U32 = jnp.uint32
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CSVec:
+    """Count-sketch state. `table` is the only data leaf that changes
+    per step; `params` holds the (4, r) uint32 hash coefficients
+    [a_bucket; b_bucket; a_sign; b_sign] derived from one PRNG key —
+    workers built from the same key share hashes, which is what makes
+    their tables mergeable."""
+
+    table: Array     # (r, c) f32 — the sketch counters
+    params: Array    # (4, r) u32 — multiply-shift hash coefficients
+    dim: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def rows(self) -> int:
+        return self.table.shape[0]
+
+    @property
+    def cols(self) -> int:
+        return self.table.shape[1]
+
+
+def _shift_for(cols: int) -> int:
+    log2c = cols.bit_length() - 1
+    if cols != (1 << log2c):
+        raise ValueError(f"cols must be a power of two, got {cols}")
+    return 32 - log2c
+
+
+def make_csvec(key: Array, dim: int, rows: int, cols: int) -> CSVec:
+    """Zero table + hash coefficients. `a` coefficients are forced odd
+    (multiply-shift is 2-universal only for odd multipliers)."""
+    _shift_for(cols)
+    params = jax.random.bits(key, (4, rows), _U32)
+    odd = params.at[0].set(params[0] | _U32(1)).at[2].set(
+        params[2] | _U32(1))
+    return CSVec(
+        table=jnp.zeros((rows, cols), jnp.float32),
+        params=odd,
+        dim=dim,
+    )
+
+
+def zero_table(cs: CSVec) -> CSVec:
+    return dataclasses.replace(cs, table=jnp.zeros_like(cs.table))
+
+
+def hash_buckets(params: Array, cols: int, idx: Array) -> Array:
+    """(r, n) int32 bucket of each index per hash row."""
+    shift = _U32(_shift_for(cols))
+    i = idx.astype(_U32)[None, :]
+    a = params[0][:, None]
+    b = params[1][:, None]
+    return ((a * i + b) >> shift).astype(jnp.int32)
+
+
+def hash_signs(params: Array, idx: Array) -> Array:
+    """(r, n) f32 in {-1, +1} — top bit of the second hash."""
+    i = idx.astype(_U32)[None, :]
+    a = params[2][:, None]
+    b = params[3][:, None]
+    bit = ((a * i + b) >> _U32(31)).astype(jnp.float32)
+    return 1.0 - 2.0 * bit
+
+
+def insert(cs: CSVec, vec: Array) -> CSVec:
+    """Accumulate `vec` (dim,) into the sketch (pure-jnp reference; the
+    Pallas hot path is `repro.kernels.csvec_insert.csvec_insert`)."""
+    idx = jnp.arange(cs.dim)
+    buckets = hash_buckets(cs.params, cs.cols, idx)          # (r, n)
+    signs = hash_signs(cs.params, idx)                       # (r, n)
+    sv = signs * vec.astype(jnp.float32)[None, :]
+    rows = jax.vmap(
+        lambda s, b: segment_sum(s, b, num_segments=cs.cols)
+    )(sv, buckets)
+    return dataclasses.replace(cs, table=cs.table + rows)
+
+
+def merge(a: CSVec, b: CSVec) -> CSVec:
+    """Exact linear merge: valid iff both sketches share hash params
+    (same construction key), which is the caller's contract."""
+    if a.dim != b.dim or a.table.shape != b.table.shape:
+        raise ValueError("CSVec merge: mismatched sketch geometry")
+    return dataclasses.replace(a, table=a.table + b.table)
+
+
+def query(cs: CSVec, idx: Array) -> Array:
+    """Median-of-r unbiased estimate of vec[idx] (any shape of idx)."""
+    flat = idx.reshape(-1)
+    buckets = hash_buckets(cs.params, cs.cols, flat)         # (r, n)
+    signs = hash_signs(cs.params, flat)
+    est = signs * jnp.take_along_axis(cs.table, buckets, axis=1)
+    return jnp.median(est, axis=0).reshape(idx.shape)
+
+
+def query_all(cs: CSVec) -> Array:
+    """(dim,) estimate of every coordinate."""
+    return query(cs, jnp.arange(cs.dim))
+
+
+def unsketch(cs: CSVec, k: int) -> Array:
+    """Dense (dim,) vector holding the top-k heavy hitters by |estimate|
+    at their estimated values, zero elsewhere. Static k → jit-stable."""
+    est = query_all(cs)
+    k = min(k, cs.dim)
+    _, idx = jax.lax.top_k(jnp.abs(est), k)
+    return jnp.zeros(cs.dim, jnp.float32).at[idx].set(est[idx])
+
+
+def table_bytes(cs: CSVec) -> int:
+    """Bytes a worker puts on the wire per merge (the table only — hash
+    params are derived from a shared key, never transmitted)."""
+    return cs.table.size * cs.table.dtype.itemsize

@@ -3,7 +3,9 @@
 #   sketch_update    fused EMA X/Y/Z update, one HBM pass over A
 #   flash_attention  causal/sliding-window GQA online-softmax tiling
 #   mlstm_chunk      chunkwise stabilized mLSTM with VMEM-resident state
+#   csvec_insert     fused count-sketch insert, one HBM pass over the
+#                    flat gradient updating all r hash rows
 from repro.kernels.ops import (
-    sketch_update, flash_attention, mlstm_chunk,
+    sketch_update, flash_attention, mlstm_chunk, csvec_insert,
     use_pallas, pallas_enabled, interpret_mode,
 )

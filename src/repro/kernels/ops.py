@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels.csvec_insert import csvec_insert
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.mlstm_chunk import mlstm_chunk
 from repro.kernels.sketch_update import sketch_update
@@ -31,6 +32,6 @@ def interpret_mode() -> bool:
 
 
 __all__ = [
-    "sketch_update", "flash_attention", "mlstm_chunk",
+    "sketch_update", "flash_attention", "mlstm_chunk", "csvec_insert",
     "use_pallas", "pallas_enabled", "interpret_mode",
 ]

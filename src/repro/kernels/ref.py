@@ -19,6 +19,17 @@ def sketch_update_ref(a, x_s, y_s, z_s, ups, omg, phi, psi, beta):
     return x_new, y_new, z_new
 
 
+def csvec_insert_ref(table, params, vec):
+    """Count-sketch insert oracle: table (r, c); params (4, r) u32
+    multiply-shift coefficients; vec (n,). Mirrors the shared hash
+    family in countsketch/csvec.py so the Pallas kernel and this ref
+    agree bit-for-bit on buckets/signs."""
+    from repro.countsketch.csvec import CSVec, insert
+
+    cs = CSVec(table=table, params=params, dim=vec.shape[0])
+    return insert(cs, vec).table
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=None):
     """q (B, Hq, S, D); k/v (B, Hkv, S, D) GQA. Returns (B, Hq, S, D)."""
     B, Hq, S, D = q.shape

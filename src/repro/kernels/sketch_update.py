@@ -62,26 +62,30 @@ def sketch_update(a, x_s, y_s, z_s, ups, omg, phi, psi, *,
                   d_blk: int = DEFAULT_D_BLK, interpret: bool = True):
     """Fused EMA update. a (T, d); sketches (d, k); proj (T, k); psi (k,).
 
-    k is padded to a multiple of 128 internally; outputs match the input
-    sketch shapes exactly.
+    k is padded to a multiple of 128 internally; ragged T/d are padded
+    up to the block grid with zeros (zero activation rows contribute
+    nothing to the contraction; padded d rows are sliced off). Outputs
+    match the input sketch shapes exactly.
     """
     T, d = a.shape
     k = x_s.shape[1]
     t_blk = min(t_blk, T)
     d_blk = min(d_blk, d)
-    assert T % t_blk == 0 and d % d_blk == 0, (T, d, t_blk, d_blk)
+    T_pad = -(-T // t_blk) * t_blk
+    d_pad = -(-d // d_blk) * d_blk
     k_pad = -(-k // LANE) * LANE
 
-    def pad_k(m, axis):
-        w = [(0, 0)] * m.ndim
-        w[axis] = (0, k_pad - k)
+    def pad_to(m, sizes):
+        w = [(0, s - m.shape[i]) for i, s in enumerate(sizes)]
         return jnp.pad(m, w)
 
-    x_p, y_p, z_p = (pad_k(m, 1) for m in (x_s, y_s, z_s))
-    ups_p, omg_p, phi_p = (pad_k(m, 1) for m in (ups, omg, phi))
-    psi_p = pad_k(psi, 0)[None, :]                  # (1, k_pad)
+    a = pad_to(a, (T_pad, d_pad))
+    x_p, y_p, z_p = (pad_to(m, (d_pad, k_pad)) for m in (x_s, y_s, z_s))
+    ups_p, omg_p, phi_p = (pad_to(m, (T_pad, k_pad))
+                           for m in (ups, omg, phi))
+    psi_p = pad_to(psi[None, :], (1, k_pad))        # (1, k_pad)
 
-    grid = (d // d_blk, T // t_blk)
+    grid = (d_pad // d_blk, T_pad // t_blk)
     out_spec = pl.BlockSpec((d_blk, k_pad), lambda i, j: (i, 0))
     outs = pl.pallas_call(
         functools.partial(_kernel, beta=beta, n_t_blocks=grid[1]),
@@ -95,7 +99,7 @@ def sketch_update(a, x_s, y_s, z_s, ups, omg, phi, psi, *,
             out_spec, out_spec, out_spec,                        # X/Y/Z in
         ],
         out_specs=[out_spec, out_spec, out_spec],
-        out_shape=[jax.ShapeDtypeStruct((d, k_pad), jnp.float32)] * 3,
+        out_shape=[jax.ShapeDtypeStruct((d_pad, k_pad), jnp.float32)] * 3,
         interpret=interpret,
     )(a, ups_p, omg_p, phi_p, psi_p, x_p, y_p, z_p)
-    return tuple(o[:, :k] for o in outs)
+    return tuple(o[:d, :k] for o in outs)

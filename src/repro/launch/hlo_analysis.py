@@ -75,9 +75,14 @@ class CompStats:
     pending_operands: list = dataclasses.field(default_factory=list)
 
 
+# operands may be bare names (`%p.1`) or carry inline types
+# (`f32[32,64]{1,0} %p.1` — compiled-module text in newer XLA);
+# optionally skip the inline type before capturing the name
 _DOT_RE = re.compile(
     r"\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(\w+\[[\d,]*\])(?:\{[\d,]*\})?"
-    r"\s*dot\(\s*%?([\w\.\-]+)")
+    r"\s*dot\(\s*(?:\w+\[[\d,]*\](?:\{[\d,]*\})?\s+)?%?([\w\.\-]+)")
+_INLINE_TYPE_RE = re.compile(
+    r"(\w+\[[\d,]*\])(?:\{[\d,]*\})?\s+%([\w\.\-]+)")
 _DEF_RE = re.compile(
     r"\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\w+\[[\d,]*\])")
 
@@ -128,6 +133,12 @@ def parse_hlo(text: str) -> dict[str, CompStats]:
         dm = _DEF_RE.match(stripped)
         if dm:
             types[dm.group(1)] = dm.group(2)
+        # harvest inline-typed operand mentions too (compiled text);
+        # a definition's own type always wins over a mention
+        if "(" in stripped:
+            for t, nm in _INLINE_TYPE_RE.findall(
+                    stripped.split("(", 1)[1]):
+                types.setdefault(nm, t)
         # result-type bytes (first shape on the line, after the `=`)
         if "=" in stripped:
             rhs = stripped.split("=", 1)[1]
@@ -144,7 +155,9 @@ def parse_hlo(text: str) -> dict[str, CompStats]:
             elif opname and opname not in _FREE_OPS:
                 # real compute: operand reads resolved in pass 2
                 for nm in op_m.group(2).split(","):
-                    nm = nm.strip().lstrip("%")
+                    # last token strips an inline operand type if present
+                    nm = nm.strip().split()[-1].lstrip("%") \
+                        if nm.strip() else ""
                     if nm:
                         current.pending_operands.append(nm)
         if " dot(" in stripped:

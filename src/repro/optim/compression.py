@@ -1,12 +1,18 @@
 """Gradient compression for the data-parallel axis (DESIGN.md §4).
 
-Top-k sparsification with ERROR FEEDBACK: each step transmits only the
-largest-|g| fraction per tensor; the residual accumulates locally and is
-re-injected next step (unbiased over time — tested for convergence
-preservation in tests/test_optim.py). int8 quantization halves/quarters
-DP all-reduce bytes; the collective-term effect shows up in §Perf.
+Two modes, selected by `CompressionConfig.mode`:
 
-Shapes are static (k from a fixed fraction) so this composes with jit.
+  "topk"        per-tensor top-k sparsification with error feedback.
+                NOT mergeable: each worker's top-k support differs, so
+                the collective must ship (index, value) pairs and the
+                aggregate is approximate.
+  "countsketch" linear count-sketch of the flat gradient (SketchedSGD;
+                see optim/sketched_sgd.py). Sketches aggregate EXACTLY
+                under psum — the DP wire carries a fixed O(r*c) table
+                regardless of worker count — and top-k heavy hitters
+                are recovered after the merge.
+
+Shapes are static in both modes so compression composes with jit.
 """
 from __future__ import annotations
 
@@ -18,12 +24,32 @@ import jax.numpy as jnp
 
 @dataclasses.dataclass(frozen=True)
 class CompressionConfig:
+    mode: str = "topk"              # "topk" | "countsketch"
     topk_frac: float = 0.05         # fraction of entries transmitted
     int8: bool = True               # quantize transmitted values
     min_k: int = 16
+    # count-sketch geometry (mode == "countsketch")
+    cs_rows: int = 5                # r hash rows (median-of-r estimate)
+    cs_cols: int = 2048             # c buckets per row (power of two)
+    cs_k: int = 256                 # heavy hitters recovered per step
+    cs_momentum: float = 0.9        # momentum on the sketched residual
+    cs_seed: int = 0                # hash-family key, shared by workers
+
+    def __post_init__(self):
+        if self.mode not in ("topk", "countsketch"):
+            raise ValueError(
+                f"CompressionConfig.mode must be 'topk' or "
+                f"'countsketch', got {self.mode!r}")
+        if self.mode == "countsketch":
+            if self.cs_cols & (self.cs_cols - 1):
+                raise ValueError(
+                    f"cs_cols must be a power of two, got {self.cs_cols}")
 
 
-def init_error_feedback(params):
+def init_error_feedback(params, cfg: "CompressionConfig | None" = None):
+    if cfg is not None and cfg.mode == "countsketch":
+        from repro.optim.sketched_sgd import init_countsketch_state
+        return init_countsketch_state(params)
     return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
 
@@ -61,6 +87,11 @@ def compress_grads(grads, err_state, cfg: CompressionConfig):
 
 
 def compressed_bytes(num_params: int, cfg: CompressionConfig) -> int:
-    """Bytes on the DP wire per step (values + int32 indices)."""
+    """Bytes on the DP wire per step.
+
+    topk ships (values + int32 indices); countsketch ships only the
+    (r, c) f32 table — independent of num_params AND of worker count."""
+    if cfg.mode == "countsketch":
+        return cfg.cs_rows * cfg.cs_cols * 4
     k = int(num_params * cfg.topk_frac)
     return k * ((1 if cfg.int8 else 4) + 4)

@@ -6,13 +6,39 @@ axis (kv_heads < TP). Each shard computes attention over its cache slice
 plus the local (max, sumexp) statistics; the merge is a log-sum-exp psum
 over the model axis — numerically identical to attending over the full
 cache (tested in tests/test_parallel.py).
+
+psum_csvec: the count-sketch gradient all-reduce. Count sketches are
+LINEAR, so a psum of worker tables IS the sketch of the summed
+gradients — exact merge with O(r*c) bytes on the wire regardless of
+model size or worker count (tested in tests/test_countsketch.py).
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 
 Array = jax.Array
+
+
+def psum_csvec(cs, axis_name: str):
+    """Merge worker count-sketches across `axis_name` (exact, linear).
+
+    Workers MUST share the hash family (same construction key) — the
+    (4, r) `params` leaf is replicated, never reduced."""
+    return dataclasses.replace(
+        cs, table=jax.lax.psum(cs.table, axis_name))
+
+
+def merge_csvecs(sketches: list):
+    """Host-side reference merge of a list of worker sketches (tests) —
+    the collective-free analogue of `psum_csvec`."""
+    import functools
+
+    from repro.countsketch.csvec import merge
+
+    return functools.reduce(merge, sketches)
 
 
 def partial_attn_stats(q: Array, k_shard: Array, v_shard: Array,

@@ -32,6 +32,12 @@ class RunConfig:
     compression: CompressionConfig | None = None
     monitor_window: int = 32
     nan_guard: bool = True
+    # Name of the data-parallel mesh axis when the step runs under
+    # shard_map/pmap: countsketch compression then psums the O(r*c)
+    # sketch table across it instead of the dense gradient. None (the
+    # default) is the single-program case — jit's implicit collectives
+    # handle the dense path, and countsketch runs its W=1 special case.
+    dp_axis_name: str | None = None
 
 
 @jax.tree_util.register_dataclass
@@ -52,7 +58,7 @@ def init_train_state(key, cfg, run: RunConfig) -> TrainState:
     opt = init_adamw(params, run.optimizer)
     if run.compression is not None:
         from repro.optim.compression import init_error_feedback
-        opt["err"] = init_error_feedback(params)
+        opt["err"] = init_error_feedback(params, run.compression)
     n_tokens = run.global_batch * run.seq_len
     sketch = init_lm_sketch_state(ks, cfg, run.sketch, n_tokens)
     n_groups = max(1, len(sketch_groups(cfg)))

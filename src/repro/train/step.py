@@ -12,6 +12,7 @@ from repro.core.monitor import monitor_record, stack_metrics
 from repro.models.transformer import forward
 from repro.optim.adamw import adamw_update
 from repro.optim.compression import compress_grads, init_error_feedback
+from repro.optim.sketched_sgd import compress_grads_countsketch
 from repro.optim.schedule import warmup_cosine
 from repro.parallel.sharding import constrain
 from repro.train.state import RunConfig, TrainState
@@ -46,8 +47,15 @@ def make_train_step(cfg: ArchConfig, run: RunConfig):
 
         new_err = None
         if run.compression is not None:
-            grads, new_err, _ = compress_grads(
-                grads, state.opt["err"], run.compression)
+            if run.compression.mode == "countsketch":
+                # Mergeable path: workers exchange an O(r*c) linear
+                # sketch (exact under psum) instead of the dense grad.
+                grads, new_err, _ = compress_grads_countsketch(
+                    grads, state.opt["err"], run.compression,
+                    axis_name=run.dp_axis_name)
+            else:
+                grads, new_err, _ = compress_grads(
+                    grads, state.opt["err"], run.compression)
 
         lr_scale = warmup_cosine(
             state.step, warmup_steps=run.warmup_steps,

@@ -8,6 +8,13 @@ import pytest
 jax.config.update("jax_enable_x64", False)
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running distributed/e2e tests (deselect with "
+        '-m "not slow")')
+
+
 @pytest.fixture
 def rng():
     return jax.random.PRNGKey(0)

@@ -1,0 +1,329 @@
+"""Count-sketch gradient compression subsystem (ISSUE 1 gates).
+
+Covers: Pallas csvec_insert vs jnp reference parity (interpret mode),
+sketch LINEARITY (W-worker merge == sketch of summed gradients — exact
+on integer-valued grads where float addition is associative), error-
+feedback mass conservation, heavy-hitter recovery on a heavy-tailed
+vector, and the countsketch train-step path end to end.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.countsketch import (
+    insert, make_csvec, merge, query, query_all, table_bytes, unsketch,
+    zero_table,
+)
+from repro.kernels.csvec_insert import csvec_insert
+from repro.kernels.ref import csvec_insert_ref
+from repro.optim.compression import CompressionConfig, compressed_bytes
+from repro.optim.sketched_sgd import (
+    compress_grads_countsketch, flat_dim, init_countsketch_state,
+)
+from repro.parallel.collectives import merge_csvecs
+
+
+# -- kernel vs reference parity ----------------------------------------------
+
+
+@pytest.mark.parametrize("dim,rows,cols,blk", [
+    (1000, 3, 128, 512),       # dim < blk after clamping
+    (5000, 5, 256, 1024),      # ragged final block
+    (70000, 3, 512, 2048),     # many blocks
+    (4096, 7, 1024, 2048),     # wide table, exact block multiple
+])
+def test_csvec_insert_kernel_matches_ref(rng, dim, rows, cols, blk):
+    cs = make_csvec(rng, dim=dim, rows=rows, cols=cols)
+    v = jax.random.normal(jax.random.fold_in(rng, dim), (dim,))
+    want = csvec_insert_ref(cs.table, cs.params, v)
+    got = csvec_insert(cs.table, cs.params, v, blk=blk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_csvec_insert_accumulates_onto_existing_table(rng):
+    cs = make_csvec(rng, dim=2000, rows=3, cols=256)
+    v1 = jax.random.normal(jax.random.fold_in(rng, 1), (2000,))
+    v2 = jax.random.normal(jax.random.fold_in(rng, 2), (2000,))
+    t1 = csvec_insert(cs.table, cs.params, v1)
+    t12 = csvec_insert(t1, cs.params, v2)
+    want = insert(insert(cs, v1), v2).table
+    np.testing.assert_allclose(np.asarray(t12), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+# -- linearity / mergeable collectives ---------------------------------------
+
+
+def test_merge_of_worker_sketches_is_sketch_of_sum_exact(rng):
+    """W-worker merged sketch bitwise-matches the single sketch of the
+    summed gradients. Integer-valued grads make float addition exact, so
+    the linearity identity holds BITWISE, not just approximately."""
+    W, dim = 4, 10000
+    cs0 = make_csvec(rng, dim=dim, rows=5, cols=512)
+    grads = [
+        jax.random.randint(jax.random.fold_in(rng, w), (dim,), -64, 64
+                           ).astype(jnp.float32)
+        for w in range(W)
+    ]
+    merged = merge_csvecs([insert(cs0, g) for g in grads])
+    single = insert(cs0, sum(grads))
+    np.testing.assert_array_equal(np.asarray(merged.table),
+                                  np.asarray(single.table))
+
+
+def test_merge_linearity_float_close(rng):
+    """Same identity on arbitrary float grads: exact up to float
+    summation order."""
+    W, dim = 3, 8192
+    cs0 = make_csvec(rng, dim=dim, rows=3, cols=256)
+    grads = [jax.random.normal(jax.random.fold_in(rng, w), (dim,))
+             for w in range(W)]
+    merged = merge_csvecs([insert(cs0, g) for g in grads])
+    single = insert(cs0, sum(grads))
+    np.testing.assert_allclose(np.asarray(merged.table),
+                               np.asarray(single.table),
+                               atol=1e-4, rtol=1e-5)
+
+
+def test_merge_rejects_mismatched_geometry(rng):
+    a = make_csvec(rng, dim=100, rows=3, cols=128)
+    b = make_csvec(rng, dim=100, rows=5, cols=128)
+    with pytest.raises(ValueError):
+        merge(a, b)
+
+
+def test_query_is_unbiased_scale(rng):
+    """Median-of-r estimates track the true values on a sparse vector
+    (few collisions -> near-exact recovery)."""
+    dim = 4096
+    cs = make_csvec(rng, dim=dim, rows=5, cols=1024)
+    idx = jnp.arange(0, dim, 173)
+    v = jnp.zeros(dim).at[idx].set(
+        jax.random.normal(rng, (idx.shape[0],)) * 10.0)
+    est = query(insert(cs, v), idx)
+    np.testing.assert_allclose(np.asarray(est), np.asarray(v[idx]),
+                               atol=1e-3, rtol=0.3)
+
+
+# -- heavy hitters ------------------------------------------------------------
+
+
+def test_heavy_hitter_recovery_heavy_tailed(rng):
+    """On a heavy-tailed vector (Zipf-like magnitudes) the top-k by
+    |median estimate| recovers most true heavy coordinates."""
+    dim, n_heavy = 20000, 20
+    cs = make_csvec(rng, dim=dim, rows=5, cols=2048)
+    noise = 0.01 * jax.random.normal(rng, (dim,))
+    heavy_idx = jax.random.choice(
+        jax.random.fold_in(rng, 1), dim, (n_heavy,), replace=False)
+    heavy_val = 100.0 / (1 + jnp.arange(n_heavy)) ** 0.8
+    sgn = jnp.where(
+        jax.random.bernoulli(jax.random.fold_in(rng, 2), 0.5,
+                             (n_heavy,)), 1.0, -1.0)
+    v = noise.at[heavy_idx].set(heavy_val * sgn)
+    rec = unsketch(insert(cs, v), k=2 * n_heavy)
+    found = set(np.flatnonzero(np.asarray(rec)).tolist())
+    hits = len(found & set(np.asarray(heavy_idx).tolist()))
+    assert hits >= int(0.8 * n_heavy), (hits, n_heavy)
+    # recovered values approximate the true ones
+    got = np.asarray(rec)[np.asarray(heavy_idx)]
+    want = np.asarray(v)[np.asarray(heavy_idx)]
+    mask = got != 0
+    np.testing.assert_allclose(got[mask], want[mask], atol=1.0, rtol=0.2)
+
+
+# -- error feedback -----------------------------------------------------------
+
+
+def _toy_grads(key, shapes=((64, 32), (512,), (16, 16, 4))):
+    return {f"p{i}": jax.random.normal(jax.random.fold_in(key, i), s)
+            for i, s in enumerate(shapes)}
+
+
+def test_error_feedback_mass_conservation(rng):
+    """Residual-subtraction error feedback: v_new + update == v_old + u
+    exactly (unsent mass — including sketch estimation error — stays
+    local and re-injects next step)."""
+    cfg = CompressionConfig(mode="countsketch", cs_rows=5, cs_cols=512,
+                            cs_k=64, cs_momentum=0.9)
+    grads = _toy_grads(rng)
+    err = init_countsketch_state(grads)
+    comp, new_err, _ = compress_grads_countsketch(grads, err, cfg)
+
+    from jax.flatten_util import ravel_pytree
+    flat_g, _ = ravel_pytree(grads)
+    flat_c, _ = ravel_pytree(comp)
+    u = cfg.cs_momentum * err["u"] + flat_g        # step's accumulator
+    v_pre = err["v"] + u
+    np.testing.assert_allclose(
+        np.asarray(new_err["v"] + flat_c), np.asarray(v_pre),
+        atol=1e-6, rtol=1e-6)
+    # momentum zeroed exactly on transmitted coordinates
+    sent = np.asarray(flat_c) != 0
+    assert sent.sum() <= cfg.cs_k
+    assert np.all(np.asarray(new_err["u"])[sent] == 0.0)
+    np.testing.assert_array_equal(np.asarray(new_err["u"])[~sent],
+                                  np.asarray(u)[~sent])
+
+
+def test_error_feedback_converges_on_fixed_gradient(rng):
+    """Feeding the same sparse gradient repeatedly, the transmitted mass
+    catches up with the true gradient (error feedback is unbiased over
+    time): cumulative update approaches step * g on heavy coords."""
+    cfg = CompressionConfig(mode="countsketch", cs_rows=5, cs_cols=1024,
+                            cs_k=32, cs_momentum=0.0)
+    g = {"w": jnp.zeros(5000).at[jnp.arange(0, 5000, 250)].set(5.0)}
+    err = init_countsketch_state(g)
+    total = jnp.zeros(5000)
+    steps = 10
+    for _ in range(steps):
+        comp, err, _ = compress_grads_countsketch(g, err, cfg)
+        total = total + comp["w"]
+    heavy = np.arange(0, 5000, 250)
+    np.testing.assert_allclose(np.asarray(total)[heavy],
+                               steps * 5.0, rtol=0.1)
+
+
+# -- wire accounting + train-step wiring -------------------------------------
+
+
+def test_compressed_bytes_countsketch_independent_of_dim():
+    cfg = CompressionConfig(mode="countsketch", cs_rows=5, cs_cols=2048)
+    assert compressed_bytes(10 ** 6, cfg) == 5 * 2048 * 4
+    assert compressed_bytes(10 ** 9, cfg) == 5 * 2048 * 4
+
+
+def test_table_bytes_matches_config(rng):
+    cs = make_csvec(rng, dim=999, rows=3, cols=128)
+    assert table_bytes(cs) == 3 * 128 * 4
+
+
+def test_countsketch_train_step_runs_and_descends():
+    from repro.configs import get_arch, reduced
+    from repro.data.synthetic import lm_batch
+    from repro.models.transformer import SketchSettings
+    from repro.train.state import RunConfig, init_train_state
+    from repro.train.step import make_train_step
+
+    cfg = reduced(get_arch("tinyllama-1.1b"))
+    ccfg = CompressionConfig(mode="countsketch", cs_rows=5,
+                             cs_cols=2048, cs_k=512)
+    run = RunConfig(seq_len=16, global_batch=4, compression=ccfg,
+                    sketch=SketchSettings(enabled=False))
+    key = jax.random.PRNGKey(0)
+    state = init_train_state(key, cfg, run)
+    assert set(state.opt["err"]) == {"u", "v"}
+    assert state.opt["err"]["u"].shape == (flat_dim(state.params),)
+    step = jax.jit(make_train_step(cfg, run))
+    tokens, labels = lm_batch(key, 4, 16, cfg.vocab_size)
+    losses = []
+    for i in range(8):
+        state, m = step(state, {"tokens": tokens, "labels": labels})
+        losses.append(float(m["loss"]))
+        assert np.isfinite(losses[-1])
+    assert losses[-1] < losses[0]  # memorizing one batch must descend
+
+
+def test_countsketch_psum_path_under_shard_map(rng):
+    """The dp_axis_name path: a 1-device shard_map exercises the psum
+    merge wiring (W=1 — psum identity) and must match the axis-free
+    path exactly."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    cfg = CompressionConfig(mode="countsketch", cs_rows=3, cs_cols=256,
+                            cs_k=32)
+    grads = _toy_grads(rng, shapes=((128,), (32, 8)))
+    err = init_countsketch_state(grads)
+    want, want_err, _ = compress_grads_countsketch(grads, err, cfg)
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    fn = shard_map(
+        lambda g, e: compress_grads_countsketch(
+            g, e, cfg, axis_name="data")[:2],
+        mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
+        check_rep=False)
+    got, got_err = fn(grads, err)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6)
+    for a, b in zip(jax.tree.leaves(got_err), jax.tree.leaves(want_err)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6)
+
+
+@pytest.mark.slow
+def test_countsketch_psum_matches_single_worker_on_4_devices():
+    """Real W=4 psum merge on fake CPU devices (subprocess, same pattern
+    as test_distributed): compressing per-worker grad shards under
+    shard_map must equal compressing the worker-mean gradient directly
+    — up to sketch-table float summation order."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    code = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.optim.compression import CompressionConfig
+        from repro.optim.sketched_sgd import (
+            compress_grads_countsketch, init_countsketch_state)
+
+        W, dim = 4, 4096
+        cfg = CompressionConfig(mode="countsketch", cs_rows=5,
+                                cs_cols=512, cs_k=128)
+        key = jax.random.PRNGKey(0)
+        worker_g = jax.random.normal(key, (W, dim))   # (W, D) shards
+        err = init_countsketch_state({"w": worker_g[0]})
+
+        mesh = Mesh(np.array(jax.devices()), ("data",))
+        fn = shard_map(
+            lambda g, e: compress_grads_countsketch(
+                {"w": g.reshape(dim)}, e, cfg, axis_name="data")[0]["w"],
+            mesh=mesh, in_specs=(P("data"), P()), out_specs=P(),
+            check_rep=False)
+        got = fn(worker_g, err)
+
+        want = compress_grads_countsketch(
+            {"w": worker_g.mean(0)}, err, cfg)[0]["w"]
+        # psum sums tables; the single-worker path sketches the mean —
+        # worker-count normalization must line up
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-4, rtol=1e-4)
+        print("OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", code],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "OK" in out.stdout
+
+
+def test_zero_table_and_hash_params_deterministic(rng):
+    cs1 = make_csvec(rng, dim=500, rows=4, cols=128)
+    cs2 = make_csvec(rng, dim=500, rows=4, cols=128)
+    np.testing.assert_array_equal(np.asarray(cs1.params),
+                                  np.asarray(cs2.params))
+    v = jax.random.normal(rng, (500,))
+    filled = insert(cs1, v)
+    assert float(jnp.abs(zero_table(filled).table).max()) == 0.0
+    # a is odd in both hash rows (2-universality precondition)
+    assert np.all(np.asarray(cs1.params)[0] % 2 == 1)
+    assert np.all(np.asarray(cs1.params)[2] % 2 == 1)
+
+
+def test_query_all_shape_and_cols_validation(rng):
+    with pytest.raises(ValueError):
+        make_csvec(rng, dim=10, rows=2, cols=100)   # not a power of two
+    cs = make_csvec(rng, dim=300, rows=3, cols=128)
+    assert query_all(insert(cs, jnp.ones(300))).shape == (300,)

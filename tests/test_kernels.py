@@ -12,7 +12,9 @@ from repro.kernels.ref import (
 
 
 @pytest.mark.parametrize("T,d,k", [(128, 128, 5), (256, 128, 9),
-                                   (128, 256, 33), (512, 128, 17)])
+                                   (128, 256, 33), (512, 128, 17),
+                                   # ragged shapes: padded internally
+                                   (130, 96, 7), (300, 192, 9)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_sketch_update_sweep(rng, T, d, k, dtype):
     ks = jax.random.split(rng, 8)
