@@ -1,23 +1,40 @@
-"""Count-sketch DP compression benchmark (ISSUE 1 acceptance gate).
+"""Count-sketch DP compression benchmark (ISSUE 1 + ISSUE 2 gates).
 
-Three sections:
+Sections:
 
   1. kernel      fused Pallas csvec_insert vs jnp reference: max error
                  + interpret-mode call timing (CPU wall time is not the
                  TPU target metric — parity is the point here).
-  2. wire        per-step all-reduce bytes: dense psum vs top-k vs the
-                 count-sketch table. The sketch must be <= 10% of dense
-                 — AND is invariant to worker count, since psum merges
-                 tables without concatenating (unlike top-k indices).
-  3. convergence the synthetic LM task trained with dense grads, top-k
+  2. streaming   chunked heavy-hitter recovery vs the dense query_all
+                 oracle: bit-exact candidate selection + peak
+                 intermediate sizes from the jaxprs (O(chunk) vs
+                 O(r * D)).
+  3. wire        per-step all-reduce bytes: dense psum vs top-k vs the
+                 count-sketch table (+ optional p2 value round). The
+                 sketch must be <= 10% of dense — AND is invariant to
+                 worker count, since psum merges tables without
+                 concatenating (unlike top-k indices).
+  4. collectives per-collective wall time on a real W=4 shard_map mesh
+                 (subprocess with 4 fake CPU devices): dense grad pmean
+                 vs sketch-table psum vs the p2 value exchange.
+  5. convergence the synthetic LM task trained with dense grads, top-k
                  and countsketch compression; final losses must match
                  within tolerance while countsketch ships ~10x fewer
                  bytes.
+  6. w4_gate     ISSUE 2 acceptance: a REAL W=4 shard_map train run
+                 with countsketch + p2 exchange must match the dense-
+                 pmean W=4 run's final loss within tolerance at <= 10%
+                 of its wire bytes.
 
 Run: PYTHONPATH=src python -m benchmarks.bench_countsketch
+(sections 4 and 6 spawn subprocesses with their own XLA_FLAGS).
 """
 from __future__ import annotations
 
+import os
+import subprocess
+import sys
+import textwrap
 import time
 
 import jax
@@ -27,6 +44,7 @@ import jax.numpy as jnp
 TOL = 0.5          # matched-final-loss tolerance (nats) on the LM task
 STEPS = 40
 LAST = 5           # average the last LAST losses
+W4_STEPS = 30      # steps for the W=4 shard_map gate run
 
 
 def _timeit(fn, *args, n=3):
@@ -58,6 +76,40 @@ def bench_kernel():
     return [("csvec_insert", f"rel_err={rel:.2e}",
              f"interpret_us={us:.0f}",
              f"hbm_saving={1 - hbm_fused / hbm_naive:.2f}")]
+
+
+def bench_streaming():
+    from repro.countsketch import insert, make_csvec, topk_streaming, \
+        unsketch
+    from repro.kernels.csvec_topk import csvec_topk
+    from repro.kernels.ref import csvec_topk_ref
+
+    key = jax.random.PRNGKey(1)
+    dim, rows, cols, k, chunk = 200_000, 5, 2048, 256, 16384
+    cs = insert(make_csvec(key, dim=dim, rows=rows, cols=cols),
+                jax.random.normal(jax.random.fold_in(key, 2),
+                                  (dim,)) ** 3)
+    want_v, want_i = csvec_topk_ref(cs.table, cs.params, dim, k)
+    got_v, got_i = topk_streaming(cs, k, chunk=chunk)
+    exact = bool((got_i == want_i).all()) and bool((got_v == want_v).all())
+    ker_v, ker_i = csvec_topk(cs.table, cs.params, dim=dim, k=k,
+                              chunk=chunk)
+    kernel_exact = bool((ker_i == want_i).all())
+
+    us_s = _timeit(lambda t: topk_streaming(
+        type(cs)(table=t, params=cs.params, dim=dim), k, chunk=chunk),
+        cs.table)
+    us_d = _timeit(lambda t: unsketch(
+        type(cs)(table=t, params=cs.params, dim=dim), k), cs.table)
+    # peak intermediate: streaming O(r*chunk), dense O(r*dim)
+    return [
+        ("streaming_topk", f"bit_exact={exact}", f"us={us_s:.0f}",
+         f"peak_elems~{rows * chunk}"),
+        ("dense_unsketch", "oracle", f"us={us_d:.0f}",
+         f"peak_elems~{rows * dim}"),
+        ("pallas_csvec_topk", f"candidates_exact={kernel_exact}",
+         "interpret", f"chunk={chunk}"),
+    ]
 
 
 def bench_wire(num_params: int, ccfg, tcfg):
@@ -116,6 +168,118 @@ def bench_convergence(ccfg, tcfg):
     return out
 
 
+def _run_sub(code: str, n_devices: int = 4, timeout: int = 900):
+    """Run a benchmark snippet in a subprocess with its own fake-device
+    XLA_FLAGS (the parent already initialized jax with 1 device)."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    if out.returncode != 0:
+        raise RuntimeError(out.stderr[-4000:])
+    return [l for l in out.stdout.splitlines() if l.startswith("ROW,")]
+
+
+def bench_collectives():
+    """Per-collective wall time on a real W=4 shard_map mesh: the dense
+    O(D) gradient pmean the sketch replaces, the O(r*c) table psum, and
+    the O(p2*k) second-round value psum."""
+    rows = _run_sub("""
+        import time
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh, PartitionSpec as P
+
+        mesh = Mesh(np.array(jax.devices()), ("data",))
+        D, r, c, p2k = 1_000_000, 5, 2048, 512
+
+        def timed(fn, x, n=20):
+            f = jax.jit(shard_map(fn, mesh=mesh, in_specs=P(),
+                                  out_specs=P(), check_rep=False))
+            jax.block_until_ready(f(x))
+            t0 = time.perf_counter()
+            for _ in range(n):
+                jax.block_until_ready(f(x))
+            return (time.perf_counter() - t0) / n * 1e6
+
+        g = jax.random.normal(jax.random.PRNGKey(0), (D,))
+        tab = jax.random.normal(jax.random.PRNGKey(1), (r, c))
+        vals = jax.random.normal(jax.random.PRNGKey(2), (p2k,))
+        us_d = timed(lambda x: jax.lax.pmean(x, "data"), g)
+        us_t = timed(lambda x: jax.lax.psum(x, "data"), tab)
+        us_p = timed(lambda x: jax.lax.psum(x, "data"), vals)
+        print(f"ROW,dense_grad_pmean,{us_d:.0f}us,{D * 4}B W=4")
+        print(f"ROW,sketch_table_psum,{us_t:.0f}us,{r * c * 4}B W=4")
+        print(f"ROW,p2_value_psum,{us_p:.0f}us,{p2k * 4}B W=4")
+    """)
+    return [tuple(r.split(",")[1:]) for r in rows]
+
+
+def bench_w4_gate():
+    """ISSUE 2 acceptance: W=4 shard_map LM training, countsketch + p2
+    vs the dense-pmean DP baseline — matched final loss at <= 10% of
+    the dense wire bytes."""
+    rows = _run_sub(f"""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.configs import get_arch, reduced
+        from repro.data.synthetic import lm_batch
+        from repro.models.transformer import SketchSettings
+        from repro.optim.compression import (
+            CompressionConfig, compressed_bytes)
+        from repro.optim.sketched_sgd import flat_dim
+        from repro.train.state import RunConfig, init_train_state
+        from repro.train.step import make_dp_train_step
+
+        STEPS, LAST = {W4_STEPS}, {LAST}
+        mesh = Mesh(np.array(jax.devices()), ("data",))
+        cfg = reduced(get_arch("tinyllama-1.1b"))
+        ccfg = CompressionConfig(mode="countsketch", cs_rows=5,
+                                 cs_cols=1024, cs_k=2048,
+                                 cs_momentum=0.0, cs_p2=2)
+        base = RunConfig(seq_len=32, global_batch=8,
+                         sketch=SketchSettings(enabled=False),
+                         warmup_steps=5, total_steps=STEPS,
+                         dp_axis_name="data")
+        key = jax.random.PRNGKey(0)
+        finals = {{}}
+        for name, comp in (("dense", None), ("countsketch_p2", ccfg)):
+            run = dataclasses.replace(base, compression=comp)
+            state = init_train_state(key, cfg, run)
+            state = jax.device_put(state, NamedSharding(mesh, P()))
+            step = jax.jit(make_dp_train_step(cfg, run, mesh))
+            losses = []
+            for s in range(STEPS):
+                tok, lab = lm_batch(jax.random.fold_in(key, s), 8, 32,
+                                    cfg.vocab_size)
+                state, m = step(state, {{"tokens": tok, "labels": lab}})
+                losses.append(float(m["loss"]))
+            finals[name] = sum(losses[-LAST:]) / LAST
+            d = flat_dim(state.params)
+        dense_b = d * 4
+        cs_b = compressed_bytes(d, ccfg)
+        ratio = cs_b / dense_b
+        gap = abs(finals["countsketch_p2"] - finals["dense"])
+        print(f"ROW,final_loss_dense_w4,{{finals['dense']:.4f}},"
+              f"{{STEPS}} steps")
+        print(f"ROW,final_loss_countsketch_p2_w4,"
+              f"{{finals['countsketch_p2']:.4f}},{{STEPS}} steps")
+        print(f"ROW,w4_wire_ratio,{{ratio:.4f}},{{cs_b}}B vs "
+              f"{{dense_b}}B per step per worker")
+        print(f"ROW,w4_loss_gap,{{gap:.4f}},tolerance={TOL}")
+        assert ratio <= 0.10, (cs_b, dense_b)
+        assert gap <= {TOL}, finals
+        print("ROW,w4_gate,PASS,p2 exchange on; wire<=10% dense at "
+              "matched loss")
+    """)
+    return [tuple(r.split(",")[1:]) for r in rows]
+
+
 def main():
     from repro.optim.compression import CompressionConfig
     from repro.optim.sketched_sgd import countsketch_wire_bytes
@@ -127,11 +291,16 @@ def main():
     print("section,metric,value,notes")
     for row in bench_kernel():
         print(",".join(("kernel",) + row))
+    for row in bench_streaming():
+        print(",".join(("streaming",) + row))
 
     num_params = 106_816          # reduced tinyllama (the LM task below)
     for name, nbytes, ratio, note in bench_wire(num_params, ccfg, tcfg):
         print(f"wire,{name},{nbytes}B,ratio={ratio:.3f} ({note})")
     assert countsketch_wire_bytes(ccfg) == ccfg.cs_rows * ccfg.cs_cols * 4
+
+    for row in bench_collectives():
+        print(",".join(("collectives",) + row))
 
     finals = bench_convergence(ccfg, tcfg)
     for name, loss in finals.items():
@@ -145,6 +314,9 @@ def main():
     print("convergence,gate,PASS,"
           f"bytes ratio {countsketch_wire_bytes(ccfg) / (num_params * 4):.3f}"
           " <= 0.10 at matched final loss")
+
+    for row in bench_w4_gate():
+        print(",".join(("w4",) + row))
 
 
 if __name__ == "__main__":

@@ -112,13 +112,24 @@ class PathologyThresholds:
     explode_norm: float = 1e6
     stagnation_rel: float = 1e-3     # max relative change over window
     collapse_frac: float = 0.45      # stable rank < frac * k -> collapsed
+    min_fill: int = 4                # window-statistic flags stay False
+    #                                  until the ring holds this many
+    #                                  readings (a 1-reading buffer has
+    #                                  max == min -> spurious stagnation)
 
 
 def detect_pathologies(
     state: MonitorState, k_active: int,
     th: PathologyThresholds = PathologyThresholds(),
 ) -> dict[str, Array]:
-    """Boolean (L,) flags per pathology, from the ring buffer only."""
+    """Boolean (L,) flags per pathology, from the ring buffer only.
+
+    Flags that compare statistics ACROSS the window (stagnation,
+    diversity collapse) are gated until the buffer holds at least
+    `th.min_fill` readings: a warming-up ring has rel_span == 0 and an
+    unsettled stable-rank mean, which would otherwise flag healthy runs
+    on step one. Point-in-time flags (vanishing/exploding) need no
+    warm-up and fire immediately."""
     buf = state.buffer                                 # (W, L, M)
     n = jnp.minimum(state.count, buf.shape[0]).astype(jnp.float32)
     n = jnp.maximum(n, 1.0)
@@ -130,9 +141,10 @@ def detect_pathologies(
     min_norm = jnp.where(valid[..., 0], buf[..., 0], jnp.inf).min(0)
     sr = jnp.where(valid[..., 0], buf[..., 1], 0.0).sum(0) / n
     rel_span = (max_norm - min_norm) / jnp.maximum(mean_norm, 1e-30)
+    warmed = state.count >= jnp.minimum(th.min_fill, buf.shape[0])
     return {
         "vanishing": mean_norm < th.vanish_norm,
         "exploding": max_norm > th.explode_norm,
-        "stagnating": rel_span < th.stagnation_rel,
-        "diversity_collapse": sr < th.collapse_frac * k_active,
+        "stagnating": warmed & (rel_span < th.stagnation_rel),
+        "diversity_collapse": warmed & (sr < th.collapse_frac * k_active),
     }

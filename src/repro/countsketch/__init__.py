@@ -2,6 +2,7 @@
 # per-worker sketches aggregate exactly under psum — the mergeable
 # collective the DP axis needs (DESIGN: ISSUE 1).
 from repro.countsketch.csvec import (
-    CSVec, make_csvec, zero_table, insert, query, query_all, merge,
-    unsketch, table_bytes, hash_buckets, hash_signs,
+    CSVec, make_csvec, zero_table, insert, insert_at, query, query_all,
+    merge, unsketch, topk_streaming, table_bytes, hash_buckets,
+    hash_signs,
 )

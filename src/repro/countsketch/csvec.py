@@ -103,14 +103,7 @@ def hash_signs(params: Array, idx: Array) -> Array:
 def insert(cs: CSVec, vec: Array) -> CSVec:
     """Accumulate `vec` (dim,) into the sketch (pure-jnp reference; the
     Pallas hot path is `repro.kernels.csvec_insert.csvec_insert`)."""
-    idx = jnp.arange(cs.dim)
-    buckets = hash_buckets(cs.params, cs.cols, idx)          # (r, n)
-    signs = hash_signs(cs.params, idx)                       # (r, n)
-    sv = signs * vec.astype(jnp.float32)[None, :]
-    rows = jax.vmap(
-        lambda s, b: segment_sum(s, b, num_segments=cs.cols)
-    )(sv, buckets)
-    return dataclasses.replace(cs, table=cs.table + rows)
+    return insert_at(cs, jnp.arange(cs.dim), vec)
 
 
 def merge(a: CSVec, b: CSVec) -> CSVec:
@@ -131,13 +124,69 @@ def query(cs: CSVec, idx: Array) -> Array:
 
 
 def query_all(cs: CSVec) -> Array:
-    """(dim,) estimate of every coordinate."""
+    """(dim,) estimate of every coordinate. Materializes (r, dim)
+    intermediates — the dense oracle; production recovery goes through
+    `topk_streaming` / the Pallas kernel instead."""
     return query(cs, jnp.arange(cs.dim))
+
+
+def insert_at(cs: CSVec, idx: Array, vals: Array) -> CSVec:
+    """Accumulate a SPARSE vector (values `vals` at coordinates `idx`,
+    zero elsewhere) into the sketch; `insert` is the dense special case
+    (idx = arange(dim)). Costs O(r * nnz) — the only way to build
+    sketches of D ≫ 10M vectors without an (r, D) hash pass."""
+    buckets = hash_buckets(cs.params, cs.cols, idx)          # (r, n)
+    signs = hash_signs(cs.params, idx)
+    sv = signs * vals.astype(jnp.float32)[None, :]
+    rows = jax.vmap(
+        lambda s, b: segment_sum(s, b, num_segments=cs.cols)
+    )(sv, buckets)
+    return dataclasses.replace(cs, table=cs.table + rows)
+
+
+def topk_streaming(cs: CSVec, k: int,
+                   chunk: int = 16384) -> tuple[Array, Array]:
+    """Top-k heavy hitters by |median estimate| WITHOUT materializing the
+    (dim,) estimate vector: sweep the index space in fixed `chunk`-size
+    windows, estimating each window in-register and folding it into a
+    running (k,) best buffer — peak memory O(r * chunk + k).
+
+    Returns (vals (k,) f32 signed estimates, idx (k,) i32), ordered by
+    descending |estimate|. Candidate selection matches the dense
+    `unsketch` oracle BIT-FOR-BIT: the running buffer always holds its
+    survivors in global `lax.top_k` order (ties resolve to the smaller
+    index because earlier chunks precede later ones in the merge
+    concatenation), so the final index set equals
+    `lax.top_k(|query_all(cs)|, k)` exactly.
+    """
+    k = min(k, cs.dim)
+    n_chunks = -(-cs.dim // chunk)
+    neg_inf = jnp.float32(-jnp.inf)
+
+    def body(carry, start):
+        bvals, bidx = carry
+        idx = start + jnp.arange(chunk, dtype=jnp.int32)
+        est = query(cs, idx)                                 # (chunk,)
+        mag = jnp.where(idx < cs.dim, jnp.abs(est), neg_inf)
+        bmag = jnp.where(bidx >= 0, jnp.abs(bvals), neg_inf)
+        all_mag = jnp.concatenate([bmag, mag])
+        _, pos = jax.lax.top_k(all_mag, k)
+        all_val = jnp.concatenate([bvals, est])
+        all_idx = jnp.concatenate([bidx, idx])
+        return (all_val[pos], all_idx[pos]), None
+
+    init = (jnp.zeros(k, jnp.float32), -jnp.ones(k, jnp.int32))
+    starts = jnp.arange(n_chunks, dtype=jnp.int32) * chunk
+    (vals, idx), _ = jax.lax.scan(body, init, starts)
+    return vals, idx
 
 
 def unsketch(cs: CSVec, k: int) -> Array:
     """Dense (dim,) vector holding the top-k heavy hitters by |estimate|
-    at their estimated values, zero elsewhere. Static k → jit-stable."""
+    at their estimated values, zero elsewhere. Static k → jit-stable.
+    O(r * dim) peak memory — the reference/oracle path; use
+    `topk_streaming` (or the Pallas `csvec_topk` kernel) when dim is
+    large."""
     est = query_all(cs)
     k = min(k, cs.dim)
     _, idx = jax.lax.top_k(jnp.abs(est), k)

@@ -5,7 +5,9 @@
 #   mlstm_chunk      chunkwise stabilized mLSTM with VMEM-resident state
 #   csvec_insert     fused count-sketch insert, one HBM pass over the
 #                    flat gradient updating all r hash rows
+#   csvec_topk       chunked streaming heavy-hitter search over the
+#                    sketch — running top-k, never a (dim,) estimate
 from repro.kernels.ops import (
     sketch_update, flash_attention, mlstm_chunk, csvec_insert,
-    use_pallas, pallas_enabled, interpret_mode,
+    csvec_topk, use_pallas, pallas_enabled, interpret_mode,
 )

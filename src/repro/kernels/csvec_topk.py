@@ -1,0 +1,130 @@
+"""Chunked count-sketch heavy-hitter search Pallas kernel.
+
+The dense recovery path (`countsketch.csvec.query_all` + `top_k`)
+materializes an (r, dim) estimate matrix before selecting k winners —
+for D ≫ 10M that is the memory wall the streaming pipeline removes.
+This kernel sweeps the index space in fixed-size chunks and keeps only
+a running (k,) best buffer:
+
+  * the multiply-shift hashes (see countsketch/csvec.py) are recomputed
+    in-register from the global coordinate index — nothing but the
+    (r, c) table and (4, r) params ever leave HBM;
+  * the per-row table lookup is the one-hot MXU trick in reverse of
+    csvec_insert: a (chunk, c) one-hot bucket matrix contracted against
+    the table row gathers all chunk estimates in one matmul;
+  * the median over the r row estimates is an odd-even transposition
+    sorting network (static r, min/max compare-exchanges only) — the
+    sorted middle matches `jnp.median` bit-for-bit for odd r;
+  * the running top-k merge concatenates [best, chunk] and re-selects,
+    so ties resolve to the earlier (smaller-index) entry — candidate
+    selection matches the dense oracle `lax.top_k(|query_all|, k)`
+    EXACTLY (tested in tests/test_countsketch.py).
+
+Grid: (cdiv(dim, chunk),) over the coordinate space. The (1, k) best
+value/index buffers live in the output refs and persist across the
+sequential grid; tail-chunk padding indices estimate to -inf magnitude
+and are never selected.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_CHUNK = 16384
+
+_U32 = jnp.uint32
+
+
+def _median_rows(est):
+    """Median over a static list of r (chunk,) row estimates via an
+    odd-even transposition sorting network (compare-exchange only)."""
+    rows = list(est)
+    r = len(rows)
+    for rnd in range(r):
+        for j in range(rnd % 2, r - 1, 2):
+            lo = jnp.minimum(rows[j], rows[j + 1])
+            hi = jnp.maximum(rows[j], rows[j + 1])
+            rows[j], rows[j + 1] = lo, hi
+    if r % 2:
+        return rows[r // 2]
+    return 0.5 * rows[r // 2 - 1] + 0.5 * rows[r // 2]
+
+
+def _kernel(par_ref, tab_ref, val_ref, idx_ref, *,
+            dim: int, rows: int, k: int, shift: int, chunk: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        val_ref[...] = jnp.zeros((1, k), jnp.float32)
+        idx_ref[...] = -jnp.ones((1, k), jnp.int32)
+
+    c = tab_ref.shape[1]
+    gidx = (i * chunk + jax.lax.broadcasted_iota(
+        jnp.int32, (chunk, 1), 0))                           # (chunk, 1)
+    gu = gidx.astype(_U32)
+    col_iota = jax.lax.broadcasted_iota(jnp.int32, (1, c), 1)
+    est_rows = []
+    for j in range(rows):
+        ab, bb = par_ref[0, j], par_ref[1, j]
+        asg, bsg = par_ref[2, j], par_ref[3, j]
+        bucket = ((ab * gu + bb) >> _U32(shift)).astype(jnp.int32)
+        sbit = ((asg * gu + bsg) >> _U32(31)).astype(jnp.float32)
+        sgn = 1.0 - 2.0 * sbit                               # (chunk, 1)
+        onehot = (bucket == col_iota).astype(jnp.float32)    # (chunk, c)
+        looked = jax.lax.dot(
+            onehot, tab_ref[j:j + 1, :].reshape(c, 1),
+            preferred_element_type=jnp.float32)              # (chunk, 1)
+        est_rows.append((sgn * looked).reshape(chunk))
+    est = _median_rows(est_rows)                             # (chunk,)
+
+    neg_inf = jnp.float32(-jnp.inf)
+    cidx = gidx.reshape(chunk)
+    mag = jnp.where(cidx < dim, jnp.abs(est), neg_inf)
+    bvals = val_ref[0, :]
+    bidx = idx_ref[0, :]
+    bmag = jnp.where(bidx >= 0, jnp.abs(bvals), neg_inf)
+    all_mag = jnp.concatenate([bmag, mag])
+    _, pos = jax.lax.top_k(all_mag, k)
+    all_val = jnp.concatenate([bvals, est])
+    all_idx = jnp.concatenate([bidx, cidx])
+    val_ref[0, :] = jnp.take(all_val, pos)
+    idx_ref[0, :] = jnp.take(all_idx, pos)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("dim", "k", "chunk", "interpret"))
+def csvec_topk(table, params, *, dim: int, k: int,
+               chunk: int = DEFAULT_CHUNK, interpret: bool = True):
+    """table (r, c) f32; params (4, r) u32; returns (vals (k,) f32,
+    idx (k,) i32) — the top-k coordinates of the sketched vector by
+    |median-of-r estimate|, descending, peak memory O(chunk + k).
+    Matches `countsketch.csvec.topk_streaming` (parity tested)."""
+    r, c = table.shape
+    log2c = c.bit_length() - 1
+    assert c == (1 << log2c), f"cols must be a power of two, got {c}"
+    k = min(k, dim)
+    chunk = min(chunk, max(128, dim))
+    grid = (-(-dim // chunk),)
+    vals, idx = pl.pallas_call(
+        functools.partial(_kernel, dim=dim, rows=r, k=k,
+                          shift=32 - log2c, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((4, r), lambda i: (0, 0)),          # hash params
+            pl.BlockSpec((r, c), lambda i: (0, 0)),          # table
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, k), jnp.float32),
+            jax.ShapeDtypeStruct((1, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(params, table)
+    return vals.reshape(k), idx.reshape(k)

@@ -30,6 +30,19 @@ def csvec_insert_ref(table, params, vec):
     return insert(cs, vec).table
 
 
+def csvec_topk_ref(table, params, dim: int, k: int):
+    """Dense heavy-hitter oracle: materialize every coordinate estimate
+    (the O(r * dim) path the streaming kernel avoids) and top-k it.
+    Returns (vals (k,) f32, idx (k,) i32) descending by |estimate| —
+    the bit-for-bit candidate-selection target for csvec_topk."""
+    from repro.countsketch.csvec import CSVec, query_all
+
+    cs = CSVec(table=table, params=params, dim=dim)
+    est = query_all(cs)
+    _, idx = jax.lax.top_k(jnp.abs(est), min(k, dim))
+    return est[idx], idx
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=None):
     """q (B, Hq, S, D); k/v (B, Hkv, S, D) GQA. Returns (B, Hq, S, D)."""
     B, Hq, S, D = q.shape

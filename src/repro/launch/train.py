@@ -9,6 +9,16 @@ XLA_FLAGS); on a real cluster the same entry point runs per host under
     PYTHONPATH=src python -m repro.launch.train \
         --arch tinyllama-1.1b --reduced --debug-mesh --steps 20
 
+Data-parallel shard_map with count-sketch gradient compression (the
+only cross-worker traffic is the O(r*c) sketch table + optional p2
+value round; replicated state stays in sync — only the error-feedback
+residuals are per-worker, merged mass-exactly at checkpoint time):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch tinyllama-1.1b --reduced --dp 4 --compress countsketch \
+        --cs-p2 2 --steps 20
+
 Fault tolerance: checkpoint/restart + straggler watchdog + NaN rewind
 live in train/loop.py; elastic restarts (different mesh) reshard through
 checkpoint/checkpointer.py.
@@ -46,6 +56,15 @@ def main():
     ap.add_argument("--debug-mesh", action="store_true",
                     help="(2,4) data x model mesh (needs >=8 devices)")
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--dp", type=int, default=0, metavar="W",
+                    help="W-way data-parallel shard_map step (needs W "
+                         "devices; batch must divide by W)")
+    ap.add_argument("--compress", default="none",
+                    choices=["none", "topk", "countsketch"],
+                    help="DP gradient compression mode")
+    ap.add_argument("--cs-p2", type=int, default=0,
+                    help="countsketch second-round candidate multiplier "
+                         "(SketchedSGD p2; 0 disables)")
     ap.add_argument("--strategy", default="megatron",
                     choices=["megatron", "fsdp"])
     ap.add_argument("--no-sketch", action="store_true")
@@ -62,16 +81,36 @@ def main():
         sh = SHAPES[args.shape]
         seq, batch = sh.seq_len, sh.global_batch
 
+    compression = None
+    if args.compress != "none":
+        from repro.optim.compression import CompressionConfig
+        compression = CompressionConfig(mode=args.compress,
+                                        cs_p2=args.cs_p2)
     run = RunConfig(
         seq_len=seq, global_batch=batch,
         optimizer=AdamWConfig(lr=args.lr),
         warmup_steps=min(20, args.steps // 5 + 1), total_steps=args.steps,
         sketch=SketchSettings(enabled=not args.no_sketch, k_max=17),
+        compression=compression,
+        dp_axis_name="data" if args.dp else None,
+        dp_workers=args.dp if args.dp else 1,
     )
     loop = LoopConfig(num_steps=args.steps, ckpt_every=args.ckpt_every,
                       ckpt_dir=args.ckpt_dir, log_every=10)
 
-    if args.debug_mesh or args.multi_pod or len(jax.devices()) > 1:
+    if args.dp:
+        import numpy as np
+        from jax.sharding import Mesh
+
+        if len(jax.devices()) < args.dp:
+            raise SystemExit(
+                f"--dp {args.dp} needs {args.dp} devices, have "
+                f"{len(jax.devices())} (set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={args.dp})")
+        mesh = Mesh(np.array(jax.devices()[:args.dp]), ("data",))
+        from repro.train.loop import run_training
+        state, hist = run_training(cfg, run, loop, dp_mesh=mesh)
+    elif args.debug_mesh or args.multi_pod or len(jax.devices()) > 1:
         mesh = make_production_mesh(multi_pod=args.multi_pod) \
             if not args.debug_mesh else make_debug_mesh(2, 4)
         rules = rules_for_mesh(mesh, strategy=args.strategy)

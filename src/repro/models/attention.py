@@ -165,7 +165,7 @@ def attn_apply(
     cfg,
     layer_type: str,
     positions: Array,               # (B, S) train/prefill; (B,) decode
-    mode: str,                      # train | prefill | decode
+    mode: str,                      # train | eval | prefill | decode
     cache: dict | None = None,      # decode/prefill cache in/out
     seq_len_ctx: int,               # context length the cache is sized for
     chunk: int = 1024,
@@ -194,7 +194,7 @@ def attn_apply(
     qg = q.reshape(B, S, KV, G, D)
 
     new_cache = None
-    if mode in ("train", "prefill"):
+    if mode in ("train", "eval", "prefill"):
         out = chunked_causal_attention(qg, k, v, window=window, chunk=chunk)
         if mode == "prefill":
             kc = k.transpose(0, 2, 1, 3)       # (B, KV, S, D)

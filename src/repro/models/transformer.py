@@ -370,7 +370,9 @@ def forward(
     tokens: Array,                 # (B, S) int32
     *,
     cfg: ArchConfig,
-    mode: str = "train",           # train | prefill | decode
+    mode: str = "train",           # train | eval | prefill | decode
+    #                                eval = full-seq forward, no cache,
+    #                                no sketch updates, no remat
     positions: Array | None = None,
     cache: dict | None = None,
     patch_embeds: Array | None = None,
@@ -480,8 +482,13 @@ def forward(
                      "tail": new_tail_caches}
     new_sketch = None
     if sketch_state is not None:
-        new_sketch = _merge_sketch(sketch_state, new_group_sk, new_tail_sk,
-                                   cfg)
+        if mode == "train":
+            new_sketch = _merge_sketch(sketch_state, new_group_sk,
+                                       new_tail_sk, cfg)
+        else:
+            # eval/prefill/decode never advance the sketch EMAs or the
+            # step counter — monitoring sees training activations only
+            new_sketch = sketch_state
     return {"logits": logits, "cache": new_cache, "aux": aux,
             "sketch_state": new_sketch}
 

@@ -5,7 +5,11 @@ Two modes, selected by `CompressionConfig.mode`:
   "topk"        per-tensor top-k sparsification with error feedback.
                 NOT mergeable: each worker's top-k support differs, so
                 the collective must ship (index, value) pairs and the
-                aggregate is approximate.
+                aggregate is approximate. Under the shard_map DP step
+                (train/step.py) topk therefore rides the DENSE pmean —
+                its compressed_bytes() wire figure describes a sparse
+                pair exchange this repo does not implement; countsketch
+                is the mode that actually shrinks the DP wire.
   "countsketch" linear count-sketch of the flat gradient (SketchedSGD;
                 see optim/sketched_sgd.py). Sketches aggregate EXACTLY
                 under psum — the DP wire carries a fixed O(r*c) table
@@ -30,10 +34,19 @@ class CompressionConfig:
     min_k: int = 16
     # count-sketch geometry (mode == "countsketch")
     cs_rows: int = 5                # r hash rows (median-of-r estimate)
-    cs_cols: int = 2048             # c buckets per row (power of two)
+    cs_cols: int | None = None      # c buckets per row (power of two);
+    #                                 None auto-sizes from the model's
+    #                                 flat dim (see resolve_countsketch)
+    cs_target_ratio: float = 0.05   # auto-size wire budget: table bytes
+    #                                 <= ratio * dense gradient bytes
     cs_k: int = 256                 # heavy hitters recovered per step
     cs_momentum: float = 0.9        # momentum on the sketched residual
     cs_seed: int = 0                # hash-family key, shared by workers
+    cs_p2: int = 0                  # SketchedSGD second round: nominate
+    #                                 p2*k candidates from the merged
+    #                                 sketch, then psum the TRUE residual
+    #                                 values at them (0 disables)
+    cs_chunk: int = 16384           # streaming heavy-hitter chunk size
 
     def __post_init__(self):
         if self.mode not in ("topk", "countsketch"):
@@ -41,9 +54,72 @@ class CompressionConfig:
                 f"CompressionConfig.mode must be 'topk' or "
                 f"'countsketch', got {self.mode!r}")
         if self.mode == "countsketch":
-            if self.cs_cols & (self.cs_cols - 1):
+            if self.cs_rows < 1:
+                raise ValueError(f"cs_rows must be >= 1, got {self.cs_rows}")
+            if self.cs_k < 1:
+                raise ValueError(f"cs_k must be >= 1, got {self.cs_k}")
+            if self.cs_p2 < 0:
+                raise ValueError(f"cs_p2 must be >= 0, got {self.cs_p2}")
+            if self.cs_chunk < 1:
                 raise ValueError(
-                    f"cs_cols must be a power of two, got {self.cs_cols}")
+                    f"cs_chunk must be >= 1, got {self.cs_chunk}")
+            if not 0.0 < self.cs_target_ratio < 1.0:
+                raise ValueError(
+                    f"cs_target_ratio must be in (0, 1), got "
+                    f"{self.cs_target_ratio}")
+            if self.cs_cols is not None:
+                if self.cs_cols < 1 or self.cs_cols & (self.cs_cols - 1):
+                    raise ValueError(
+                        f"cs_cols must be a power of two, got "
+                        f"{self.cs_cols}")
+
+
+_MIN_COLS = 128        # below this the table is all collisions
+
+
+def resolve_countsketch(cfg: CompressionConfig, dim: int, *,
+                        strict: bool = False) -> CompressionConfig:
+    """Pin down the count-sketch geometry against the model's flat
+    parameter dimension.
+
+    When `cs_cols` is None it is auto-sized to the largest power of two
+    keeping the (rows x cols) f32 table within `cs_target_ratio` of the
+    dense gradient bytes — raising a clear ValueError when the model is
+    too small for that budget. `strict=True` (the train-construction
+    path, see train.state.finalize_run) additionally rejects explicit
+    geometries that make compression pointless (table >= dense, k >
+    dim) instead of tripping a shape assert deep inside a kernel;
+    non-strict callers (toy-dim unit tests, direct API use) may pick
+    any power-of-two table."""
+    if cfg.mode != "countsketch":
+        return cfg
+    if dim < 1:
+        raise ValueError(
+            f"countsketch needs a positive flat dim, got {dim}")
+    cols = cfg.cs_cols
+    if cols is None:
+        budget = int(dim * cfg.cs_target_ratio) // cfg.cs_rows
+        if budget < _MIN_COLS:
+            raise ValueError(
+                f"cannot auto-size cs_cols: dim={dim} with "
+                f"cs_rows={cfg.cs_rows} at target ratio "
+                f"{cfg.cs_target_ratio} leaves a per-row budget of "
+                f"{budget} < {_MIN_COLS} buckets — the model is too "
+                f"small to countsketch-compress; use mode='topk' or "
+                f"pass cs_cols explicitly")
+        cols = 1 << (budget.bit_length() - 1)
+        cfg = dataclasses.replace(cfg, cs_cols=cols)
+    if strict:
+        if cfg.cs_rows * cols >= dim:
+            raise ValueError(
+                f"invalid countsketch geometry: table "
+                f"{cfg.cs_rows}x{cols} ({cfg.cs_rows * cols} floats) is "
+                f"not smaller than the dim={dim} gradient it compresses "
+                f"— shrink cs_cols/cs_rows")
+        if cfg.cs_k > dim:
+            raise ValueError(
+                f"cs_k={cfg.cs_k} exceeds the flat dim {dim}")
+    return cfg
 
 
 def init_error_feedback(params, cfg: "CompressionConfig | None" = None):
@@ -89,9 +165,15 @@ def compress_grads(grads, err_state, cfg: CompressionConfig):
 def compressed_bytes(num_params: int, cfg: CompressionConfig) -> int:
     """Bytes on the DP wire per step.
 
-    topk ships (values + int32 indices); countsketch ships only the
-    (r, c) f32 table — independent of num_params AND of worker count."""
+    topk ships (values + int32 indices); countsketch ships the (r, c)
+    f32 table — independent of num_params AND of worker count — plus,
+    when cs_p2 > 0, the second-round exchange of p2*k exact f32 values
+    (candidate indices are derived identically on every worker from the
+    merged sketch, so only values cross the wire)."""
     if cfg.mode == "countsketch":
-        return cfg.cs_rows * cfg.cs_cols * 4
+        if cfg.cs_cols is None:
+            cfg = resolve_countsketch(cfg, num_params)
+        p2 = cfg.cs_p2 * cfg.cs_k * 4 if cfg.cs_p2 > 0 else 0
+        return cfg.cs_rows * cfg.cs_cols * 4 + p2
     k = int(num_params * cfg.topk_frac)
     return k * ((1 if cfg.int8 else 4) + 4)

@@ -5,11 +5,18 @@ Per step (Ivkin et al., adapted from /root/related mmathys/sketchedsgd):
     u <- m * u + g                    sketch-space momentum accumulator
     v <- v + u                        error-feedback accumulator
     S <- CSVec.insert(0, v)           one linear sketch of the residual
-    S <- psum(S, dp_axis)             EXACT merge (linearity) — the only
-                                      bytes on the DP wire: r*c floats
-    update <- unsketch(S, k) / W      top-k heavy hitters of the merged
-                                      residual (W workers averaged)
-    v <- v - update * (transmitted)   unsent mass stays local and
+    S <- psum(S, dp_axis)             EXACT merge (linearity) — round 1
+                                      on the DP wire: r*c floats
+    cand <- streaming_topk(S, p2*k)   chunked heavy-hitter search: peak
+                                      memory O(chunk + k), never the
+                                      (D,) estimate vector
+    vals <- psum(v[cand]) / W         round 2 (cs_p2 > 0): exact residual
+                                      values at the candidates de-noise
+                                      the sketch estimates — p2*k floats
+                                      on the wire (indices are derived
+                                      identically by every worker)
+    update <- top_k(vals, k)          final k winners
+    v <- v - update                   unsent mass stays local and
     u <- u * (1 - transmitted)        re-injects next step
 
 Because the sketch is linear, momentum/error-feedback on the dense
@@ -32,9 +39,10 @@ import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
 from repro.countsketch.csvec import (
-    CSVec, insert, make_csvec, table_bytes, unsketch, zero_table,
+    CSVec, insert, make_csvec, table_bytes, topk_streaming,
 )
 from repro.kernels.csvec_insert import csvec_insert
+from repro.kernels.csvec_topk import csvec_topk
 from repro.kernels import interpret_mode, pallas_enabled
 
 
@@ -65,6 +73,17 @@ def _sketch_residual(cs: CSVec, v, cfg):
     return insert(cs, v)
 
 
+def _recover_candidates(cs: CSVec, k: int, cfg):
+    """Streaming heavy-hitter nomination from the merged sketch: top-k
+    coordinates by |median estimate| in O(chunk + k) peak memory (vals
+    descending; identical on every worker — the sketch was psum-merged,
+    so no index exchange is ever needed)."""
+    if pallas_enabled():
+        return csvec_topk(cs.table, cs.params, dim=cs.dim, k=k,
+                          chunk=cfg.cs_chunk, interpret=interpret_mode())
+    return topk_streaming(cs, k, chunk=cfg.cs_chunk)
+
+
 def compress_grads_countsketch(grads, err_state, cfg, *,
                                axis_name: str | None = None):
     """Returns (compressed grads pytree, new {u, v} state, stats).
@@ -72,36 +91,61 @@ def compress_grads_countsketch(grads, err_state, cfg, *,
     With `axis_name` set (inside shard_map/pmap over the DP axis) the
     O(r*c) sketch table is psum-merged instead of the O(D) dense
     gradient; without it the path is the single-worker special case
-    (W=1, psum = identity) used under plain jit."""
+    (W=1, psum = identity) used under plain jit. With cfg.cs_p2 > 0 a
+    second O(p2*k) collective fetches the exact summed residual values
+    at the nominated candidates (SketchedSGD's p2 exchange), removing
+    sketch estimation noise from the transmitted coordinates."""
+    from repro.optim.compression import resolve_countsketch
+
     flat, unravel = ravel_pytree(grads)
     flat = flat.astype(jnp.float32)
+    dim = flat.shape[0]
+    cfg = resolve_countsketch(cfg, dim)
     u = cfg.cs_momentum * err_state["u"] + flat
     v_pre = err_state["v"] + u
 
-    cs = _sketch_residual(zero_table(grad_csvec(cfg, flat.shape[0])),
-                          v_pre, cfg)
+    cs = _sketch_residual(grad_csvec(cfg, dim), v_pre, cfg)
     workers = 1.0
     if axis_name is not None:
         from repro.parallel.collectives import psum_csvec
         cs = psum_csvec(cs, axis_name)
         workers = jax.lax.psum(1.0, axis_name)
 
-    update = unsketch(cs, cfg.cs_k) / workers
+    k = min(cfg.cs_k, dim)
+    p2_bytes = 0
+    if cfg.cs_p2 > 0:
+        n_cand = min(cfg.cs_p2 * k, dim)
+        _, cand = _recover_candidates(cs, n_cand, cfg)
+        exact = v_pre[cand]
+        if axis_name is not None:
+            exact = jax.lax.psum(exact, axis_name)
+        exact = exact / workers
+        _, pos = jax.lax.top_k(jnp.abs(exact), k)
+        sel_idx, sel_val = cand[pos], exact[pos]
+        p2_bytes = n_cand * 4
+    else:
+        est, sel_idx = _recover_candidates(cs, k, cfg)
+        sel_val = est / workers
+
+    update = jnp.zeros(dim, jnp.float32).at[sel_idx].set(sel_val)
     sent = (update != 0.0).astype(jnp.float32)
     new_v = v_pre - update
     new_u = u * (1.0 - sent)
 
-    dense_bytes = flat.shape[0] * 4
+    dense_bytes = dim * 4
+    wire = table_bytes(cs) + p2_bytes
     stats = {
-        "wire_bytes": float(table_bytes(cs)),
-        "compression_ratio": table_bytes(cs) / dense_bytes,
+        "wire_bytes": float(wire),
+        "compression_ratio": wire / dense_bytes,
     }
     return (unravel(update), {"u": new_u, "v": new_v}, stats)
 
 
-def countsketch_wire_bytes(cfg) -> int:
+def countsketch_wire_bytes(cfg, num_params: int = 0) -> int:
     """Per-step, per-worker bytes on the DP all-reduce wire (delegates
-    to the single source of truth in optim/compression.py; the table
-    size is independent of the parameter count)."""
+    to the single source of truth in optim/compression.py). The table
+    size is independent of the parameter count once resolved — but an
+    auto-sized config (cs_cols=None) needs `num_params` to resolve its
+    geometry first."""
     from repro.optim.compression import compressed_bytes
-    return compressed_bytes(0, cfg)
+    return compressed_bytes(num_params, cfg)

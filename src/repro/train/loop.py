@@ -26,7 +26,7 @@ from repro.checkpoint.checkpointer import Checkpointer
 from repro.core.adaptive import adaptive_step
 from repro.data.pipeline import PipelineConfig, host_batch
 from repro.train.state import RunConfig, TrainState, init_train_state
-from repro.train.step import make_train_step
+from repro.train.step import make_dp_train_step, make_train_step
 
 log = logging.getLogger("repro.train")
 
@@ -45,9 +45,14 @@ class LoopConfig:
 
 
 def run_training(cfg, run: RunConfig, loop: LoopConfig, *,
-                 seed: int = 0, donate: bool = True):
+                 seed: int = 0, donate: bool = True, dp_mesh=None):
     """Single-host driver (the multi-pod path wraps this in launch/train
-    with a mesh + sharded state). Returns (state, history)."""
+    with a mesh + sharded state). Returns (state, history).
+
+    With `dp_mesh` set (and `run.dp_axis_name` naming one of its axes)
+    the step is shard_map-ed data-parallel: state replicated, batch
+    split over the axis, gradients crossing the wire dense (pmean) or
+    as the count-sketch table + optional p2 value round."""
     pipe = PipelineConfig(seed=seed, global_batch=run.global_batch,
                           seq_len=run.seq_len, vocab=cfg.vocab_size)
     ckpt = Checkpointer(loop.ckpt_dir, keep=loop.ckpt_keep)
@@ -59,8 +64,38 @@ def run_training(cfg, run: RunConfig, loop: LoopConfig, *,
         log.info("restored checkpoint at step %s", meta["step"])
     step0 = int(state.step)
 
-    train_step = jax.jit(make_train_step(cfg, run),
-                         donate_argnums=(0,) if donate else ())
+    persistable = lambda s: s
+    if dp_mesh is not None:
+        # donation is incompatible with the replicated-in spec here:
+        # keep it simple, the DP step's state is small on debug meshes
+        train_step = jax.jit(make_dp_train_step(cfg, run, dp_mesh))
+        log.info("data-parallel shard_map step: %d-way %r axis",
+                 dp_mesh.shape[run.dp_axis_name], run.dp_axis_name)
+        if run.compression is not None \
+                and run.compression.mode == "countsketch":
+            # the countsketch error-feedback accumulators are
+            # INTENTIONALLY per-worker (device-local buffers under the
+            # replicated spec); a host-side checkpoint would silently
+            # keep worker 0's copy and drop the other residuals. Merge
+            # them before persisting: pmean preserves the worker-SUM
+            # the merged sketch consumes, so restore is mass-exact.
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+
+            ax = run.dp_axis_name
+            _merge_err = jax.jit(shard_map(
+                lambda e: jax.tree.map(
+                    lambda x: jax.lax.pmean(x, ax), e),
+                mesh=dp_mesh, in_specs=P(), out_specs=P(),
+                check_rep=False))
+
+            def persistable(s):
+                opt = dict(s.opt)
+                opt["err"] = _merge_err(s.opt["err"])
+                return dataclasses.replace(s, opt=opt)
+    else:
+        train_step = jax.jit(make_train_step(cfg, run),
+                             donate_argnums=(0,) if donate else ())
     history = []
     ema_t = None
     stragglers = 0
@@ -84,7 +119,7 @@ def run_training(cfg, run: RunConfig, loop: LoopConfig, *,
                         step, dt, ema_t)
             if stragglers >= loop.straggler_budget:
                 log.error("straggler budget exhausted; checkpoint+abort")
-                ckpt.save(step + 1, state)
+                ckpt.save(step + 1, persistable(state))
                 sys.exit(75)
         else:
             stragglers = 0
@@ -128,10 +163,10 @@ def run_training(cfg, run: RunConfig, loop: LoopConfig, *,
             log.info("step %d loss %.4f grad_norm %.3f (%.3fs)",
                      step, metrics["loss"], metrics["grad_norm"], dt)
         if (step + 1) % loop.ckpt_every == 0:
-            ckpt.save_async(step + 1, state)
+            ckpt.save_async(step + 1, persistable(state))
 
     ckpt.wait()
-    ckpt.save(loop.num_steps, state)
+    ckpt.save(loop.num_steps, persistable(state))
     return state, history
 
 

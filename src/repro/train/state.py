@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any
 
 import jax
@@ -38,6 +39,21 @@ class RunConfig:
     # default) is the single-program case — jit's implicit collectives
     # handle the dense path, and countsketch runs its W=1 special case.
     dp_axis_name: str | None = None
+    # Worker count on that axis. Sizes per-worker state at init: the
+    # EMA activation-sketch projections are (T_local, k) with T_local =
+    # global_batch / dp_workers * seq_len, since each worker's forward
+    # sees only its batch shard (make_dp_train_step validates this
+    # against the mesh).
+    dp_workers: int = 1
+
+    def __post_init__(self):
+        if self.dp_workers < 1:
+            raise ValueError(
+                f"dp_workers must be >= 1, got {self.dp_workers}")
+        if self.dp_workers > 1 and self.global_batch % self.dp_workers:
+            raise ValueError(
+                f"global_batch={self.global_batch} not divisible by "
+                f"dp_workers={self.dp_workers}")
 
 
 @jax.tree_util.register_dataclass
@@ -52,14 +68,34 @@ class TrainState:
     skipped: jax.Array                # () i32 NaN-guard skip count
 
 
+def finalize_run(cfg, run: RunConfig) -> RunConfig:
+    """Resolve dim-dependent knobs against the model architecture — the
+    earliest point the flat parameter dimension exists. Auto-sizes
+    countsketch `cs_cols` from the target compression ratio and fails
+    fast (clear ValueError) on invalid sketch geometry, instead of
+    tripping a shape assert deep inside a kernel. Idempotent: resolving
+    an already-resolved config is a no-op."""
+    if run.compression is None or run.compression.mode != "countsketch":
+        return run
+    from repro.optim.compression import resolve_countsketch
+
+    shapes = jax.eval_shape(lambda k: init_params(k, cfg),
+                            jax.random.PRNGKey(0))
+    d = sum(math.prod(l.shape) for l in jax.tree.leaves(shapes))
+    return dataclasses.replace(
+        run,
+        compression=resolve_countsketch(run.compression, d, strict=True))
+
+
 def init_train_state(key, cfg, run: RunConfig) -> TrainState:
+    run = finalize_run(cfg, run)
     kp, ks = jax.random.split(key)
     params = init_params(kp, cfg)
     opt = init_adamw(params, run.optimizer)
     if run.compression is not None:
         from repro.optim.compression import init_error_feedback
         opt["err"] = init_error_feedback(params, run.compression)
-    n_tokens = run.global_batch * run.seq_len
+    n_tokens = run.global_batch // run.dp_workers * run.seq_len
     sketch = init_lm_sketch_state(ks, cfg, run.sketch, n_tokens)
     n_groups = max(1, len(sketch_groups(cfg)))
     monitor = init_monitor_state(run.monitor_window,

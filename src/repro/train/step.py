@@ -15,7 +15,7 @@ from repro.optim.compression import compress_grads, init_error_feedback
 from repro.optim.sketched_sgd import compress_grads_countsketch
 from repro.optim.schedule import warmup_cosine
 from repro.parallel.sharding import constrain
-from repro.train.state import RunConfig, TrainState
+from repro.train.state import RunConfig, TrainState, finalize_run
 
 
 def cross_entropy(logits, labels, z_weight: float = 0.0):
@@ -29,6 +29,9 @@ def cross_entropy(logits, labels, z_weight: float = 0.0):
 
 
 def make_train_step(cfg: ArchConfig, run: RunConfig):
+    run = finalize_run(cfg, run)
+    ax = run.dp_axis_name
+
     def train_step(state: TrainState, batch):
         tokens = constrain(batch["tokens"], "batch", "none")
         labels = constrain(batch["labels"], "batch", "none")
@@ -44,16 +47,41 @@ def make_train_step(cfg: ArchConfig, run: RunConfig):
 
         (loss, (new_sketch, ce, aux)), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(state.params, state.sketch)
+        if ax is not None:
+            # per-shard losses -> global means, so every replica takes
+            # the same NaN-guard branch and logs the same numbers
+            loss = jax.lax.pmean(loss, ax)
+            ce = jax.lax.pmean(ce, ax)
+            aux = jax.lax.pmean(aux, ax)
+            if new_sketch is not None:
+                # EMA activation sketches updated from local shards:
+                # average the float leaves so replicas stay in sync
+                # (linear in the per-token increments)
+                new_sketch = jax.tree.map(
+                    lambda x: jax.lax.pmean(x, ax)
+                    if jnp.issubdtype(x.dtype, jnp.floating) else x,
+                    new_sketch)
 
         new_err = None
-        if run.compression is not None:
-            if run.compression.mode == "countsketch":
-                # Mergeable path: workers exchange an O(r*c) linear
-                # sketch (exact under psum) instead of the dense grad.
-                grads, new_err, _ = compress_grads_countsketch(
-                    grads, state.opt["err"], run.compression,
-                    axis_name=run.dp_axis_name)
-            else:
+        if run.compression is not None and \
+                run.compression.mode == "countsketch":
+            # Mergeable path: workers exchange an O(r*c) linear sketch
+            # (exact under psum) instead of the dense grad; the update
+            # is identical on every worker afterwards.
+            grads, new_err, _ = compress_grads_countsketch(
+                grads, state.opt["err"], run.compression, axis_name=ax)
+        else:
+            if ax is not None:
+                # dense DP wire: the baseline all-reduce countsketch
+                # replaces — O(D) bytes across the axis. NOTE: top-k
+                # sparsification is NOT psum-mergeable, so under DP it
+                # rides this dense collective and saves no wire bytes;
+                # its compressed_bytes() accounting applies only to a
+                # (index, value)-shipping aggregation it doesn't have
+                # here. Use mode="countsketch" for real DP wire savings.
+                grads = jax.tree.map(
+                    lambda g: jax.lax.pmean(g, ax), grads)
+            if run.compression is not None:
                 grads, new_err, _ = compress_grads(
                     grads, state.opt["err"], run.compression)
 
@@ -101,6 +129,48 @@ def make_train_step(cfg: ArchConfig, run: RunConfig):
 
 def make_eval_step(cfg: ArchConfig, run: RunConfig):
     def eval_step(params, batch):
-        out = forward(params, batch["tokens"], cfg=cfg, mode="train")
+        # mode="eval": full-sequence forward like train, but no remat
+        # wrapper and — critically — no EMA sketch-state updates, so
+        # evaluation can never perturb the gradient monitor
+        out = forward(params, batch["tokens"], cfg=cfg, mode="eval")
         return cross_entropy(out["logits"], batch["labels"])
     return eval_step
+
+
+def make_dp_train_step(cfg: ArchConfig, run: RunConfig, mesh):
+    """The real multi-worker step: shard_map over `run.dp_axis_name`
+    with the train state replicated and the batch split on its leading
+    axis. Inside, the only cross-worker traffic is the gradient
+    exchange — an O(D) dense pmean, or with countsketch compression the
+    O(r*c) sketch-table psum plus the optional O(p2*k) second-round
+    value exchange. Params/optimizer moments/sketches stay identical on
+    every replica (the update is computed from merged quantities only);
+    the countsketch error-feedback accumulators are INTENTIONALLY
+    per-worker (SketchedSGD keeps each worker's unsent residual local —
+    they live as device-local buffers under the replicated out-spec,
+    and train/loop.py pmean-merges them mass-exactly before any
+    checkpoint leaves the devices)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    run = finalize_run(cfg, run)
+    ax = run.dp_axis_name
+    if ax is None or ax not in mesh.axis_names:
+        raise ValueError(
+            f"make_dp_train_step needs run.dp_axis_name naming a mesh "
+            f"axis; got {ax!r} for mesh axes {mesh.axis_names}")
+    workers = mesh.shape[ax]
+    if run.global_batch % workers:
+        raise ValueError(
+            f"global_batch={run.global_batch} not divisible by the "
+            f"{workers}-way {ax!r} axis")
+    if run.sketch.enabled and run.dp_workers != workers:
+        raise ValueError(
+            f"run.dp_workers={run.dp_workers} but the {ax!r} axis is "
+            f"{workers}-way: the EMA sketch projections are sized for "
+            f"the per-worker token count — set dp_workers={workers} in "
+            f"RunConfig (or disable sketching)")
+    step = make_train_step(cfg, run)
+    return shard_map(step, mesh=mesh,
+                     in_specs=(P(), P(ax)), out_specs=(P(), P()),
+                     check_rep=False)

@@ -73,6 +73,39 @@ def test_pathology_detection_vanishing_vs_healthy():
     assert bool(flags["diversity_collapse"][1])
 
 
+def test_pathology_flags_gated_during_warmup():
+    """Regression (ISSUE 2): a warming-up ring buffer has max == min, so
+    rel_span == 0 flagged healthy runs as stagnating on the very first
+    reading. Window-statistic flags must stay False until min_fill
+    readings exist — then fire legitimately."""
+    st = init_monitor_state(window=8, num_layers=1)
+    healthy = jnp.asarray([[100.0, 8.0, 5.0]])
+    st = monitor_record(st, healthy)
+    flags = detect_pathologies(st, k_active=9)
+    assert not bool(flags["stagnating"][0])           # was True pre-fix
+    assert not bool(flags["diversity_collapse"][0])
+    # point-in-time flags need no warm-up
+    st_v = init_monitor_state(window=8, num_layers=1)
+    st_v = monitor_record(st_v, jnp.asarray([[1e-7, 1.0, 1e-7]]))
+    assert bool(detect_pathologies(st_v, k_active=9)["vanishing"][0])
+    # once warmed, an actually-flat norm trace DOES flag stagnation
+    for _ in range(4):
+        st = monitor_record(st, healthy)
+    assert bool(detect_pathologies(st, k_active=9)["stagnating"][0])
+
+
+def test_pathology_min_fill_respects_small_windows():
+    """min_fill larger than the window must not gate forever: a full
+    2-slot ring is as warmed up as it can get."""
+    from repro.core.monitor import PathologyThresholds
+
+    st = init_monitor_state(window=2, num_layers=1)
+    for _ in range(2):
+        st = monitor_record(st, jnp.asarray([[100.0, 8.0, 5.0]]))
+    th = PathologyThresholds(min_fill=16)
+    assert bool(detect_pathologies(st, k_active=9, th=th)["stagnating"][0])
+
+
 def test_layer_metrics_shapes(rng):
     x = jax.random.normal(rng, (16, 9))
     m = layer_metrics(x, x, x)

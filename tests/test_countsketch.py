@@ -14,12 +14,15 @@ import numpy as np
 import pytest
 
 from repro.countsketch import (
-    insert, make_csvec, merge, query, query_all, table_bytes, unsketch,
-    zero_table,
+    insert, insert_at, make_csvec, merge, query, query_all, table_bytes,
+    topk_streaming, unsketch, zero_table,
 )
 from repro.kernels.csvec_insert import csvec_insert
-from repro.kernels.ref import csvec_insert_ref
-from repro.optim.compression import CompressionConfig, compressed_bytes
+from repro.kernels.csvec_topk import csvec_topk
+from repro.kernels.ref import csvec_insert_ref, csvec_topk_ref
+from repro.optim.compression import (
+    CompressionConfig, compressed_bytes, resolve_countsketch,
+)
 from repro.optim.sketched_sgd import (
     compress_grads_countsketch, flat_dim, init_countsketch_state,
 )
@@ -134,6 +137,236 @@ def test_heavy_hitter_recovery_heavy_tailed(rng):
     want = np.asarray(v)[np.asarray(heavy_idx)]
     mask = got != 0
     np.testing.assert_allclose(got[mask], want[mask], atol=1.0, rtol=0.2)
+
+
+# -- streaming heavy-hitter recovery (ISSUE 2 tentpole) -----------------------
+
+
+@pytest.mark.parametrize("dim,rows,cols,k,chunk", [
+    (10000, 5, 1024, 64, 1000),     # ragged tail (dim % chunk != 0)
+    (4096, 3, 512, 32, 4096),       # single chunk, exact fit
+    (3000, 5, 256, 16, 8192),       # chunk > dim (clamped)
+    (8192, 5, 512, 128, 2048),      # exact chunk multiple
+    (7001, 7, 512, 64, 512),        # prime dim, many chunks, even r next
+    (5000, 4, 256, 32, 1024),       # even r (interpolated median)
+])
+def test_streaming_topk_matches_dense_oracle(rng, dim, rows, cols, k,
+                                             chunk):
+    """Candidate selection must match the dense query_all+top_k oracle
+    BIT-FOR-BIT across chunk boundaries, tails, and both median
+    parities — both for the jnp scan path and the Pallas kernel."""
+    cs = make_csvec(rng, dim=dim, rows=rows, cols=cols)
+    v = jax.random.normal(jax.random.fold_in(rng, dim), (dim,)) ** 3
+    cs = insert(cs, v)
+    want_v, want_i = csvec_topk_ref(cs.table, cs.params, dim, k)
+
+    got_v, got_i = topk_streaming(cs, k, chunk=chunk)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+
+    ker_v, ker_i = csvec_topk(cs.table, cs.params, dim=dim, k=k,
+                              chunk=chunk)
+    np.testing.assert_array_equal(np.asarray(ker_i), np.asarray(want_i))
+    np.testing.assert_allclose(np.asarray(ker_v), np.asarray(want_v),
+                               atol=1e-6, rtol=1e-6)
+
+
+def test_streaming_topk_equals_dense_unsketch(rng):
+    """Scattering the streaming (vals, idx) reproduces unsketch exactly."""
+    dim, k = 20000, 128
+    cs = make_csvec(rng, dim=dim, rows=5, cols=2048)
+    cs = insert(cs, jax.random.normal(rng, (dim,)) ** 3)
+    vals, idx = topk_streaming(cs, k, chunk=3000)
+    rec = jnp.zeros(dim, jnp.float32).at[idx].set(vals)
+    np.testing.assert_array_equal(np.asarray(rec),
+                                  np.asarray(unsketch(cs, k)))
+
+
+def _max_intermediate_size(jaxpr) -> int:
+    """Largest element count of any value produced inside a jaxpr
+    (recursing into scan/cond/call sub-jaxprs)."""
+    import jax.core
+
+    worst = 0
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            if hasattr(v.aval, "size"):
+                worst = max(worst, v.aval.size)
+        for p in eqn.params.values():
+            sub = []
+            if isinstance(p, jax.core.ClosedJaxpr):
+                sub = [p.jaxpr]
+            elif isinstance(p, jax.core.Jaxpr):
+                sub = [p]
+            elif isinstance(p, (tuple, list)):
+                sub = [q.jaxpr if isinstance(q, jax.core.ClosedJaxpr)
+                       else q for q in p
+                       if isinstance(q, (jax.core.Jaxpr,
+                                         jax.core.ClosedJaxpr))]
+            for s in sub:
+                worst = max(worst, _max_intermediate_size(s))
+    return worst
+
+
+def test_streaming_recovery_memory_stays_o_chunk_plus_k(rng):
+    """The jaxpr of the streaming path must never materialize a
+    dim-sized (let alone (r, dim)) intermediate — peak is O(r * chunk +
+    k) — while the dense oracle provably does."""
+    dim, rows, cols, k, chunk = 1_000_000, 3, 1024, 64, 8192
+    cs = make_csvec(rng, dim=dim, rows=rows, cols=cols)
+
+    stream = jax.make_jaxpr(
+        lambda t: topk_streaming(
+            type(cs)(table=t, params=cs.params, dim=dim), k, chunk=chunk)
+    )(cs.table)
+    worst = _max_intermediate_size(stream.jaxpr)
+    assert worst <= 4 * rows * chunk, worst      # O(chunk), not O(dim)
+
+    dense = jax.make_jaxpr(
+        lambda t: unsketch(
+            type(cs)(table=t, params=cs.params, dim=dim), k)
+    )(cs.table)
+    assert _max_intermediate_size(dense.jaxpr) >= rows * dim
+
+
+@pytest.mark.slow
+def test_streaming_topk_at_10m_scale(rng):
+    """D = 10M: build the sketch sparsely (insert_at), recover heavy
+    hitters streaming, and match the dense oracle's candidate set
+    bit-for-bit. The streaming path holds O(chunk + k); only the oracle
+    pays the (r, D) dense cost here."""
+    dim, n_heavy, k = 10_000_000, 64, 128
+    # r=5: at D=10M a median-of-3 admits too many phantom heavy hitters
+    # (2-of-3 bucket collisions); 5 rows need 3 collisions -> ~none
+    cs = make_csvec(rng, dim=dim, rows=5, cols=16384)
+    idx = jax.random.choice(rng, dim, (4 * n_heavy,), replace=False)
+    vals = jnp.concatenate([
+        100.0 / (1 + jnp.arange(n_heavy)) ** 0.7,
+        0.01 * jnp.ones(3 * n_heavy)])
+    cs = insert_at(cs, idx, vals)
+    got_v, got_i = topk_streaming(cs, k, chunk=262144)
+    want_v, want_i = csvec_topk_ref(cs.table, cs.params, dim, k)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+    heavy = set(np.asarray(idx[:n_heavy]).tolist())
+    hits = len(heavy & set(np.asarray(got_i).tolist()))
+    assert hits >= int(0.85 * n_heavy), (hits, n_heavy)
+
+
+def test_insert_at_matches_dense_insert(rng):
+    dim = 5000
+    cs = make_csvec(rng, dim=dim, rows=5, cols=512)
+    idx = jax.random.choice(rng, dim, (37,), replace=False)
+    vals = jax.random.normal(jax.random.fold_in(rng, 1), (37,))
+    dense = jnp.zeros(dim).at[idx].set(vals)
+    np.testing.assert_allclose(
+        np.asarray(insert_at(cs, idx, vals).table),
+        np.asarray(insert(cs, dense).table), atol=1e-5, rtol=1e-5)
+
+
+# -- p2 second-round exact-value exchange -------------------------------------
+
+
+def test_p2_exchange_reduces_estimation_error(rng):
+    """With cs_p2 > 0 the transmitted values are the TRUE residual
+    values at the nominated candidates — estimation error on the sent
+    coordinates collapses to ~0, vs the sketch-noise floor at p2=0."""
+    from jax.flatten_util import ravel_pytree
+
+    dim = 20000
+    g = {"w": jax.random.normal(rng, (dim,)) ** 3}
+    flat, _ = ravel_pytree(g)
+    err_by_p2 = {}
+    for p2 in (0, 4):
+        cfg = CompressionConfig(mode="countsketch", cs_rows=5,
+                                cs_cols=1024, cs_k=64, cs_momentum=0.0,
+                                cs_p2=p2, cs_chunk=4096)
+        comp, _, stats = compress_grads_countsketch(
+            g, init_countsketch_state(g), cfg)
+        c, _ = ravel_pytree(comp)
+        sent = np.asarray(c) != 0
+        assert sent.sum() <= cfg.cs_k
+        err_by_p2[p2] = float(jnp.linalg.norm(c[sent] - flat[sent]))
+        if p2 > 0:
+            # second round adds p2*k f32 values to the wire
+            assert stats["wire_bytes"] == 5 * 1024 * 4 + p2 * 64 * 4
+    assert err_by_p2[4] < 1e-4 < err_by_p2[0]
+
+
+def test_p2_mass_conservation(rng):
+    """Residual subtraction stays exact with the p2 exchange on."""
+    cfg = CompressionConfig(mode="countsketch", cs_rows=5, cs_cols=512,
+                            cs_k=64, cs_momentum=0.9, cs_p2=2)
+    grads = _toy_grads(rng)
+    err = init_countsketch_state(grads)
+    comp, new_err, _ = compress_grads_countsketch(grads, err, cfg)
+
+    from jax.flatten_util import ravel_pytree
+    flat_g, _ = ravel_pytree(grads)
+    flat_c, _ = ravel_pytree(comp)
+    u = cfg.cs_momentum * err["u"] + flat_g
+    v_pre = err["v"] + u
+    np.testing.assert_allclose(
+        np.asarray(new_err["v"] + flat_c), np.asarray(v_pre),
+        atol=1e-6, rtol=1e-6)
+    sent = np.asarray(flat_c) != 0
+    assert np.all(np.asarray(new_err["u"])[sent] == 0.0)
+
+
+# -- geometry resolution / fail-fast validation -------------------------------
+
+
+def test_cs_cols_autosizes_from_dim():
+    cfg = CompressionConfig(mode="countsketch", cs_rows=5,
+                            cs_target_ratio=0.05)
+    assert cfg.cs_cols is None
+    r = resolve_countsketch(cfg, 1_000_000, strict=True)
+    assert r.cs_cols == 8192                 # prev pow2 of 50000/5
+    assert r.cs_rows * r.cs_cols * 4 <= 0.05 * 1_000_000 * 4
+    # idempotent
+    assert resolve_countsketch(r, 1_000_000, strict=True) == r
+
+
+def test_cs_geometry_fails_fast():
+    cfg = CompressionConfig(mode="countsketch", cs_rows=5)
+    with pytest.raises(ValueError, match="auto-size"):
+        resolve_countsketch(cfg, 5000)       # too small for the budget
+    big = CompressionConfig(mode="countsketch", cs_rows=5, cs_cols=2048)
+    with pytest.raises(ValueError, match="not smaller"):
+        resolve_countsketch(big, 5000, strict=True)
+    with pytest.raises(ValueError, match="cs_k"):
+        resolve_countsketch(
+            CompressionConfig(mode="countsketch", cs_rows=2, cs_cols=128,
+                              cs_k=5000), 2048, strict=True)
+    with pytest.raises(ValueError, match="power of two"):
+        CompressionConfig(mode="countsketch", cs_cols=100)
+    with pytest.raises(ValueError, match="cs_rows"):
+        CompressionConfig(mode="countsketch", cs_rows=0)
+    with pytest.raises(ValueError, match="cs_p2"):
+        CompressionConfig(mode="countsketch", cs_p2=-1)
+
+
+def test_run_config_autosizes_at_state_construction():
+    """finalize_run resolves cs_cols against the model's flat dim before
+    any kernel sees the geometry."""
+    from repro.configs import get_arch, reduced
+    from repro.train.state import RunConfig, finalize_run
+    from repro.models.transformer import SketchSettings
+
+    cfg = reduced(get_arch("tinyllama-1.1b"))
+    run = RunConfig(seq_len=16, global_batch=4,
+                    sketch=SketchSettings(enabled=False),
+                    compression=CompressionConfig(mode="countsketch",
+                                                  cs_k=256))
+    fin = finalize_run(cfg, run)
+    cols = fin.compression.cs_cols
+    assert cols is not None and cols & (cols - 1) == 0
+    from repro.models.transformer import init_params
+    d = flat_dim(init_params(jax.random.PRNGKey(0), cfg))
+    assert fin.compression.cs_rows * cols * 4 <= \
+        fin.compression.cs_target_ratio * d * 4
+    # finalize is idempotent — a resolved run passes through unchanged
+    assert finalize_run(cfg, fin) == fin
 
 
 # -- error feedback -----------------------------------------------------------
@@ -305,6 +538,108 @@ def test_countsketch_psum_matches_single_worker_on_4_devices():
     out = subprocess.run([sys.executable, "-c", code],
                          capture_output=True, text=True, env=env,
                          timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "OK" in out.stdout
+
+
+@pytest.mark.slow
+def test_w4_shard_map_end_to_end_step_with_p2():
+    """Real W=4 DP train step under shard_map (fake CPU devices in a
+    subprocess): replicated state descends and matches the W=1 step
+    bit-close; compress-level checks assert exact per-worker mass
+    conservation and that the p2 exchange reduces estimation error on
+    the transmitted coordinates vs p2=0."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    code = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.experimental.shard_map import shard_map
+        from jax.flatten_util import ravel_pytree
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.configs import get_arch, reduced
+        from repro.data.synthetic import lm_batch
+        from repro.models.transformer import SketchSettings
+        from repro.optim.compression import CompressionConfig
+        from repro.optim.sketched_sgd import (
+            compress_grads_countsketch, init_countsketch_state)
+        from repro.train.state import RunConfig, init_train_state
+        from repro.train.step import make_dp_train_step, make_train_step
+
+        mesh = Mesh(np.array(jax.devices()), ("data",))
+        W, dim = 4, 8192
+        key = jax.random.PRNGKey(0)
+
+        # -- compress-level: mass conservation + p2 error, real psum --
+        worker_g = jax.random.normal(key, (W, dim)) ** 3
+        err = init_countsketch_state({"w": worker_g[0]})
+        errs = {}
+        for p2 in (0, 4):
+            cfg = CompressionConfig(mode="countsketch", cs_rows=5,
+                                    cs_cols=512, cs_k=64,
+                                    cs_momentum=0.0, cs_p2=p2,
+                                    cs_chunk=2048)
+            def compress(g, e, cfg=cfg):
+                comp, ne, _ = compress_grads_countsketch(
+                    {"w": g.reshape(dim)}, e, cfg, axis_name="data")
+                # lead with a singleton axis so out_specs P("data")
+                # STACKS the per-worker err states into (W, dim)
+                return comp, jax.tree.map(
+                    lambda x: x.reshape(1, -1), ne)
+            fn = shard_map(
+                compress, mesh=mesh, in_specs=(P("data"), P()),
+                out_specs=(P(), P("data")), check_rep=False)
+            comp, new_err = fn(worker_g, err)
+            c = comp["w"]
+            # per-worker exact mass conservation: v_new + update == v_pre
+            for w in range(W):
+                v_pre = err["v"] + worker_g[w]
+                np.testing.assert_allclose(
+                    np.asarray(new_err["v"][w] + c), np.asarray(v_pre),
+                    atol=1e-5, rtol=1e-5)
+            sent = np.asarray(c) != 0
+            true_mean = worker_g.mean(0)
+            errs[p2] = float(jnp.linalg.norm(
+                c[sent] - true_mean[sent]))
+        assert errs[4] < errs[0], errs
+        assert errs[4] < 1e-3, errs
+
+        # -- end-to-end: W=4 DP step descends and tracks W=1 ----------
+        cfg_a = reduced(get_arch("tinyllama-1.1b"))
+        ccfg = CompressionConfig(mode="countsketch", cs_rows=5,
+                                 cs_k=512, cs_p2=2)
+        mk = lambda ax: RunConfig(
+            seq_len=16, global_batch=8, compression=ccfg,
+            sketch=SketchSettings(enabled=False), dp_axis_name=ax,
+            warmup_steps=2, total_steps=50)
+        tok, lab = lm_batch(key, 8, 16, cfg_a.vocab_size)
+        batch = {"tokens": tok, "labels": lab}
+
+        state = init_train_state(key, cfg_a, mk("data"))
+        state = jax.device_put(state, NamedSharding(mesh, P()))
+        dp_step = jax.jit(make_dp_train_step(cfg_a, mk("data"), mesh))
+        s1 = init_train_state(key, cfg_a, mk(None))
+        ref_step = jax.jit(make_train_step(cfg_a, mk(None)))
+        dp_l, ref_l = [], []
+        for i in range(6):
+            state, m = dp_step(state, batch)
+            dp_l.append(float(m["loss"]))
+            s1, m1 = ref_step(s1, batch)
+            ref_l.append(float(m1["loss"]))
+        assert all(np.isfinite(dp_l))
+        assert dp_l[-1] < dp_l[0]
+        np.testing.assert_allclose(dp_l, ref_l, atol=1e-3, rtol=1e-4)
+        print("OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", code],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
     assert out.returncode == 0, out.stderr[-4000:]
     assert "OK" in out.stdout
 

@@ -53,6 +53,87 @@ def test_training_restart_resumes_exactly(tmp_path):
                                    atol=1e-5, rtol=1e-5)
 
 
+def test_eval_mode_is_inert_where_train_mode_is_not(rng):
+    """Regression (ISSUE 2): eval ran with mode="train". The modes must
+    diverge exactly where they should — train updates the EMA activation
+    sketches, eval must leave them bitwise untouched — while producing
+    identical logits (sketched backprop only alters the backward pass)."""
+    from repro.models.transformer import forward, init_lm_sketch_state
+
+    cfg = reduced(get_arch("tinyllama-1.1b"))
+    params = init_params(rng, cfg)
+    st = SketchSettings(enabled=True, k_max=9, beta=0.9)
+    B, S = 2, 16
+    sketch = init_lm_sketch_state(jax.random.fold_in(rng, 1), cfg, st,
+                                  B * S)
+    tokens = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+
+    tr = forward(params, tokens, cfg=cfg, mode="train",
+                 sketch_state=sketch, settings=st)
+    ev = forward(params, tokens, cfg=cfg, mode="eval",
+                 sketch_state=sketch, settings=st)
+
+    np.testing.assert_allclose(
+        np.asarray(tr["logits"], np.float32),
+        np.asarray(ev["logits"], np.float32), atol=1e-5, rtol=1e-5)
+    changed = unchanged = 0
+    for a, b, c in zip(jax.tree.leaves(sketch),
+                       jax.tree.leaves(tr["sketch_state"]),
+                       jax.tree.leaves(ev["sketch_state"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+        unchanged += 1
+        if not np.array_equal(np.asarray(a), np.asarray(b)):
+            changed += 1
+    assert changed > 0        # train DID update sketches
+    assert unchanged > 0      # eval touched none
+
+
+def test_eval_step_uses_eval_mode(rng):
+    """make_eval_step must run cache-free full-sequence eval and agree
+    with the train-mode CE on identical params (values are mode-
+    independent; only side effects differ)."""
+    from repro.data.synthetic import lm_batch
+    from repro.train.step import cross_entropy, make_eval_step
+    from repro.models.transformer import forward
+
+    cfg = reduced(get_arch("tinyllama-1.1b"))
+    params = init_params(rng, cfg)
+    run = _run_cfg()
+    tokens, labels = lm_batch(rng, 2, 16, cfg.vocab_size)
+    ce = make_eval_step(cfg, run)(params, {"tokens": tokens,
+                                           "labels": labels})
+    want = cross_entropy(
+        forward(params, tokens, cfg=cfg, mode="train")["logits"], labels)
+    assert np.isfinite(float(ce))
+    np.testing.assert_allclose(float(ce), float(want), atol=1e-5)
+
+
+def test_dp_run_config_validation():
+    """dp_workers must divide the batch, and a sketch-enabled DP step
+    must be sized for the per-worker token count."""
+    import pytest
+    from jax.sharding import Mesh
+    from repro.train.step import make_dp_train_step
+
+    with pytest.raises(ValueError, match="divisible"):
+        RunConfig(seq_len=8, global_batch=6, dp_workers=4)
+    with pytest.raises(ValueError, match="dp_workers"):
+        RunConfig(seq_len=8, global_batch=8, dp_workers=0)
+
+    cfg = reduced(get_arch("tinyllama-1.1b"))
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    bad = RunConfig(seq_len=8, global_batch=8, dp_axis_name="data",
+                    dp_workers=2,
+                    sketch=SketchSettings(enabled=True, k_max=9))
+    with pytest.raises(ValueError, match="dp_workers"):
+        make_dp_train_step(cfg, bad, mesh)
+    # matching worker count builds fine
+    ok = RunConfig(seq_len=8, global_batch=8, dp_axis_name="data",
+                   dp_workers=1,
+                   sketch=SketchSettings(enabled=True, k_max=9))
+    assert make_dp_train_step(cfg, ok, mesh) is not None
+
+
 def test_serve_engine_greedy_matches_forward(rng):
     from repro.models.transformer import forward
     cfg = reduced(get_arch("tinyllama-1.1b"))
