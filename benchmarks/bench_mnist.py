@@ -50,7 +50,7 @@ def run(steps: int = 600, noise: float = 1.2, seed: int = 0,
                                        cfg.d_hidden)
         results[variant] = {
             "final_acc": acc,
-            "final_rank": int(res.sketch["rank"]),
+            "final_rank": int(res.sketch.rank),
             "activation_bytes": act_bytes,
             "sketch_bytes": sk_bytes,
             "loss_last": res.history[-1]["loss"],

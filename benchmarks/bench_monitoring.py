@@ -37,12 +37,12 @@ def run(steps: int = 300, noise: float = 1.0, seed: int = 0):
             eval_fn=lambda p: {"test_acc": accuracy(p, cfg, x_test,
                                                     y_test)},
             seed=seed)
-        sk = res.sketch
-        k = 2 * int(sk["rank"]) + 1
+        node = res.sketch.nodes["hidden"]
+        k = 2 * int(res.sketch.rank) + 1
         z_norms = jnp.linalg.norm(
-            sk["z"].reshape(sk["z"].shape[0], -1), axis=-1)
+            node.z.reshape(node.z.shape[0], -1), axis=-1)
         from repro.core.monitor import stable_rank
-        sr = jax.vmap(stable_rank)(sk["y"])
+        sr = jax.vmap(stable_rank)(node.y)
         flags = detect_pathologies(res.monitor, k)
         results[cfg.name] = {
             "final_acc": accuracy(res.params, cfg, x_test, y_test),

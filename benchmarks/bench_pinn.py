@@ -7,12 +7,14 @@ off forward hooks); (ii) the sketch overhead is tiny (paper: 0.57 MB);
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
 from repro.configs.paper import PINN_POISSON
 from repro.core.sketch import SketchConfig, sketch_memory_bytes
-from repro.core.sketched_linear import ema_node_update
+from repro.sketches import ema_triple_update
 from repro.data.synthetic import pinn_points
 from repro.models.mlp import mlp_forward, mlp_init, pinn_loss, poisson_exact
 from repro.optim.adamw import AdamWConfig, adamw_update, init_adamw
@@ -44,24 +46,27 @@ def run(steps: int = 600, seed: int = 0, monitor: bool = True):
         params, opt, _ = adamw_update(params, grads, opt, opt_cfg)
         if sk is not None:
             # monitoring-only: forward-hook sketch updates (exact grads
-            # untouched — paper §5.2.2)
+            # untouched — paper §5.2.2) through the canonical NodeTree
+            # update machinery
             _, acts = mlp_forward(params, interior, cfg)
-            k_active = 2 * sk["rank"] + 1
-            new = dict(sk)
+            k_active = sk.k_active
+            hidden = sk.nodes["hidden"]
             xs, ys, zs = [], [], []
             for node in range(cfg.num_hidden_layers):
                 a = acts[node + 1]
                 # interior batch may differ from Nb; project the first Nb
                 a = a[: scfg.batch_size]
-                x_, y_, z_ = ema_node_update(
-                    sk["x"][node], sk["y"][node], sk["z"][node], a,
-                    sk["proj"]["upsilon"], sk["proj"]["omega"],
-                    sk["proj"]["phi"], sk["psi"][node], scfg.beta,
+                x_, y_, z_ = ema_triple_update(
+                    hidden.x[node], hidden.y[node], hidden.z[node], a,
+                    sk.proj["upsilon"], sk.proj["omega"],
+                    sk.proj["phi"], hidden.psi[node], scfg.beta,
                     k_active)
                 xs.append(x_), ys.append(y_), zs.append(z_)
-            new.update(x=jnp.stack(xs), y=jnp.stack(ys), z=jnp.stack(zs),
-                       step=sk["step"] + 1)
-            sk = new
+            hidden = dataclasses.replace(
+                hidden, x=jnp.stack(xs), y=jnp.stack(ys),
+                z=jnp.stack(zs))
+            sk = dataclasses.replace(sk, nodes={"hidden": hidden},
+                                     step=sk.step + 1)
         return params, opt, sk, loss
 
     hist = []

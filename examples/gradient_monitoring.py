@@ -23,10 +23,10 @@ for cfg in (MONITOR_HEALTHY, MONITOR_PROBLEMATIC):
     res = train(cfg, scfg, "monitor", steps=120,
                 batch_fn=lambda k: classification_batch(
                     k, protos, cfg.batch_size, 2.0))
-    k = 2 * int(res.sketch["rank"]) + 1
-    sr = jax.vmap(stable_rank)(res.sketch["y"])
-    zn = jnp.linalg.norm(res.sketch["z"].reshape(
-        res.sketch["z"].shape[0], -1), axis=-1)
+    k = 2 * int(res.sketch.rank) + 1
+    node = res.sketch.nodes["hidden"]
+    sr = jax.vmap(stable_rank)(node.y)
+    zn = jnp.linalg.norm(node.z.reshape(node.z.shape[0], -1), axis=-1)
     flags = detect_pathologies(res.monitor, k)
     print(f"\n== {cfg.name} ==")
     print(f"  test acc          : "

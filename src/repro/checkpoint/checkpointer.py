@@ -9,7 +9,11 @@ Guarantees:
     restarting job runs (2 pods -> 8 pods works: jax.device_put with the
     new sharding reshards), so node-count changes need no conversion;
   * async      — `save_async` hands the host copy to a writer thread so
-    the device step resumes immediately.
+    the device step resumes immediately;
+  * migration  — checkpoints written before the NodeTree unification
+    (sketch state as per-group dicts, two fewer leaves) restore through
+    `repro.sketches.compat.restore_legacy_state`; new checkpoints tag
+    metadata with `sketch_layout` so the provenance is inspectable.
 """
 from __future__ import annotations
 
@@ -73,6 +77,7 @@ class Checkpointer:
         meta = dict(metadata)
         meta.update({"step": step, "time": time.time(),
                      "num_leaves": len(host_leaves),
+                     "sketch_layout": "nodetree-v1",
                      "treedef": treedef_str})
         with open(os.path.join(tmp, "metadata.json"), "w") as f:
             json.dump(meta, f)
@@ -104,6 +109,9 @@ class Checkpointer:
 
         `shardings` (optional pytree of NamedSharding matching template)
         reshards onto the CURRENT mesh — the elastic-restart path.
+
+        Pre-NodeTree checkpoints (sketch state saved as per-group dicts)
+        are detected by leaf count and migrated in place.
         """
         if step is None:
             step = self.latest_step()
@@ -113,7 +121,12 @@ class Checkpointer:
         z = np.load(os.path.join(d, "arrays.npz"))
         leaves = [z[f"leaf_{i}"] for i in range(len(z.files))]
         _, treedef = jax.tree.flatten(template)
-        state = jax.tree.unflatten(treedef, leaves)
+        if len(leaves) != treedef.num_leaves:
+            # load-time migration from the pre-unification sketch layout
+            from repro.sketches.compat import restore_legacy_state
+            state = restore_legacy_state(template, leaves)
+        else:
+            state = jax.tree.unflatten(treedef, leaves)
         if shardings is not None:
             state = jax.tree.map(
                 lambda x, s: jax.device_put(x, s), state, shardings)

@@ -17,7 +17,7 @@ from repro.core.adaptive import (
 from repro.core.monitor import (
     MonitorState, init_monitor_state, monitor_record, stack_metrics,
     layer_metrics, stable_rank, detect_pathologies, PathologyThresholds,
-    monitor_memory_bytes, METRIC_NAMES, N_METRICS,
+    monitor_memory_bytes, tree_metrics, METRIC_NAMES, N_METRICS,
 )
 from repro.core.bounds import (
     tail_energy, reconstruction_bound, gradient_bound, SQRT6,

@@ -36,6 +36,7 @@ import jax.numpy as jnp
 
 from repro.core.reconstruct import Reconstruction, masked_qr
 from repro.core.sketch import mask_columns
+from repro.sketches.update import corange_triple_update
 
 Array = jax.Array
 
@@ -76,22 +77,9 @@ def corange_update(
     beta: float,
     k_active,
 ) -> tuple[Array, Array, Array]:
-    """EMA update of the Tropp triple against M_batch = a^T."""
-    a = jax.lax.stop_gradient(a)
-    dt = x_c.dtype
-    s_active = 2 * k_active + 1
-    m = a.astype(dt).T                                     # (d, N_b)
-    ups = mask_columns(proj.upsilon.astype(dt).T, k_active).T   # mask rows
-    omg = mask_columns(proj.omega.astype(dt), k_active)
-    phi = mask_columns(proj.phi.astype(dt).T, s_active).T
-    psi = mask_columns(proj.psi.astype(dt), s_active)
-    x_new = beta * x_c + (1 - beta) * (ups @ m)
-    y_new = beta * y_c + (1 - beta) * (m @ omg)
-    z_new = beta * z_c + (1 - beta) * (phi @ (m @ psi))
-    x_new = mask_columns(x_new.T, k_active).T
-    y_new = mask_columns(y_new, k_active)
-    z_new = mask_columns(mask_columns(z_new, s_active).T, s_active).T
-    return x_new, y_new, z_new
+    """EMA update of the Tropp triple against M_batch = a^T — delegates
+    to the canonical implementation in `repro.sketches.update`."""
+    return corange_triple_update(x_c, y_c, z_c, a, proj, beta, k_active)
 
 
 def corange_reconstruct(

@@ -55,6 +55,24 @@ def stack_metrics(x: Array, y: Array, z: Array) -> Array:
     return jax.vmap(layer_metrics)(x, y, z)
 
 
+def tree_metrics(tree) -> Array:
+    """(N, N_METRICS) over every node of a ``sketches.NodeTree``, rows in
+    ``sketches.node_paths`` order (sorted by node name, layer-major).
+
+    Works for both sketch kinds: the metrics read only ||Z||_F, ||Y||_F
+    and the k x k Gram of Y, all of which exist for paper AND corange
+    triples.
+    """
+    mets = []
+    for name in sorted(tree.nodes):
+        node = tree.nodes[name]
+        if node.x.ndim == 2:
+            mets.append(layer_metrics(node.x, node.y, node.z)[None])
+        else:
+            mets.append(stack_metrics(node.x, node.y, node.z))
+    return jnp.concatenate(mets, 0)
+
+
 def gram_metrics_from_partial(y_local: Array, axis_name: str) -> Array:
     """stable_rank of a width-sharded Y from local shards (exact)."""
     g = jax.lax.psum(y_local.T @ y_local, axis_name)

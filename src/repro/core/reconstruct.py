@@ -25,7 +25,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.sketch import mask_columns
+from repro.sketches.update import mask_columns
 
 Array = jax.Array
 

@@ -20,11 +20,14 @@ a rank change merely updates the mask and re-derives the projections via
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+
+from repro.sketches.update import (          # noqa: F401  (re-exported:
+    active_mask, ema_triple_update, mask_columns,  # the masking helpers
+)                                            # historically lived here)
 
 Array = jax.Array
 
@@ -136,22 +139,8 @@ def init_sketch_state(
 
 
 # ---------------------------------------------------------------------------
-# Masking utilities (static-shape adaptive rank)
-# ---------------------------------------------------------------------------
-
-
-def active_mask(k_active: Array, k_max: int, dtype=jnp.float32) -> Array:
-    """(k_max,) 1.0 for columns < k_active else 0.0."""
-    return (jnp.arange(k_max) < k_active).astype(dtype)
-
-
-def mask_columns(m: Array, k_active: Array) -> Array:
-    """Zero the inactive trailing columns of (..., k_max)."""
-    return m * active_mask(k_active, m.shape[-1], m.dtype)
-
-
-# ---------------------------------------------------------------------------
-# EMA updates (paper Eqs. 5a-5c) — single layer and stacked forms
+# EMA updates (paper Eqs. 5a-5c) — thin wrappers over the ONE canonical
+# implementation in repro.sketches.update (single layer / stacked forms)
 # ---------------------------------------------------------------------------
 
 
@@ -166,29 +155,15 @@ def sketch_update_single(
     beta: float,
     k_active: Array,
 ) -> tuple[Array, Array, Array]:
-    """One EMA sketch update for one layer (pure jnp reference path).
-
-    The Pallas kernel `repro.kernels.sketch_update` computes the same
-    contraction fused; `repro.kernels.ref.sketch_update_ref` wraps this.
+    """One EMA sketch update for one layer (layer-indexed legacy form:
+    X observes a_prev, Y/Z observe a_out). Delegates to
+    `sketches.ema_triple_update`; `repro.kernels.ref.sketch_update_ref`
+    is the kernel oracle for the node-indexed (a_prev == a_out) case.
     """
-    dt = x_s.dtype
-    ap = a_prev.astype(dt)
-    ao = a_out.astype(dt)
-    ups = mask_columns(proj.upsilon.astype(dt), k_active)
-    omg = mask_columns(proj.omega.astype(dt), k_active)
-    phi = mask_columns(proj.phi.astype(dt), k_active)
-    psi = mask_columns(proj.psi[layer_idx].astype(dt), k_active)
-
-    x_new = beta * x_s + (1.0 - beta) * (ap.T @ ups)
-    y_new = beta * y_s + (1.0 - beta) * (ao.T @ omg)
-    z_new = beta * z_s + (1.0 - beta) * ((ao.T @ phi) * psi[None, :])
-    # keep masked columns exactly zero (EMA of zero is zero, but guard
-    # against drift after a rank decrease)
-    return (
-        mask_columns(x_new, k_active),
-        mask_columns(y_new, k_active),
-        mask_columns(z_new, k_active),
-    )
+    return ema_triple_update(
+        x_s, y_s, z_s, a_prev,
+        proj.upsilon, proj.omega, proj.phi, proj.psi[layer_idx],
+        beta, k_active, a_out=a_out, use_kernel=False)
 
 
 def sketch_update_stack(
@@ -199,37 +174,20 @@ def sketch_update_stack(
     """Update all L layers' sketches from the full activation trajectory.
 
     Layer l's input sketch consumes acts[l], output sketches consume
-    acts[l+1] (paper: X uses A^[l-1], Y/Z use A^[l]).  The fused Pallas
-    path lives in `repro.kernels.ops.sketch_update` and is wired in by the
-    training step; this is the pure-jnp reference used everywhere else.
+    acts[l+1] (paper: X uses A^[l-1], Y/Z use A^[l]). vmaps the canonical
+    `sketches.ema_triple_update` over the layer stack.
 
     `beta` is required: pass `SketchConfig.beta` explicitly (an earlier
     revision silently substituted 0.95 when it was omitted, which let a
     config's beta diverge from the update actually applied).
     """
     k_act = state.k_active
-
-    def _update_one(x_s, y_s, z_s, a_prev, a_out, psi_l, proj, beta, k_act):
-        dt = x_s.dtype
-        ups = mask_columns(proj.upsilon.astype(dt), k_act)
-        omg = mask_columns(proj.omega.astype(dt), k_act)
-        phi = mask_columns(proj.phi.astype(dt), k_act)
-        psi = mask_columns(psi_l.astype(dt), k_act)
-        x_new = beta * x_s + (1 - beta) * (a_prev.astype(dt).T @ ups)
-        y_new = beta * y_s + (1 - beta) * (a_out.astype(dt).T @ omg)
-        z_new = beta * z_s + (1 - beta) * ((a_out.astype(dt).T @ phi) * psi)
-        return (
-            mask_columns(x_new, k_act),
-            mask_columns(y_new, k_act),
-            mask_columns(z_new, k_act),
-        )
-
     a_prev = acts[:-1]
     a_out = acts[1:]
     new = jax.vmap(
-        lambda xs, ys, zs, ap, ao, psi: _update_one(
-            xs, ys, zs, ap, ao, psi, state.proj, beta, k_act
-        )
+        lambda xs, ys, zs, ap, ao, psi: ema_triple_update(
+            xs, ys, zs, ap, state.proj.upsilon, state.proj.omega,
+            state.proj.phi, psi, beta, k_act, a_out=ao, use_kernel=False)
     )(state.x, state.y, state.z, a_prev, a_out, state.proj.psi)
     return dataclasses.replace(
         state, x=new[0], y=new[1], z=new[2], step=state.step + 1

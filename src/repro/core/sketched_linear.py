@@ -1,92 +1,19 @@
-"""Sketched-backprop linear layer (paper §4.4, Algorithm 2) as custom_vjp.
+"""Back-compat shim — the sketched linear layer moved to
+``repro.sketches.linear`` and the canonical per-node EMA update to
+``repro.sketches.update`` (DESIGN.md §6).
 
-The forward is an ordinary matmul but saves ONLY the weight and the (tiny)
-sketch triple as residuals — the input activation never enters the
-backward closure, which is the paper's memory mechanism. The backward
-reconstructs A~ from the EMA sketches (core/reconstruct.py) and computes
-
-    grad_W = A~^T @ delta        (paper Eq. 8, transposed convention:
-                                  we store W as (d_in, d_out))
-    grad_x = delta @ W^T         (exact — delta propagation is never
-                                  sketched, matching the paper)
-
-`factored=True` (beyond-paper, DESIGN.md §7) exploits A~ = L R^T:
-    grad_W = R @ (L^T @ delta)   — O(T k (d+f)) instead of O(T d f).
+``ema_node_update`` is the node-indexed form of the paper's Eqs. 5a-5c
+(the triple observes the tensor that feeds the layer); it is kept here
+only as a name alias so historical imports keep working.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core.reconstruct import reconstruct
-from repro.core.sketch import mask_columns
+from repro.sketches.linear import sketched_matmul  # noqa: F401
+from repro.sketches.update import ema_triple_update
 
 Array = jax.Array
-
-
-def _zero_ct(x):
-    if jnp.issubdtype(x.dtype, jnp.floating) or \
-            jnp.issubdtype(x.dtype, jnp.complexfloating):
-        return jnp.zeros_like(x)
-    return np.zeros(x.shape, jax.dtypes.float0)
-
-
-@partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9))
-def sketched_matmul(
-    x: Array,          # (T, d_in)
-    w: Array,          # (d_in, d_out)
-    x_s: Array,        # (d_in, k_max)  sketch triple of the node feeding w
-    y_s: Array,
-    z_s: Array,
-    omega: Array,      # (T, k_max)
-    k_active: Array,   # () int32
-    recon_mode: str = "faithful",
-    ridge: float = 1e-4,
-    factored: bool = True,
-) -> Array:
-    return x @ w.astype(x.dtype)
-
-
-def _fwd(x, w, x_s, y_s, z_s, omega, k_active,
-         recon_mode, ridge, factored):
-    y = x @ w.astype(x.dtype)
-    # NOTE: x is deliberately NOT a residual.
-    return y, (w, x_s, y_s, z_s, omega, k_active)
-
-
-def _bwd(recon_mode, ridge, factored, res, g):
-    w, x_s, y_s, z_s, omega, k_active = res
-    rec = reconstruct(
-        x_s, y_s, z_s, omega, k_active, mode=recon_mode, ridge=ridge
-    )
-    gf = g.astype(rec.left.dtype)
-    if factored:
-        grad_w = rec.right @ (rec.left.T @ gf)          # (d_in, d_out)
-    else:
-        grad_w = rec.dense().T @ gf
-    # cast the activation cotangent back to the primal dtype: the incoming
-    # g is often f32 (silu/norm segments) and an uncast grad_x propagates
-    # f32 through the whole residual-stream backward — doubling every
-    # SP/ZeRO all-gather (§Perf iteration 1).
-    grad_x = (g @ w.T.astype(g.dtype)).astype(w.dtype)
-    return (
-        grad_x,
-        grad_w.astype(w.dtype),
-        _zero_ct(x_s), _zero_ct(y_s), _zero_ct(z_s), _zero_ct(omega),
-        _zero_ct(k_active),
-    )
-
-
-sketched_matmul.defvjp(_fwd, _bwd)
-
-
-# ---------------------------------------------------------------------------
-# EMA node update used right before a sketched matmul (paper Eqs. 5a-5c,
-# per-NODE indexing: the triple observes the tensor that feeds the layer).
-# ---------------------------------------------------------------------------
 
 
 def ema_node_update(
@@ -99,18 +26,5 @@ def ema_node_update(
     beta: float,
     k_active: Array,
 ) -> tuple[Array, Array, Array]:
-    a = jax.lax.stop_gradient(a)
-    dt = x_s.dtype
-    at = a.astype(dt).T                                   # (d, T)
-    ups = mask_columns(upsilon.astype(dt), k_active)
-    omg = mask_columns(omega.astype(dt), k_active)
-    ph = mask_columns(phi.astype(dt), k_active)
-    ps = mask_columns(psi.astype(dt), k_active)
-    x_new = beta * x_s + (1 - beta) * (at @ ups)
-    y_new = beta * y_s + (1 - beta) * (at @ omg)
-    z_new = beta * z_s + (1 - beta) * ((at @ ph) * ps[None, :])
-    return (
-        mask_columns(x_new, k_active),
-        mask_columns(y_new, k_active),
-        mask_columns(z_new, k_active),
-    )
+    return ema_triple_update(
+        x_s, y_s, z_s, a, upsilon, omega, phi, psi, beta, k_active)

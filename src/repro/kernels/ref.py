@@ -9,7 +9,7 @@ def sketch_update_ref(a, x_s, y_s, z_s, ups, omg, phi, psi, beta):
     """Fused EMA triple update against activation matrix a (T, d).
 
     x/y/z (d, k); ups/omg/phi (T, k); psi (k,). Single-node form (the
-    paper's per-node triple; see core/sketched_linear.ema_node_update).
+    paper's per-node triple; see sketches.update.ema_triple_update).
     """
     at = a.astype(jnp.float32).T
     x_new = beta * x_s + (1 - beta) * (at @ ups.astype(jnp.float32))

@@ -3,7 +3,7 @@
 Forward variants:
   mlp_forward           plain forward returning all activations A^[0..L]
   sketched MLP training lives in train/paper_trainer.py — it wires these
-                        activations into core.sketch / sketched_matmul
+                        activations into the sketches/ NodeTree machinery
 
 The conv stem for the CIFAR hybrid is a fixed small feature extractor
 (paper: sketching applies only to the dense tail). The PINN network feeds
@@ -15,8 +15,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.paper import MLPConfig
+from repro.sketches import NodeSpec
 
 Array = jax.Array
+
+
+def mlp_node_specs(cfg: MLPConfig) -> dict[str, NodeSpec]:
+    """NodeTree registry for the paper MLPs: one stacked node over the
+    hidden activations (node l feeds linear layer l+1 — DESIGN.md §1)."""
+    return {"hidden": NodeSpec(width=cfg.d_hidden,
+                               layers=cfg.num_hidden_layers)}
 
 
 def _act(name: str):

@@ -173,12 +173,17 @@ def moe_apply(p: dict, x: Array, cfg) -> tuple[Array, Array]:
         w_specs = (P(), P(None, None, model), P(None, None, model),
                    P(None, model, None))
 
+    # jax.shard_map / check_vma only exist on newer JAX; this container
+    # pins 0.4.x where the API lives under jax.experimental with the
+    # replication check named check_rep (same semantics: disabled).
+    from jax.experimental.shard_map import shard_map
+
     @partial(
-        jax.shard_map,
+        shard_map,
         mesh=rules.mesh,
         in_specs=(P(dp, None),) + w_specs,
         out_specs=(P(dp, None), P()),
-        check_vma=False,
+        check_rep=False,
     )
     def _local(xl, router, wg, wu, wd):
         # xl (T_loc, d) — sharded over dp, replicated over model

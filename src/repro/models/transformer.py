@@ -10,12 +10,17 @@ Paper integration (first-class feature):
   * sketch_mode == "backprop": dense-FFN matmuls (or the attention
     out-projection for MoE archs, whose expert sub-batches break the fixed
     batch-projection premise — DESIGN.md §3) run through
-    core.sketched_linear.sketched_matmul with per-layer EMA triples.
+    sketches.sketched_matmul with per-layer EMA triples.
   * sketch_mode == "monitor": the residual stream after every block feeds
     monitoring-only EMA triples (stop-gradient), mirroring the paper's
     PINN deployment.
-Sketch state is threaded through the layer scan as xs/ys so updates happen
-where activations are live — no activation is ever stored for sketching.
+Sketch state lives in ONE `sketches.NodeTree` keyed by node name
+(DESIGN.md §6) and is threaded through the layer scan as xs/ys so updates
+happen where activations are live — no activation is ever stored for
+sketching. Every EMA update goes through `sketches.ema_triple_update`
+(fused Pallas kernel under `kernels.ops.use_pallas(True)`, jnp on CPU);
+under the DP-exact step the per-token increments are psum-ed across
+`SketchSettings.dp_axis` inside the forward (DESIGN.md §4).
 """
 from __future__ import annotations
 
@@ -26,7 +31,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.sketched_linear import ema_node_update, sketched_matmul
+from repro.sketches import (
+    NodeSpec, NodeTree, ema_triple_update, init_node_tree,
+    sketched_matmul,
+)
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import rglru as rglru_mod
@@ -70,55 +78,45 @@ class SketchSettings:
     ridge: float = 1e-4             # relative ridge (see reconstruct.py)
     factored: bool = True           # beyond-paper low-rank grad matmuls
     sketch_dtype: Any = jnp.float32
+    # DP-exact semantics (DESIGN.md §4): name of the data-parallel mesh
+    # axis to psum per-token sketch increments over INSIDE the forward.
+    # None = each program sketches the tokens it sees (single-program
+    # jit, or the legacy pmean approximation). Set by make_dp_train_step.
+    dp_axis: str | None = None
+
+
+def lm_node_specs(cfg: ArchConfig) -> dict[str, NodeSpec]:
+    """The NodeTree registry for an LM arch — one NodeSpec per sketched
+    node group, stacked over the layer axis."""
+    return {g: NodeSpec(width=w, layers=cfg.num_layers)
+            for g, w in sketch_groups(cfg).items()}
 
 
 def init_lm_sketch_state(key, cfg: ArchConfig, st: SketchSettings,
-                         num_tokens: int):
-    """Sketch pytree: per-group (L, w, k_max) triples + shared projections
-    (num_tokens, k_max) + per-layer psi + active rank scalar."""
+                         num_tokens: int) -> NodeTree | None:
+    """The LM NodeTree: per-group (L, w, k_max) stacked nodes + shared
+    (num_tokens, k_max) projections + active rank scalar."""
     if not st.enabled:
         return None
-    groups = sketch_groups(cfg)
-    ks = jax.random.split(key, 4 + len(groups))
-    L = cfg.num_layers
-    state: dict[str, Any] = {
-        "proj": {
-            "upsilon": jax.random.normal(
-                ks[0], (num_tokens, st.k_max), st.sketch_dtype),
-            "omega": jax.random.normal(
-                ks[1], (num_tokens, st.k_max), st.sketch_dtype),
-            "phi": jax.random.normal(
-                ks[2], (num_tokens, st.k_max), st.sketch_dtype),
-        },
-        "rank": jnp.asarray((st.k_max - 1) // 2, jnp.int32),
-        "step": jnp.asarray(0, jnp.int32),
-    }
-    for i, (g, w) in enumerate(groups.items()):
-        state[g] = {
-            "sk_x": jnp.zeros((L, w, st.k_max), st.sketch_dtype),
-            "sk_y": jnp.zeros((L, w, st.k_max), st.sketch_dtype),
-            "sk_z": jnp.zeros((L, w, st.k_max), st.sketch_dtype),
-            "psi": jax.random.normal(ks[4 + i], (L, st.k_max),
-                                     st.sketch_dtype),
-        }
-    return state
+    return init_node_tree(key, lm_node_specs(cfg), num_tokens, st.k_max,
+                          dtype=st.sketch_dtype)
 
 
-def _slice_sketch(state, lo: int, hi: int, reshape_groups: int | None):
-    """Per-layer slices [lo:hi) of every group triple (optionally reshaped
-    to (G, P, ...) for the scan)."""
+def _slice_sketch(state: NodeTree | None, lo: int, hi: int,
+                  reshape_groups: int | None):
+    """Per-layer slices [lo:hi) of every node (optionally reshaped to
+    (G, P, ...) for the scan). Returns {name: SketchNode}."""
     if state is None:
         return None
-    out = {}
-    for g, v in state.items():
-        if g in ("proj", "rank", "step"):
-            continue
-        sl = {k: a[lo:hi] for k, a in v.items()}
+
+    def _cut(a):
+        s = a[lo:hi]
         if reshape_groups is not None:
-            sl = {k: a.reshape((reshape_groups, -1) + a.shape[1:])
-                  for k, a in sl.items()}
-        out[g] = sl
-    return out
+            s = s.reshape((reshape_groups, -1) + s.shape[1:])
+        return s
+
+    return {name: jax.tree.map(_cut, node)
+            for name, node in state.nodes.items()}
 
 
 # ---------------------------------------------------------------------------
@@ -223,40 +221,36 @@ def abstract_cache(cfg: ArchConfig, batch: int, seq_len_ctx: int):
 # ---------------------------------------------------------------------------
 
 
+def _update_triple(node, a, proj, k_active, st: SketchSettings):
+    """The canonical per-node EMA update, with DP-exact psum when the
+    settings name a data-parallel axis. Returns the updated SketchNode."""
+    xs, ys, zs = ema_triple_update(
+        node.x, node.y, node.z, a,
+        proj["upsilon"], proj["omega"], proj["phi"], node.psi,
+        st.beta, k_active, axis_name=st.dp_axis)
+    return dataclasses.replace(node, x=xs, y=ys, z=zs)
+
+
 def _apply_sketched_mlp(p, x, cfg, sk, proj, k_active, st: SketchSettings):
     """Dense FFN with paper sketched backprop on both matmuls."""
     B, S, d = x.shape
     xf = x.reshape(B * S, d)
-    tri_in = sk["ffn_in"]
-    xs, ys, zs = ema_node_update(
-        tri_in["sk_x"], tri_in["sk_y"], tri_in["sk_z"], xf,
-        proj["upsilon"], proj["omega"], proj["phi"], tri_in["psi"],
-        st.beta, k_active)
+    n_in = _update_triple(sk["ffn_in"], xf, proj, k_active, st)
     mm = lambda a, w, t: sketched_matmul(
-        a, w.astype(a.dtype), t[0], t[1], t[2], proj["omega"], k_active,
+        a, w.astype(a.dtype), t.x, t.y, t.z, proj["omega"], k_active,
         st.recon_mode, st.ridge, st.factored)
     if cfg.mlp_type == "swiglu":
-        g = mm(xf, p["w_gate"], (xs, ys, zs))
-        u = mm(xf, p["w_up"], (xs, ys, zs))
+        g = mm(xf, p["w_gate"], n_in)
+        u = mm(xf, p["w_up"], n_in)
         h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
     else:
         h = jax.nn.gelu(
-            mm(xf, p["w_up"], (xs, ys, zs)).astype(jnp.float32)
+            mm(xf, p["w_up"], n_in).astype(jnp.float32)
         ).astype(x.dtype)
     h = constrain(h, "tokens", "mlp_act")
-    tri_h = sk["ffn_h"]
-    hxs, hys, hzs = ema_node_update(
-        tri_h["sk_x"], tri_h["sk_y"], tri_h["sk_z"], h,
-        proj["upsilon"], proj["omega"], proj["phi"], tri_h["psi"],
-        st.beta, k_active)
-    y = mm(h, p["w_down"], (hxs, hys, hzs))
-    new_sk = {
-        "ffn_in": {"sk_x": xs, "sk_y": ys, "sk_z": zs,
-                   "psi": tri_in["psi"]},
-        "ffn_h": {"sk_x": hxs, "sk_y": hys, "sk_z": hzs,
-                  "psi": tri_h["psi"]},
-    }
-    return y.reshape(B, S, d), new_sk
+    n_h = _update_triple(sk["ffn_h"], h, proj, k_active, st)
+    y = mm(h, p["w_down"], n_h)
+    return y.reshape(B, S, d), {"ffn_in": n_in, "ffn_h": n_h}
 
 
 def _apply_block(
@@ -323,13 +317,8 @@ def _apply_block(
 
     if sk is not None and "res" in sk and mode == "train":
         # monitoring-only residual-stream sketches (stop-grad inside)
-        tri = sk["res"]
-        rx, ry, rz = ema_node_update(
-            tri["sk_x"], tri["sk_y"], tri["sk_z"], x.reshape(B * S, d),
-            proj["upsilon"], proj["omega"], proj["phi"], tri["psi"],
-            st.beta, k_active)
-        new_sk = dict(sk, res={"sk_x": rx, "sk_y": ry, "sk_z": rz,
-                               "psi": tri["psi"]})
+        new_sk = dict(sk, res=_update_triple(
+            sk["res"], x.reshape(B * S, d), proj, k_active, st))
     return x, new_cache, aux, new_sk
 
 
@@ -354,15 +343,11 @@ def _attn_with_sketch(p, h, *, cfg, layer_type, positions, mode, cache,
     out = out.reshape(B, S, Hq, D)
     out = constrain(out, "batch", "seq_attn", "heads_act", "none")
     flat = out.reshape(B * S, Hq * D)
-    xs, ys, zs = ema_node_update(
-        sk["sk_x"], sk["sk_y"], sk["sk_z"], flat,
-        proj["upsilon"], proj["omega"], proj["phi"], sk["psi"],
-        st.beta, k_active)
+    node = _update_triple(sk, flat, proj, k_active, st)
     wo = p["wo"].astype(dt).reshape(Hq * D, d)
-    y = sketched_matmul(flat, wo, xs, ys, zs, proj["omega"], k_active,
-                        st.recon_mode, st.ridge, st.factored)
-    new_sk = {"sk_x": xs, "sk_y": ys, "sk_z": zs, "psi": sk["psi"]}
-    return y.reshape(B, S, d), None, new_sk
+    y = sketched_matmul(flat, wo, node.x, node.y, node.z, proj["omega"],
+                        k_active, st.recon_mode, st.ridge, st.factored)
+    return y.reshape(B, S, d), None, node
 
 
 def forward(
@@ -376,7 +361,7 @@ def forward(
     positions: Array | None = None,
     cache: dict | None = None,
     patch_embeds: Array | None = None,
-    sketch_state: dict | None = None,
+    sketch_state: NodeTree | None = None,
     settings: SketchSettings = SketchSettings(),
     logits_only_last: bool = False,
     seq_len_ctx: int | None = None,
@@ -404,9 +389,8 @@ def forward(
     if seq_len_ctx is None:
         seq_len_ctx = S
     wants_cache = mode in ("prefill", "decode")
-    proj = sketch_state["proj"] if sketch_state is not None else None
-    k_active = (2 * sketch_state["rank"] + 1) \
-        if sketch_state is not None else None
+    proj = sketch_state.proj if sketch_state is not None else None
+    k_active = sketch_state.k_active if sketch_state is not None else None
 
     group_sk = _slice_sketch(sketch_state, 0, G * P, reshape_groups=G)
     tail_sk = _slice_sketch(sketch_state, G * P, cfg.num_layers, None)
@@ -417,7 +401,8 @@ def forward(
         new_caches = []
         new_sks = []
         for i, kind in enumerate(cfg.pattern):
-            sk_i = ({g: {k: v[k][i] for k in v} for g, v in gs.items()}
+            sk_i = ({g: jax.tree.map(lambda a: a[i], v)
+                     for g, v in gs.items()}
                     if gs is not None else None)
             x, nc, a, nsk = _apply_block(
                 kind, gp[i], x,
@@ -459,7 +444,8 @@ def forward(
     new_tail_caches = []
     new_tail_sk = []
     for i, kind in enumerate(cfg.tail_types):
-        sk_i = ({g: {k: v[k][i] for k in v} for g, v in tail_sk.items()}
+        sk_i = ({g: jax.tree.map(lambda a: a[i], v)
+                 for g, v in tail_sk.items()}
                 if tail_sk is not None else None)
         x, nc, a, nsk = _apply_block(
             kind, params["tail"][i], x, cfg=cfg, positions=positions,
@@ -494,32 +480,27 @@ def forward(
 
 
 def _restack_sk(new_sks: list, pattern) -> dict:
-    """list-per-position of {group: triple} -> {group: {k: stacked (P,...)}}"""
-    out = {}
-    for g in new_sks[0]:
-        out[g] = {k: jnp.stack([s[g][k] for s in new_sks])
-                  for k in new_sks[0][g]}
-    return out
+    """list-per-position of {name: SketchNode} -> {name: stacked (P,...)}"""
+    return {g: jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *[s[g] for s in new_sks])
+            for g in new_sks[0]}
 
 
-def _merge_sketch(state, group_sk, tail_sk, cfg):
-    """Reassemble the (L, w, k) arrays from scan ys + tail updates."""
+def _merge_sketch(state: NodeTree, group_sk, tail_sk, cfg) -> NodeTree:
+    """Reassemble the (L, w, k) stacked nodes from scan ys + tail
+    updates into a NodeTree with the step counter advanced."""
     P = len(cfg.pattern)
     G = cfg.num_groups
-    new = {k: state[k] for k in ("proj", "rank")}
-    new["step"] = state["step"] + 1
-    for g, v in state.items():
-        if g in ("proj", "rank", "step"):
-            continue
-        merged = {}
-        for leaf in v:
-            parts = []
-            if group_sk is not None and G > 0:
-                arr = group_sk[g][leaf]           # (G, P, ...) scan-stacked
-                parts.append(arr.reshape((G * P,) + arr.shape[2:]))
-            if tail_sk:
-                parts.append(jnp.stack([t[g][leaf] for t in tail_sk]))
-            merged[leaf] = jnp.concatenate(parts) if len(parts) > 1 \
-                else parts[0]
-        new[g] = merged
-    return new
+    new_nodes = {}
+    for g in state.nodes:
+        parts = []
+        if group_sk is not None and G > 0:
+            parts.append(jax.tree.map(          # (G, P, ...) scan-stacked
+                lambda a: a.reshape((G * P,) + a.shape[2:]), group_sk[g]))
+        if tail_sk:
+            parts.append(jax.tree.map(lambda *xs: jnp.stack(xs),
+                                      *[t[g] for t in tail_sk]))
+        new_nodes[g] = parts[0] if len(parts) == 1 else jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b]), parts[0], parts[1])
+    return dataclasses.replace(state, nodes=new_nodes,
+                               step=state.step + 1)

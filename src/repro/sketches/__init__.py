@@ -1,0 +1,31 @@
+"""Node-keyed sketch-state subsystem (DESIGN.md §6).
+
+One SketchNode per monitored activation node, one NodeTree per network,
+ONE canonical EMA-triple update (``ema_triple_update``, fused-Pallas or
+jnp), and one consumer (``sketched_matmul``). Every model / trainer /
+monitor / checkpoint in this repo goes through this package — adding a
+sketched node anywhere is a one-line ``NodeSpec`` registration.
+"""
+from repro.sketches.update import (
+    active_mask, corange_triple_update, ema_triple_update, mask_columns,
+)
+from repro.sketches.node import (
+    SketchNode, init_paper_node, zero_node_sketches,
+)
+from repro.sketches.tree import (
+    NodeSpec, NodeTree, init_node_tree, node_paths, refresh_tree,
+    tree_memory_bytes, zero_sketches,
+)
+from repro.sketches.linear import sketched_matmul
+from repro.sketches.compat import (
+    adopt_legacy, legacy_layout, restore_legacy_state,
+)
+
+__all__ = [
+    "active_mask", "adopt_legacy", "corange_triple_update",
+    "ema_triple_update", "init_node_tree", "init_paper_node",
+    "legacy_layout", "mask_columns", "NodeSpec", "NodeTree",
+    "node_paths", "refresh_tree", "restore_legacy_state",
+    "SketchNode", "sketched_matmul", "tree_memory_bytes",
+    "zero_node_sketches", "zero_sketches",
+]

@@ -1,0 +1,116 @@
+"""Load-time migration from the pre-NodeTree per-group dict layout.
+
+PR 0-2 stored LM sketch state as a plain dict::
+
+    {"proj": {"upsilon": ..., "omega": ..., "phi": ...},
+     "rank": (), "step": (),
+     <group>: {"sk_x": ..., "sk_y": ..., "sk_z": ..., "psi": ...}, ...}
+
+Checkpoints written then flatten to two fewer leaves than a NodeTree
+(which adds the ``key``/``epoch`` PRNG lineage). ``Checkpointer.restore``
+detects the leaf-count mismatch and routes through
+``restore_legacy_state`` here: the template's NodeTree subtrees are
+rewritten to the legacy dict layout, the stored leaves are unflattened
+into THAT structure, and the result is adopted back into NodeTrees —
+``key``/``epoch`` seeded from the template (a restored legacy run starts
+a fresh fold_in lineage; projections themselves are restored verbatim).
+
+Monitor ring buffers are RESET (zeroed, count=0) on migration: legacy
+writers recorded rows in sketch-dict iteration order, which drifted
+between insertion order and sorted order across checkpoint generations,
+while ``core.monitor.tree_metrics`` rows follow ``node_paths`` order —
+restoring the old buffer verbatim would interleave different layers'
+histories inside one windowed statistic. The ring re-warms within
+`monitor_window` steps and ``PathologyThresholds.min_fill`` gates the
+windowed flags meanwhile.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.sketches.node import SketchNode
+from repro.sketches.tree import NodeTree
+
+LEGACY_META = ("proj", "rank", "step")
+
+
+def legacy_layout(tree: NodeTree) -> dict:
+    """The PR 0-2 per-group dict equivalent of a NodeTree."""
+    out = {
+        "proj": {k: tree.proj[k] for k in ("upsilon", "omega", "phi")},
+        "rank": tree.rank,
+        "step": tree.step,
+    }
+    for name, node in tree.nodes.items():
+        if node.kind != "paper":
+            raise ValueError(
+                f"legacy checkpoints never held {node.kind!r} nodes "
+                f"(node {name!r})")
+        out[name] = {"sk_x": node.x, "sk_y": node.y, "sk_z": node.z,
+                     "psi": node.psi}
+    return out
+
+
+def adopt_legacy(old: dict, template: NodeTree) -> NodeTree:
+    """Rebuild a NodeTree from a restored legacy dict."""
+    nodes = {
+        name: dataclasses.replace(
+            template.nodes[name],
+            x=old[name]["sk_x"], y=old[name]["sk_y"],
+            z=old[name]["sk_z"], psi=old[name]["psi"])
+        for name in template.nodes
+    }
+    return dataclasses.replace(
+        template,
+        nodes=nodes,
+        proj={k: old["proj"][k] for k in ("upsilon", "omega", "phi")},
+        rank=old["rank"],
+        step=old["step"],
+    )
+
+
+def _is_tree(x) -> bool:
+    return isinstance(x, NodeTree)
+
+
+def restore_legacy_state(template, leaves):
+    """Unflatten legacy-checkpoint ``leaves`` against ``template`` (any
+    pytree whose NodeTree subtrees were dicts when the checkpoint was
+    written). Raises ValueError if the leaf count matches neither layout.
+    """
+    legacy_template = jax.tree.map(
+        lambda t: legacy_layout(t) if _is_tree(t) else t,
+        template, is_leaf=_is_tree)
+    flat, treedef = jax.tree.flatten(legacy_template)
+    if len(flat) != len(leaves):
+        raise ValueError(
+            f"checkpoint has {len(leaves)} leaves; template expects "
+            f"{len(flat)} (legacy layout) — not a known sketch layout")
+    legacy_state = jax.tree.unflatten(treedef, leaves)
+    # map the template's NodeTree positions over the restored legacy
+    # dicts (tree_map passes the corresponding legacy subtree whole
+    # wherever the template tree bottoms out at a NodeTree leaf)
+    state = jax.tree.map(
+        lambda t, o: adopt_legacy(o, t) if _is_tree(t) else o,
+        template, legacy_state, is_leaf=_is_tree)
+
+    # deferred import: repro.core's __init__ transitively re-imports
+    # this package, so binding MonitorState at module time would read a
+    # partially-initialized module during cold import
+    from repro.core.monitor import MonitorState
+
+    def _reset_monitor(x):
+        if isinstance(x, MonitorState):
+            return MonitorState(
+                buffer=jnp.zeros_like(x.buffer),
+                idx=jnp.zeros_like(x.idx),
+                count=jnp.zeros_like(x.count),
+            )
+        return x
+
+    return jax.tree.map(
+        _reset_monitor, state,
+        is_leaf=lambda x: isinstance(x, MonitorState))

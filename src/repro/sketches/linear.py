@@ -1,0 +1,86 @@
+"""Sketched-backprop linear layer (paper §4.4, Algorithm 2) as custom_vjp.
+
+The ONE consumer of a node's EMA triple on the training path. The forward
+is an ordinary matmul but saves ONLY the weight and the (tiny) sketch
+triple as residuals — the input activation never enters the backward
+closure, which is the paper's memory mechanism. The backward reconstructs
+A~ from the EMA sketches (core/reconstruct.py) and computes
+
+    grad_W = A~^T @ delta        (paper Eq. 8, transposed convention:
+                                  we store W as (d_in, d_out))
+    grad_x = delta @ W^T         (exact — delta propagation is never
+                                  sketched, matching the paper)
+
+`factored=True` (beyond-paper, DESIGN.md §7) exploits A~ = L R^T:
+    grad_W = R @ (L^T @ delta)   — O(T k (d+f)) instead of O(T d f).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def _zero_ct(x):
+    if jnp.issubdtype(x.dtype, jnp.floating) or \
+            jnp.issubdtype(x.dtype, jnp.complexfloating):
+        return jnp.zeros_like(x)
+    return np.zeros(x.shape, jax.dtypes.float0)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9))
+def sketched_matmul(
+    x: Array,          # (T, d_in)
+    w: Array,          # (d_in, d_out)
+    x_s: Array,        # (d_in, k_max)  sketch triple of the node feeding w
+    y_s: Array,
+    z_s: Array,
+    omega: Array,      # (T, k_max)
+    k_active: Array,   # () int32
+    recon_mode: str = "faithful",
+    ridge: float = 1e-4,
+    factored: bool = True,
+) -> Array:
+    return x @ w.astype(x.dtype)
+
+
+def _fwd(x, w, x_s, y_s, z_s, omega, k_active,
+         recon_mode, ridge, factored):
+    y = x @ w.astype(x.dtype)
+    # NOTE: x is deliberately NOT a residual.
+    return y, (w, x_s, y_s, z_s, omega, k_active)
+
+
+def _bwd(recon_mode, ridge, factored, res, g):
+    # deferred: core.reconstruct sits under the repro.core package whose
+    # __init__ re-imports this module (back-compat shim) — importing at
+    # trace time instead of module time breaks the cycle
+    from repro.core.reconstruct import reconstruct
+
+    w, x_s, y_s, z_s, omega, k_active = res
+    rec = reconstruct(
+        x_s, y_s, z_s, omega, k_active, mode=recon_mode, ridge=ridge
+    )
+    gf = g.astype(rec.left.dtype)
+    if factored:
+        grad_w = rec.right @ (rec.left.T @ gf)          # (d_in, d_out)
+    else:
+        grad_w = rec.dense().T @ gf
+    # cast the activation cotangent back to the primal dtype: the incoming
+    # g is often f32 (silu/norm segments) and an uncast grad_x propagates
+    # f32 through the whole residual-stream backward — doubling every
+    # SP/ZeRO all-gather (§Perf iteration 1).
+    grad_x = (g @ w.T.astype(g.dtype)).astype(w.dtype)
+    return (
+        grad_x,
+        grad_w.astype(w.dtype),
+        _zero_ct(x_s), _zero_ct(y_s), _zero_ct(z_s), _zero_ct(omega),
+        _zero_ct(k_active),
+    )
+
+
+sketched_matmul.defvjp(_fwd, _bwd)

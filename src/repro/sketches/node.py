@@ -1,0 +1,92 @@
+"""SketchNode — the per-node unit of sketch state (DESIGN.md §6).
+
+One node = one monitored activation tensor in some network (the input to
+a sketched matmul, an attention out-projection, a residual stream...).
+It owns the EMA triple (x, y, z), its node-specific interaction weights
+``psi``, and static metadata describing which sketch family the triple
+belongs to.
+
+Nodes stack: a transformer group stores its L layers' triples as one
+``SketchNode`` whose arrays carry a leading (L,) axis, sliced per layer
+inside the scan and restacked on the way out — the pytree machinery
+(``jax.tree.map``) handles both forms transparently.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+KINDS = ("paper", "corange")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SketchNode:
+    """EMA triple + psi for one activation node (possibly layer-stacked).
+
+    kind == "paper":   x/y/z (..., d, k_max), psi (..., k_max)
+    kind == "corange": x (..., k_max, N_b), y (..., d, k_max),
+                       z (..., s_max, s_max), psi (..., 0) — unused,
+                       the Tropp core weights live in the tree's
+                       shared projections.
+    """
+
+    x: Array
+    y: Array
+    z: Array
+    psi: Array
+    kind: str = dataclasses.field(
+        metadata=dict(static=True), default="paper")
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(
+                f"SketchNode.kind must be one of {KINDS}, got "
+                f"{self.kind!r}")
+
+    @property
+    def stack_dims(self) -> tuple[int, ...]:
+        """Leading stacked-layer dims (() for a single node)."""
+        return tuple(self.x.shape[:-2])
+
+    @property
+    def k_max(self) -> int:
+        return self.y.shape[-1]
+
+    @property
+    def width(self) -> int:
+        return self.y.shape[-2]
+
+
+def init_paper_node(psi_key: Array, width: int, k_max: int,
+                    layers: int | None = None,
+                    dtype=jnp.float32) -> SketchNode:
+    """Zero triple + fresh psi for a paper-kind node.
+
+    x/y/z are allocated as THREE distinct buffers on purpose: aliasing
+    one zeros array across the triple breaks `jit(donate_argnums=...)`
+    (the same buffer would be donated twice) in the production loop.
+    """
+    lead = () if layers is None else (layers,)
+    shape = lead + (width, k_max)
+    return SketchNode(
+        x=jnp.zeros(shape, dtype),
+        y=jnp.zeros(shape, dtype),
+        z=jnp.zeros(shape, dtype),
+        psi=jax.random.normal(psi_key, lead + (k_max,), dtype),
+        kind="paper",
+    )
+
+
+def zero_node_sketches(node: SketchNode) -> SketchNode:
+    """Zero x/y/z (rank change / projection refresh); psi untouched."""
+    return dataclasses.replace(
+        node,
+        x=jnp.zeros_like(node.x),
+        y=jnp.zeros_like(node.y),
+        z=jnp.zeros_like(node.z),
+    )

@@ -1,0 +1,160 @@
+"""NodeTree — the node-keyed registry of sketch state (DESIGN.md §6).
+
+One NodeTree holds every sketched activation node of a network, keyed by
+a stable name (``"ffn_in"``, ``"attn_o"``, ``"res"``, ``"hidden"``...),
+plus the state shared across nodes: the batch projection matrices, the
+active-rank scalar, and the PRNG lineage (``key``/``epoch``) that lets a
+rank change re-derive fresh projections via ``fold_in`` without a single
+shape change — so ``jit`` never recompiles (DESIGN.md §1).
+
+Adding a sketched node to any architecture is one ``NodeSpec`` entry in
+the registry passed to ``init_node_tree``; the update, monitoring,
+checkpointing and refresh machinery all iterate the tree generically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.sketches.node import SketchNode, init_paper_node, \
+    zero_node_sketches
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeSpec:
+    """Registration entry: one sketched activation node (per layer)."""
+
+    width: int                  # feature dim d of the node
+    layers: int | None = None   # leading stack dim (None = single node)
+    kind: str = "paper"
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class NodeTree:
+    """All sketch state of one network, keyed by node name."""
+
+    nodes: dict[str, SketchNode]
+    proj: Any        # {"upsilon","omega","phi"}: (T, k_max) for the
+    #                  paper layout; a CorangeProjections pytree for
+    #                  corange trees — anything whose leaves can be
+    #                  re-derived from shapes on refresh.
+    rank: Array      # () int32 — active target rank r_t
+    key: Array       # PRNG key the projections were derived from
+    epoch: Array     # () int32 — fold_in counter for projection refresh
+    step: Array      # () int32 — EMA update counter
+
+    @property
+    def k_active(self) -> Array:
+        return 2 * self.rank + 1
+
+
+def init_node_tree(
+    key: Array,
+    specs: dict[str, NodeSpec],
+    num_tokens: int,
+    k_max: int,
+    dtype=jnp.float32,
+) -> NodeTree:
+    """Zero sketches + fresh shared projections for a paper-kind registry.
+
+    RNG protocol (stable across PRs — checkpoints/baselines depend on
+    it): ``split(key, 4 + N)``; upsilon/omega/phi from ks[0..2]; node i's
+    psi from ks[4 + i] in registry insertion order (ks[3] is reserved).
+    """
+    for name, spec in specs.items():
+        if spec.kind != "paper":
+            raise ValueError(
+                f"init_node_tree only builds paper-kind nodes; node "
+                f"{name!r} has kind {spec.kind!r} — assemble the tree "
+                f"directly (see train/paper_trainer.init_mlp_sketch)")
+    ks = jax.random.split(key, 4 + len(specs))
+    proj = {
+        "upsilon": jax.random.normal(ks[0], (num_tokens, k_max), dtype),
+        "omega": jax.random.normal(ks[1], (num_tokens, k_max), dtype),
+        "phi": jax.random.normal(ks[2], (num_tokens, k_max), dtype),
+    }
+    nodes = {
+        name: init_paper_node(ks[4 + i], spec.width, k_max,
+                              layers=spec.layers, dtype=dtype)
+        for i, (name, spec) in enumerate(specs.items())
+    }
+    return NodeTree(
+        nodes=nodes,
+        proj=proj,
+        rank=jnp.asarray((k_max - 1) // 2, jnp.int32),
+        key=key,
+        epoch=jnp.asarray(0, jnp.int32),
+        step=jnp.asarray(0, jnp.int32),
+    )
+
+
+def node_paths(tree: NodeTree) -> list[str]:
+    """Flat, stable per-layer paths ("block3/ffn_in", "res/5", ...) in
+    the order ``tree_metrics`` emits monitor rows (sorted by node name,
+    layer-major within a node)."""
+    out = []
+    for name in sorted(tree.nodes):
+        node = tree.nodes[name]
+        if not node.stack_dims:
+            out.append(name)
+            continue
+        for layer in range(node.stack_dims[0]):
+            out.append(f"block{layer}/{name}" if name != "res"
+                       else f"res/{layer}")
+    return out
+
+
+def zero_sketches(tree: NodeTree) -> NodeTree:
+    """Zero every node's x/y/z (psi, projections, counters untouched)."""
+    return dataclasses.replace(
+        tree,
+        nodes={n: zero_node_sketches(v) for n, v in tree.nodes.items()},
+    )
+
+
+def refresh_tree(tree: NodeTree) -> NodeTree:
+    """Re-derive projections + psi via fold_in and zero the sketches —
+    the paper's "reinitialize matrices" after a rank change (Alg. 1).
+
+    Every output shape equals the input shape, so a jitted caller never
+    recompiles; only values (and the epoch/step counters) change.
+    """
+    epoch = tree.epoch + 1
+    base = jax.random.fold_in(tree.key, epoch)
+    k_proj, k_psi = jax.random.split(base)
+    leaves, treedef = jax.tree.flatten(tree.proj)
+    proj = jax.tree.unflatten(treedef, [
+        jax.random.normal(jax.random.fold_in(k_proj, i), leaf.shape,
+                          leaf.dtype)
+        for i, leaf in enumerate(leaves)
+    ])
+    nodes = {}
+    for i, name in enumerate(sorted(tree.nodes)):
+        node = zero_node_sketches(tree.nodes[name])
+        if node.psi.size:
+            node = dataclasses.replace(
+                node,
+                psi=jax.random.normal(jax.random.fold_in(k_psi, i),
+                                      node.psi.shape, node.psi.dtype))
+        nodes[name] = node
+    return dataclasses.replace(
+        tree,
+        nodes=nodes,
+        proj=proj,
+        epoch=epoch,
+        step=jnp.zeros_like(tree.step),
+    )
+
+
+def tree_memory_bytes(tree: NodeTree) -> int:
+    """Actual bytes held by the tree (sketches + psi + projections)."""
+    return sum(
+        leaf.size * jnp.dtype(leaf.dtype).itemsize
+        for leaf in jax.tree.leaves((tree.nodes, tree.proj))
+    )

@@ -1,0 +1,174 @@
+"""THE canonical EMA-triple update (paper Eqs. 5a-5c) — DESIGN.md §6.
+
+Every sketch-state layout in this repo (stacked ``SketchState``, the LM
+NodeTree, the MLP paper trainer, the corange variant) funnels through the
+two functions here; no other module may inline the EMA recurrence.
+
+``ema_triple_update`` dispatches between
+
+  * the fused Pallas kernel ``kernels/sketch_update`` — one HBM pass over
+    the activation matrix for all three contractions (DESIGN.md §7).
+    Selected when ``use_kernel`` is True, or by default whenever
+    ``kernels.ops.use_pallas(True)`` is active (interpret mode on CPU,
+    Mosaic on TPU);
+  * the pure-jnp reference path — bit-identical to the historical
+    ``ema_node_update`` / ``sketch_update_single`` implementations, the
+    default on CPU where interpret-mode Pallas would dominate runtime.
+
+DP-exact semantics (DESIGN.md §4): with ``axis_name`` set, the per-token
+increments are ``psum``-ed across the data-parallel axis BEFORE the EMA
+accumulate, so every worker holds the exact full-batch sketch (the
+increment is linear in the token rows; summing per-shard partial
+contractions is exactly the full-batch contraction). Without it, each
+worker sketches only its shard.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Masking utilities (static-shape adaptive rank, DESIGN.md §1)
+# ---------------------------------------------------------------------------
+
+
+def active_mask(k_active: Array, k_max: int, dtype=jnp.float32) -> Array:
+    """(k_max,) 1.0 for columns < k_active else 0.0."""
+    return (jnp.arange(k_max) < k_active).astype(dtype)
+
+
+def mask_columns(m: Array, k_active) -> Array:
+    """Zero the inactive trailing columns of (..., k_max)."""
+    return m * active_mask(k_active, m.shape[-1], m.dtype)
+
+
+# ---------------------------------------------------------------------------
+# The one EMA-triple update
+# ---------------------------------------------------------------------------
+
+
+def ema_triple_update(
+    x_s: Array,            # (d, k_max) input/co-range sketch X_s
+    y_s: Array,            # (d, k_max) output/range sketch Y_s
+    z_s: Array,            # (d, k_max) interaction sketch Z_s
+    a: Array,              # (T, d) the node's activation (stop-gradded)
+    upsilon: Array,        # (T, k_max)
+    omega: Array,          # (T, k_max)
+    phi: Array,            # (T, k_max)
+    psi: Array,            # (k_max,) node-specific interaction weights
+    beta: float,
+    k_active,              # () int32 — active k = 2r+1 (traced OK)
+    *,
+    a_out: Array | None = None,   # legacy layer-indexed form: X observes
+    #                               `a` (= A^[l-1]) while Y/Z observe
+    #                               a_out (= A^[l]); node-indexed callers
+    #                               leave it None (all three observe `a`)
+    axis_name: str | None = None,  # DP-exact: psum increments across axis
+    use_kernel: bool | None = None,  # None -> kernels.ops.pallas_enabled()
+) -> tuple[Array, Array, Array]:
+    """One EMA sketch update; returns masked (x, y, z) in x_s.dtype."""
+    a = jax.lax.stop_gradient(a)
+    dt = x_s.dtype
+    ups = mask_columns(upsilon.astype(dt), k_active)
+    omg = mask_columns(omega.astype(dt), k_active)
+    ph = mask_columns(phi.astype(dt), k_active)
+    ps = mask_columns(psi.astype(dt), k_active)
+
+    if use_kernel is None:
+        from repro.kernels.ops import pallas_enabled
+        use_kernel = pallas_enabled()
+
+    if use_kernel and a_out is None:
+        return _fused_kernel_update(
+            x_s, y_s, z_s, a, ups, omg, ph, ps, beta, k_active, axis_name)
+
+    at = a.astype(dt).T                                    # (d, T)
+    aot = at if a_out is None \
+        else jax.lax.stop_gradient(a_out).astype(dt).T
+    if axis_name is None:
+        x_new = beta * x_s + (1.0 - beta) * (at @ ups)
+        y_new = beta * y_s + (1.0 - beta) * (aot @ omg)
+        z_new = beta * z_s + (1.0 - beta) * ((aot @ ph) * ps[None, :])
+    else:
+        # full-batch increments: sum the per-shard contractions first
+        inc_x = jax.lax.psum((1.0 - beta) * (at @ ups), axis_name)
+        inc_y = jax.lax.psum((1.0 - beta) * (aot @ omg), axis_name)
+        inc_z = jax.lax.psum(
+            (1.0 - beta) * ((aot @ ph) * ps[None, :]), axis_name)
+        x_new = beta * x_s + inc_x
+        y_new = beta * y_s + inc_y
+        z_new = beta * z_s + inc_z
+    # keep masked columns exactly zero (EMA of zero is zero, but guard
+    # against drift after a rank decrease)
+    return (
+        mask_columns(x_new, k_active),
+        mask_columns(y_new, k_active),
+        mask_columns(z_new, k_active),
+    )
+
+
+def _fused_kernel_update(x_s, y_s, z_s, a, ups, omg, ph, ps, beta,
+                         k_active, axis_name):
+    """Route through the fused Pallas kernel (projections pre-masked so
+    the kernel's padded columns contribute zeros)."""
+    from repro.kernels.ops import interpret_mode
+    from repro.kernels.sketch_update import sketch_update
+
+    f32 = jnp.float32
+    if axis_name is None:
+        xn, yn, zn = sketch_update(
+            a, x_s.astype(f32), y_s.astype(f32), z_s.astype(f32),
+            ups.astype(f32), omg.astype(f32), ph.astype(f32),
+            ps.astype(f32), beta=float(beta), interpret=interpret_mode())
+    else:
+        # DP-exact: the kernel with zero input sketches yields the pure
+        # (1-beta)-scaled increment, which is psum-mergeable
+        zeros = jnp.zeros(x_s.shape, f32)
+        ix, iy, iz = sketch_update(
+            a, zeros, zeros, zeros,
+            ups.astype(f32), omg.astype(f32), ph.astype(f32),
+            ps.astype(f32), beta=float(beta), interpret=interpret_mode())
+        xn = beta * x_s.astype(f32) + jax.lax.psum(ix, axis_name)
+        yn = beta * y_s.astype(f32) + jax.lax.psum(iy, axis_name)
+        zn = beta * z_s.astype(f32) + jax.lax.psum(iz, axis_name)
+    dt = x_s.dtype
+    return (
+        mask_columns(xn.astype(dt), k_active),
+        mask_columns(yn.astype(dt), k_active),
+        mask_columns(zn.astype(dt), k_active),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Corange (Tropp) triple — the other sketch kind a node may carry
+# ---------------------------------------------------------------------------
+
+
+def corange_triple_update(
+    x_c: Array,        # (k_max, N_b) co-range sketch
+    y_c: Array,        # (d, k_max)   range sketch
+    z_c: Array,        # (s_max, s_max) core sketch, s = 2k+1
+    a: Array,          # (N_b, d) current batch activations
+    proj,              # CorangeProjections (duck-typed)
+    beta: float,
+    k_active,
+) -> tuple[Array, Array, Array]:
+    """EMA update of the Tropp triple against M_batch = a^T (DESIGN.md §1)."""
+    a = jax.lax.stop_gradient(a)
+    dt = x_c.dtype
+    s_active = 2 * k_active + 1
+    m = a.astype(dt).T                                     # (d, N_b)
+    ups = mask_columns(proj.upsilon.astype(dt).T, k_active).T   # mask rows
+    omg = mask_columns(proj.omega.astype(dt), k_active)
+    phi = mask_columns(proj.phi.astype(dt).T, s_active).T
+    psi = mask_columns(proj.psi.astype(dt), s_active)
+    x_new = beta * x_c + (1 - beta) * (ups @ m)
+    y_new = beta * y_c + (1 - beta) * (m @ omg)
+    z_new = beta * z_c + (1 - beta) * (phi @ (m @ psi))
+    x_new = mask_columns(x_new.T, k_active).T
+    y_new = mask_columns(y_new, k_active)
+    z_new = mask_columns(mask_columns(z_new, s_active).T, s_active).T
+    return x_new, y_new, z_new

@@ -25,10 +25,18 @@ import jax.numpy as jnp
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.core.adaptive import adaptive_step
 from repro.data.pipeline import PipelineConfig, host_batch
+from repro.sketches import refresh_tree
 from repro.train.state import RunConfig, TrainState, init_train_state
 from repro.train.step import make_dp_train_step, make_train_step
 
 log = logging.getLogger("repro.train")
+
+# Rank-change projection refresh, jitted ONCE per tree shape: fold_in
+# re-derives the projections/psi and zeroes the sketches with every
+# output shape equal to its input shape, so neither this function nor
+# the train step ever recompiles on a rank change (DESIGN.md §1; the
+# compilation-count test in tests/test_sketches.py asserts it).
+refresh_sketch_tree = jax.jit(refresh_tree)
 
 
 @dataclasses.dataclass
@@ -141,20 +149,16 @@ def run_training(cfg, run: RunConfig, loop: LoopConfig, *,
                 and state.sketch is not None
                 and (step + 1) % loop.steps_per_epoch == 0):
             adaptive, new_rank, changed = adaptive_step(
-                state.adaptive, state.sketch["rank"],
+                state.adaptive, state.sketch.rank,
                 jnp.asarray(metrics["loss"], jnp.float32), run.adaptive)
-            sketch = dict(state.sketch)
-            sketch["rank"] = new_rank
+            sketch = dataclasses.replace(state.sketch, rank=new_rank)
             if bool(changed):
-                for g, v in sketch.items():
-                    if g in ("proj", "rank", "step"):
-                        continue
-                    sketch[g] = dict(
-                        v, sk_x=jnp.zeros_like(v["sk_x"]),
-                        sk_y=jnp.zeros_like(v["sk_y"]),
-                        sk_z=jnp.zeros_like(v["sk_z"]))
-                log.info("rank change -> %d at step %d",
-                         int(new_rank), step)
+                # paper Alg. 1 "reinitialize matrices": zero sketches +
+                # fold_in fresh projections, shape-static (no recompile)
+                sketch = refresh_sketch_tree(sketch)
+                log.info("rank change -> %d at step %d "
+                         "(projection refresh, epoch %d)",
+                         int(new_rank), step, int(sketch.epoch))
             state = dataclasses.replace(state, adaptive=adaptive,
                                         sketch=sketch)
 

@@ -12,11 +12,19 @@ Sketching is per-NODE: each hidden activation node n (input to layer n+1)
 owns an EMA triple; layer l >= 1 reconstructs its input from node l-1's
 triple. This is the paper's per-layer (X^[l], Y^[l-1], Z^[l-1]) grouping
 re-indexed by node (DESIGN.md §1).
+
+Since the NodeTree unification (DESIGN.md §6) this module is a THIN
+driver: every variant is just a NodeTree configuration —
+  standard          no tree consulted
+  monitor           paper-kind tree, updates only (exact backprop)
+  sketched_*        paper-kind tree + sketched_matmul consumption
+  corange           corange-kind tree + lowrank_grad_matmul
+— and the update/refresh/monitoring machinery is the shared one in
+repro.sketches / core.monitor.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any
 
 import jax
@@ -26,17 +34,19 @@ from repro.configs.paper import MLPConfig
 from repro.core.adaptive import AdaptiveConfig, adaptive_step, \
     init_adaptive_state
 from repro.core.corange import (
-    corange_reconstruct, corange_update, make_corange_projections, s_of,
+    corange_reconstruct, make_corange_projections, s_of,
 )
 from repro.core.monitor import (
-    init_monitor_state, monitor_record, stack_metrics,
+    init_monitor_state, monitor_record, tree_metrics,
 )
-from repro.core.reconstruct import reconstruct
 from repro.core.sketch import SketchConfig
-from repro.core.sketched_linear import ema_node_update, sketched_matmul
-from repro.models.mlp import _act, mlp_init
+from repro.models.mlp import _act, mlp_init, mlp_node_specs
 from repro.optim.adamw import AdamWConfig, adamw_update, init_adamw, \
     sgd_update
+from repro.sketches import (
+    NodeTree, SketchNode, corange_triple_update, ema_triple_update,
+    refresh_tree, sketched_matmul,
+)
 
 Array = jax.Array
 
@@ -70,84 +80,97 @@ lowrank_grad_matmul.defvjp(_lr_fwd, _lr_bwd)
 
 
 def init_mlp_sketch(key, cfg: MLPConfig, scfg: SketchConfig,
-                    variant: str):
-    n_nodes = cfg.num_hidden_layers          # hidden activation nodes
-    d = cfg.d_hidden
+                    variant: str) -> NodeTree:
+    """NodeTree for the paper MLPs — one stacked "hidden" node.
+
+    RNG protocol is frozen (fixed-seed baselines depend on it):
+    split(key, 6); paper proj from ks[0..2], psi from ks[3]; corange
+    projections all from ks[0].
+    """
+    spec = mlp_node_specs(cfg)["hidden"]
+    n_nodes, d = spec.layers, spec.width
     k_max = scfg.k_max
     ks = jax.random.split(key, 6)
     if variant == "corange":
         proj = make_corange_projections(ks[0], d, cfg.batch_size, k_max)
-        return {
-            "proj": proj,
-            "x": jnp.zeros((n_nodes, k_max, cfg.batch_size)),
-            "y": jnp.zeros((n_nodes, d, k_max)),
-            "z": jnp.zeros((n_nodes, s_of(k_max), s_of(k_max))),
-            "rank": jnp.asarray(scfg.rank, jnp.int32),
-            "step": jnp.asarray(0, jnp.int32),
-        }
-    return {
-        "proj": {
+        node = SketchNode(
+            x=jnp.zeros((n_nodes, k_max, cfg.batch_size)),
+            y=jnp.zeros((n_nodes, d, k_max)),
+            z=jnp.zeros((n_nodes, s_of(k_max), s_of(k_max))),
+            psi=jnp.zeros((n_nodes, 0)),       # core weights live in proj
+            kind="corange",
+        )
+    else:
+        proj = {
             "upsilon": jax.random.normal(ks[0], (cfg.batch_size, k_max)),
             "omega": jax.random.normal(ks[1], (cfg.batch_size, k_max)),
             "phi": jax.random.normal(ks[2], (cfg.batch_size, k_max)),
-        },
-        "psi": jax.random.normal(ks[3], (n_nodes, k_max)),
-        "x": jnp.zeros((n_nodes, d, k_max)),
-        "y": jnp.zeros((n_nodes, d, k_max)),
-        "z": jnp.zeros((n_nodes, d, k_max)),
-        "rank": jnp.asarray(scfg.rank, jnp.int32),
-        "step": jnp.asarray(0, jnp.int32),
-    }
+        }
+        # three distinct buffers (aliasing breaks donation — node.py)
+        node = SketchNode(
+            x=jnp.zeros((n_nodes, d, k_max)),
+            y=jnp.zeros((n_nodes, d, k_max)),
+            z=jnp.zeros((n_nodes, d, k_max)),
+            psi=jax.random.normal(ks[3], (n_nodes, k_max)),
+        )
+    return NodeTree(
+        nodes={"hidden": node},
+        proj=proj,
+        rank=jnp.asarray(scfg.rank, jnp.int32),
+        key=key,
+        epoch=jnp.asarray(0, jnp.int32),
+        step=jnp.asarray(0, jnp.int32),
+    )
 
 
 # -- forward with sketched backward -----------------------------------------
 
 
-def sketched_forward(params, x, sk, cfg: MLPConfig, scfg: SketchConfig,
-                     variant: str):
-    """Returns (logits, new_sketch_state)."""
+def sketched_forward(params, x, sk: NodeTree, cfg: MLPConfig,
+                     scfg: SketchConfig, variant: str):
+    """Returns (logits, new_sketch_state). The "hidden" node's triple for
+    node l observes the activation feeding layer l+1; the canonical
+    update in repro.sketches is the ONLY EMA math invoked here."""
     act = _act(cfg.activation)
-    k_active = 2 * sk["rank"] + 1
+    k_active = sk.k_active
+    hidden = sk.nodes["hidden"]
     n = len(params)
     h = x
-    new = {key: ([] if key in ("x", "y", "z") else sk[key])
-           for key in sk}
+    xs_new, ys_new, zs_new = [], [], []
     for i, p in enumerate(params):
         node = i - 1                       # node feeding layer i
         if 1 <= i and variant in ("sketched_fixed", "sketched_adaptive",
                                   "monitor", "corange"):
             if variant == "corange":
-                xc, yc, zc = corange_update(
-                    sk["x"][node], sk["y"][node], sk["z"][node], h,
-                    sk["proj"], scfg.beta, k_active)
-                for key, v in (("x", xc), ("y", yc), ("z", zc)):
-                    new[key].append(v)
-                rec = corange_reconstruct(xc, yc, zc, sk["proj"], k_active)
+                xc, yc, zc = corange_triple_update(
+                    hidden.x[node], hidden.y[node], hidden.z[node], h,
+                    sk.proj, scfg.beta, k_active)
+                rec = corange_reconstruct(xc, yc, zc, sk.proj, k_active)
                 z = lowrank_grad_matmul(
                     h, p["w"], rec.left.astype(h.dtype),
                     rec.right.astype(h.dtype)) + p["bias"]
             else:
-                xs, ys, zs = ema_node_update(
-                    sk["x"][node], sk["y"][node], sk["z"][node], h,
-                    sk["proj"]["upsilon"], sk["proj"]["omega"],
-                    sk["proj"]["phi"], sk["psi"][node], scfg.beta,
-                    k_active)
-                for key, v in (("x", xs), ("y", ys), ("z", zs)):
-                    new[key].append(v)
+                xc, yc, zc = ema_triple_update(
+                    hidden.x[node], hidden.y[node], hidden.z[node], h,
+                    sk.proj["upsilon"], sk.proj["omega"], sk.proj["phi"],
+                    hidden.psi[node], scfg.beta, k_active)
                 if variant == "monitor":
                     z = h @ p["w"] + p["bias"]
                 else:
                     z = sketched_matmul(
-                        h, p["w"], xs, ys, zs, sk["proj"]["omega"],
+                        h, p["w"], xc, yc, zc, sk.proj["omega"],
                         k_active, scfg.recon_mode, scfg.ridge, True
                     ) + p["bias"]
+            xs_new.append(xc), ys_new.append(yc), zs_new.append(zc)
         else:
             z = h @ p["w"] + p["bias"]
         h = act(z) if i < n - 1 else z
-    for key in ("x", "y", "z"):
-        new[key] = jnp.stack(new[key]) if new[key] else sk[key]
-    new["step"] = sk["step"] + 1
-    return h, new
+    if xs_new:
+        hidden = dataclasses.replace(
+            hidden, x=jnp.stack(xs_new), y=jnp.stack(ys_new),
+            z=jnp.stack(zs_new))
+    return h, dataclasses.replace(sk, nodes={"hidden": hidden},
+                                  step=sk.step + 1)
 
 
 def plain_forward(params, x, cfg: MLPConfig):
@@ -216,21 +239,21 @@ def train(cfg: MLPConfig, scfg: SketchConfig, variant: str, *,
         x, y = batch_fn(jax.random.fold_in(key, s))
         params, opt, sk, loss = step(params, opt, sk, x, y)
         rec = {"step": s, "loss": float(loss),
-               "rank": int(sk["rank"])}
-        if variant != "standard" and variant != "corange":
-            monitor = monitor_record(
-                monitor, stack_metrics(sk["x"], sk["y"], sk["z"]))
+               "rank": int(sk.rank)}
+        if variant != "standard":
+            monitor = monitor_record(monitor, tree_metrics(sk))
         if eval_fn is not None and (s + 1) % steps_per_epoch == 0:
             rec.update(eval_fn(params))
             if adaptive is not None and variant == "sketched_adaptive":
                 astate, new_rank, changed = adaptive_step(
-                    astate, sk["rank"],
+                    astate, sk.rank,
                     jnp.asarray(rec["loss"], jnp.float32), adaptive)
-                sk = dict(sk, rank=new_rank)
+                sk = dataclasses.replace(sk, rank=new_rank)
                 if bool(changed):
-                    sk = dict(sk, x=jnp.zeros_like(sk["x"]),
-                              y=jnp.zeros_like(sk["y"]),
-                              z=jnp.zeros_like(sk["z"]))
+                    # paper Alg. 1 "reinitialize matrices": zero the
+                    # sketches AND re-derive projections via fold_in —
+                    # static shapes, so nothing recompiles
+                    sk = refresh_tree(sk)
         history.append(rec)
     return PaperTrainResult(params=params, history=history, sketch=sk,
                             monitor=monitor)

@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.monitor import monitor_record, stack_metrics
+from repro.core.monitor import monitor_record, tree_metrics
 from repro.models.transformer import forward
 from repro.optim.adamw import adamw_update
 from repro.optim.compression import compress_grads, init_error_feedback
@@ -53,10 +53,13 @@ def make_train_step(cfg: ArchConfig, run: RunConfig):
             loss = jax.lax.pmean(loss, ax)
             ce = jax.lax.pmean(ce, ax)
             aux = jax.lax.pmean(aux, ax)
-            if new_sketch is not None:
-                # EMA activation sketches updated from local shards:
-                # average the float leaves so replicas stay in sync
-                # (linear in the per-token increments)
+            if new_sketch is not None and run.sketch.dp_axis is None:
+                # legacy approximation: average the float leaves so
+                # replicas stay in sync. With run.sketch.dp_axis set
+                # (make_dp_train_step), the forward already psum-ed the
+                # per-token increments — DP-EXACT full-batch semantics
+                # (DESIGN.md §4) — and every replica holds identical
+                # sketches; no post-hoc collective is needed.
                 new_sketch = jax.tree.map(
                     lambda x: jax.lax.pmean(x, ax)
                     if jnp.issubdtype(x.dtype, jnp.floating) else x,
@@ -105,12 +108,7 @@ def make_train_step(cfg: ArchConfig, run: RunConfig):
 
         monitor = state.monitor
         if new_sketch is not None:
-            mets = []
-            for g, v in new_sketch.items():
-                if g in ("proj", "rank", "step"):
-                    continue
-                mets.append(stack_metrics(v["sk_x"], v["sk_y"], v["sk_z"]))
-            monitor = monitor_record(monitor, jnp.concatenate(mets, 0))
+            monitor = monitor_record(monitor, tree_metrics(new_sketch))
 
         new_state = TrainState(
             params=new_params, opt=new_opt, sketch=new_sketch,
@@ -143,18 +141,28 @@ def make_dp_train_step(cfg: ArchConfig, run: RunConfig, mesh):
     axis. Inside, the only cross-worker traffic is the gradient
     exchange — an O(D) dense pmean, or with countsketch compression the
     O(r*c) sketch-table psum plus the optional O(p2*k) second-round
-    value exchange. Params/optimizer moments/sketches stay identical on
-    every replica (the update is computed from merged quantities only);
-    the countsketch error-feedback accumulators are INTENTIONALLY
+    value exchange — and, with sketching enabled, the O(d*k) per-node
+    EMA increment psum that gives DP-EXACT full-batch sketch semantics
+    (the forward psums the per-token increments over the axis before
+    the EMA accumulate; see sketches.ema_triple_update / DESIGN.md §4).
+    Params/optimizer moments/sketches stay identical on every replica
+    (the update is computed from merged quantities only); the
+    countsketch error-feedback accumulators are INTENTIONALLY
     per-worker (SketchedSGD keeps each worker's unsent residual local —
     they live as device-local buffers under the replicated out-spec,
     and train/loop.py pmean-merges them mass-exactly before any
     checkpoint leaves the devices)."""
+    import dataclasses
+
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
     run = finalize_run(cfg, run)
     ax = run.dp_axis_name
+    if ax is not None and run.sketch.enabled and \
+            run.sketch.dp_axis is None:
+        run = dataclasses.replace(
+            run, sketch=dataclasses.replace(run.sketch, dp_axis=ax))
     if ax is None or ax not in mesh.axis_names:
         raise ValueError(
             f"make_dp_train_step needs run.dp_axis_name naming a mesh "

@@ -48,7 +48,7 @@ def test_train_step_no_nans(rng, arch):
     assert int(metrics["skipped_total"]) == 0
     # sketch state advanced for sketch-enabled archs
     if state2.sketch is not None:
-        assert int(state2.sketch["step"]) == 1
+        assert int(state2.sketch.step) == 1
 
 
 @pytest.mark.parametrize("arch", ARCHS)

@@ -74,6 +74,110 @@ def test_sharded_step_matches_unsharded(arch):
 
 
 @pytest.mark.slow
+def test_dp_exact_sketch_matches_full_batch_w4():
+    """DP-exact sketch semantics (ISSUE 3): under make_dp_train_step the
+    per-token EMA increments are psum-ed INSIDE the forward. On CPU,
+    psum sums the worker partials sequentially in rank order, so the
+    W=4 sketch must be BITWISE equal to the single-worker full-batch
+    sketch computed by accumulating the same per-shard increments in
+    worker order (which, by linearity of the contraction, IS the
+    full-batch sketch under the row-tiled projection)."""
+    out = _run("""
+        import dataclasses, functools
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.sketches import ema_triple_update
+
+        mesh = Mesh(np.array(jax.devices()[:4]), ("data",))
+        W, Tl, d, k = 4, 16, 24, 9
+        key = jax.random.PRNGKey(0)
+        ks = jax.random.split(key, 6)
+        a = jax.random.normal(ks[0], (W * Tl, d))
+        ups, omg, phi = (jax.random.normal(ks[i], (Tl, k))
+                         for i in (1, 2, 3))
+        psi = jax.random.normal(ks[4], (k,))
+        x0 = jnp.zeros((d, k))
+        ka = jnp.asarray(7)
+        beta = 0.9
+
+        upd = functools.partial(
+            ema_triple_update, upsilon=ups, omega=omg, phi=phi, psi=psi,
+            beta=beta, k_active=ka)
+        dp = jax.jit(shard_map(
+            lambda sh: upd(x0, x0, x0, a=sh, axis_name="data"),
+            mesh=mesh, in_specs=P("data"), out_specs=P(),
+            check_rep=False))
+        got = dp(a)
+
+        # single-worker full-batch reference: per-shard increments
+        # accumulated sequentially in worker order (x0 = 0 => the
+        # update IS the increment)
+        shards = a.reshape(W, Tl, d)
+        ref = [jnp.zeros((d, k))] * 3
+        for w in range(W):
+            inc = upd(jnp.zeros((d, k)), jnp.zeros((d, k)),
+                      jnp.zeros((d, k)), a=shards[w])
+            ref = [r + i for r, i in zip(ref, inc)]
+        for g, r in zip(got, ref):
+            assert np.array_equal(np.asarray(g), np.asarray(r)), \\
+                "psum-inside-forward is not bitwise full-batch"
+
+        # cross-check against the one-matmul full-batch sketch with the
+        # row-tiled projection (same reals, different fp summation)
+        full = ema_triple_update(
+            x0, x0, x0, a, jnp.tile(ups, (W, 1)), jnp.tile(omg, (W, 1)),
+            jnp.tile(phi, (W, 1)), psi, beta, ka)
+        for g, f in zip(got, full):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(f),
+                                       atol=1e-5, rtol=1e-5)
+
+        # end-to-end: the W=4 DP train step's sketch equals the sum of
+        # the four per-shard forward increments (zero-initialized EMA)
+        from repro.configs import get_arch, reduced
+        from repro.models.transformer import SketchSettings, forward
+        from repro.train.state import RunConfig, init_train_state
+        from repro.train.step import make_dp_train_step
+        from repro.data.synthetic import lm_batch
+
+        cfg = reduced(get_arch("tinyllama-1.1b"))
+        run = RunConfig(seq_len=16, global_batch=8, dp_axis_name="data",
+                        dp_workers=4,
+                        sketch=SketchSettings(enabled=True, k_max=9,
+                                              beta=0.9,
+                                              recon_mode="fast"))
+        state = init_train_state(jax.random.PRNGKey(1), cfg, run)
+        tokens, labels = lm_batch(jax.random.PRNGKey(2), 8, 16,
+                                  cfg.vocab_size)
+        dp_step = jax.jit(make_dp_train_step(cfg, run, mesh))
+        new_state, metrics = dp_step(state, {"tokens": tokens,
+                                             "labels": labels})
+
+        want = jax.tree.map(jnp.zeros_like,
+                            {n: (v.x, v.y, v.z)
+                             for n, v in state.sketch.nodes.items()})
+        for w in range(4):
+            out = forward(state.params, tokens[2 * w: 2 * w + 2],
+                          cfg=cfg, mode="train",
+                          sketch_state=state.sketch,
+                          settings=dataclasses.replace(run.sketch,
+                                                       dp_axis=None))
+            inc = {n: (v.x, v.y, v.z)
+                   for n, v in out["sketch_state"].nodes.items()}
+            want = jax.tree.map(lambda acc, i: acc + i, want, inc)
+        got_nodes = {n: (v.x, v.y, v.z)
+                     for n, v in new_state.sketch.nodes.items()}
+        for a_, b_ in zip(jax.tree.leaves(got_nodes),
+                          jax.tree.leaves(want)):
+            np.testing.assert_allclose(np.asarray(a_), np.asarray(b_),
+                                       atol=5e-6, rtol=5e-6)
+        assert bool(jnp.isfinite(metrics["loss"]))
+        print("OK")
+    """, devices=4)
+    assert "OK" in out
+
+
+@pytest.mark.slow
 def test_fsdp_strategy_matches_megatron():
     """The §Perf beyond-paper FSDP layout is numerically identical to the
     Megatron baseline (same math, different collectives)."""

@@ -50,7 +50,7 @@ def test_monitor_variant_identical_to_standard():
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    atol=1e-6)
     # ...but the sketches were maintained
-    assert float(jnp.abs(r2.sketch["y"]).max()) > 0.0
+    assert float(jnp.abs(r2.sketch.nodes["hidden"].y).max()) > 0.0
 
 
 def test_adaptive_variant_adjusts_rank():
