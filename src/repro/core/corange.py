@@ -104,3 +104,25 @@ def corange_reconstruct(
     c = c1 @ jnp.linalg.pinv(psi_p).T              # (k, k)
     # A~ = M~^T = P C^T Q^T = left @ right^T
     return Reconstruction(left=p, right=q @ c)
+
+
+def corange_reconstruct_batched(
+    x_c: Array,        # (L, k_max, N_b) stacked co-range sketches
+    y_c: Array,        # (L, d, k_max)
+    z_c: Array,        # (L, s_max, s_max)
+    proj: CorangeProjections,
+    k_active,
+    *,
+    ridge: float = 1e-8,
+) -> Reconstruction:
+    """One BATCHED reconstruction over a stacked corange SketchNode —
+    the vmap of `corange_reconstruct` with the shared projections held
+    constant. All L layers' QR/pinv solves lower as single batched
+    linalg calls, so a jaxpr of the MLP corange forward traces exactly
+    ONE reconstruct computation instead of L (asserted in
+    tests/test_reconstruct.py). Returns Reconstruction with left
+    (L, N_b, k) / right (L, d, k)."""
+    return jax.vmap(
+        lambda xc, yc, zc: corange_reconstruct(
+            xc, yc, zc, proj, k_active, ridge=ridge)
+    )(x_c, y_c, z_c)

@@ -197,3 +197,57 @@ def table_bytes(cs: CSVec) -> int:
     """Bytes a worker puts on the wire per merge (the table only — hash
     params are derived from a shared key, never transmitted)."""
     return cs.table.size * cs.table.dtype.itemsize
+
+
+# ---------------------------------------------------------------------------
+# int8 wire format (DESIGN.md §9) — jnp reference; the fused Pallas
+# kernel is repro.kernels.csvec_quant
+# ---------------------------------------------------------------------------
+
+QMAX = 127.0          # symmetric int8 grid: {-127..127}, no zero point
+
+
+def quantize_table(table: Array) -> tuple[Array, Array]:
+    """Symmetric per-row int8 quantization of an (r, c) sketch table.
+
+    Returns (q (r, c) int8, scale (r,) f32) with
+    ``dequant = q * scale[:, None]``. The grid is SYMMETRIC (zero-point
+    free) on purpose: a psum of W worker tables then carries no
+    accumulated zero-point bias (an affine grid would add W * zp), so
+    the merged estimate stays unbiased and the only quantization effect
+    is bounded per-entry rounding noise — which the SketchedSGD error
+    feedback absorbs (optim/sketched_sgd.py). Rounding is
+    round-half-to-even to match `jnp.round` everywhere. All-zero rows
+    get scale 0 and quantize losslessly to zeros.
+    """
+    t = table.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(t), axis=1)                       # (r,)
+    scale = amax / QMAX
+    safe = jnp.where(scale > 0.0, scale, 1.0)
+    q = jnp.clip(jnp.round(t / safe[:, None]), -QMAX, QMAX)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_table(q: Array, scale: Array) -> Array:
+    """Inverse grid map: (r, c) int8 + (r,) f32 -> (r, c) f32."""
+    return q.astype(jnp.float32) * scale[:, None]
+
+
+def quantize_residual(table: Array, q: Array, scale: Array) -> Array:
+    """The per-entry quantization error ``table - dequant(q, scale)``.
+
+    By construction ``dequant + residual == table`` exactly in f32
+    (it is literally a subtract-then-add of the same value — the
+    mass-exactness property the hypothesis suite asserts). The residual
+    stays WORKER-LOCAL: the transmitted update is reconstructed from
+    quantized tables only, so ``v_new = v_pre - update`` retains the
+    full quantization error in the error-feedback accumulator and
+    re-sends it on a later step.
+    """
+    return table.astype(jnp.float32) - dequantize_table(q, scale)
+
+
+def quantized_table_bytes(cs: CSVec) -> int:
+    """int8 wire cost of one table merge: 1 byte per counter plus the
+    (r,) f32 per-row scales."""
+    return cs.table.size * 1 + cs.rows * 4

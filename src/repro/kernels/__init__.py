@@ -7,7 +7,10 @@
 #                    flat gradient updating all r hash rows
 #   csvec_topk       chunked streaming heavy-hitter search over the
 #                    sketch — running top-k, never a (dim,) estimate
+#   csvec_quant      fused symmetric per-row int8 quantize/dequantize/
+#                    residual of the sketch table (DP wire, DESIGN §9)
 from repro.kernels.ops import (
     sketch_update, flash_attention, mlstm_chunk, csvec_insert,
-    csvec_topk, use_pallas, pallas_enabled, interpret_mode,
+    csvec_topk, csvec_quant, use_pallas, pallas_enabled,
+    interpret_mode,
 )

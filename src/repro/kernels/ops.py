@@ -10,6 +10,7 @@ from __future__ import annotations
 import jax
 
 from repro.kernels.csvec_insert import csvec_insert
+from repro.kernels.csvec_quant import csvec_quant
 from repro.kernels.csvec_topk import csvec_topk
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.mlstm_chunk import mlstm_chunk
@@ -34,5 +35,6 @@ def interpret_mode() -> bool:
 
 __all__ = [
     "sketch_update", "flash_attention", "mlstm_chunk", "csvec_insert",
-    "csvec_topk", "use_pallas", "pallas_enabled", "interpret_mode",
+    "csvec_quant", "csvec_topk", "use_pallas", "pallas_enabled",
+    "interpret_mode",
 ]

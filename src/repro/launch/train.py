@@ -65,6 +65,18 @@ def main():
     ap.add_argument("--cs-p2", type=int, default=0,
                     help="countsketch second-round candidate multiplier "
                          "(SketchedSGD p2; 0 disables)")
+    ap.add_argument("--wire-dtype", default="fp32",
+                    choices=["fp32", "int8"],
+                    help="count-sketch table precision on the DP wire "
+                         "(int8: ~4x fewer bytes; each worker's "
+                         "quantization residual stays in its error-"
+                         "feedback buffer)")
+    ap.add_argument("--dp-collective", default="fused",
+                    choices=["fused", "per_node"],
+                    help="DP collective layout: 'fused' = ONE flat "
+                         "psum per step (sketch increments + gradient "
+                         "wire + metrics), 'per_node' = PR 3 reference "
+                         "(one psum per sketch node per layer)")
     ap.add_argument("--strategy", default="megatron",
                     choices=["megatron", "fsdp"])
     ap.add_argument("--no-sketch", action="store_true")
@@ -85,7 +97,8 @@ def main():
     if args.compress != "none":
         from repro.optim.compression import CompressionConfig
         compression = CompressionConfig(mode=args.compress,
-                                        cs_p2=args.cs_p2)
+                                        cs_p2=args.cs_p2,
+                                        wire_dtype=args.wire_dtype)
     run = RunConfig(
         seq_len=seq, global_batch=batch,
         optimizer=AdamWConfig(lr=args.lr),
@@ -94,6 +107,7 @@ def main():
         compression=compression,
         dp_axis_name="data" if args.dp else None,
         dp_workers=args.dp if args.dp else 1,
+        dp_collective=args.dp_collective,
     )
     loop = LoopConfig(num_steps=args.steps, ckpt_every=args.ckpt_every,
                       ckpt_dir=args.ckpt_dir, log_every=10)

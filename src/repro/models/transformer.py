@@ -35,6 +35,7 @@ from repro.sketches import (
     NodeSpec, NodeTree, ema_triple_update, init_node_tree,
     sketched_matmul,
 )
+from repro.sketches.update import ema_triple_increment
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import rglru as rglru_mod
@@ -83,6 +84,21 @@ class SketchSettings:
     # None = each program sketches the tokens it sees (single-program
     # jit, or the legacy pmean approximation). Set by make_dp_train_step.
     dp_axis: str | None = None
+    # Fused-collective mode (DESIGN.md §9): the forward issues NO sketch
+    # collectives — it returns each node's LOCAL (1-beta)-scaled
+    # increments in the x/y/z slots, and the train step merges ALL nodes
+    # (plus the gradient wire) in one flat psum after the backward.
+    # Consumption (sketched_matmul) then reads the PRE-update triple —
+    # merged through the previous step — a documented one-step lag.
+    # Mutually exclusive with dp_axis; set by make_dp_train_step.
+    dp_defer: bool = False
+
+    def __post_init__(self):
+        if self.dp_defer and self.dp_axis is not None:
+            raise ValueError(
+                "SketchSettings.dp_defer (fused one-psum step) and "
+                "dp_axis (per-node psum inside the forward) are "
+                "mutually exclusive collective layouts")
 
 
 def lm_node_specs(cfg: ArchConfig) -> dict[str, NodeSpec]:
@@ -222,34 +238,50 @@ def abstract_cache(cfg: ArchConfig, batch: int, seq_len_ctx: int):
 
 
 def _update_triple(node, a, proj, k_active, st: SketchSettings):
-    """The canonical per-node EMA update, with DP-exact psum when the
-    settings name a data-parallel axis. Returns the updated SketchNode."""
+    """The canonical per-node EMA update. Returns
+    ``(consume_node, out_node)``:
+
+      * per-node collectives (default): both are the updated SketchNode
+        (DP-exact psum inside when `st.dp_axis` is set) — consumption
+        reads the current step's (merged) triple;
+      * fused mode (`st.dp_defer`): `out_node` carries the LOCAL
+        increments in its x/y/z slots (merged by the step's single
+        psum), and `consume_node` is the incoming node — the triple
+        merged through the PREVIOUS step, identical on every worker.
+    """
+    if st.dp_defer:
+        ix, iy, iz = ema_triple_increment(
+            node.x, node.y, node.z, a,
+            proj["upsilon"], proj["omega"], proj["phi"], node.psi,
+            st.beta, k_active)
+        return node, dataclasses.replace(node, x=ix, y=iy, z=iz)
     xs, ys, zs = ema_triple_update(
         node.x, node.y, node.z, a,
         proj["upsilon"], proj["omega"], proj["phi"], node.psi,
         st.beta, k_active, axis_name=st.dp_axis)
-    return dataclasses.replace(node, x=xs, y=ys, z=zs)
+    updated = dataclasses.replace(node, x=xs, y=ys, z=zs)
+    return updated, updated
 
 
 def _apply_sketched_mlp(p, x, cfg, sk, proj, k_active, st: SketchSettings):
     """Dense FFN with paper sketched backprop on both matmuls."""
     B, S, d = x.shape
     xf = x.reshape(B * S, d)
-    n_in = _update_triple(sk["ffn_in"], xf, proj, k_active, st)
+    c_in, n_in = _update_triple(sk["ffn_in"], xf, proj, k_active, st)
     mm = lambda a, w, t: sketched_matmul(
         a, w.astype(a.dtype), t.x, t.y, t.z, proj["omega"], k_active,
         st.recon_mode, st.ridge, st.factored)
     if cfg.mlp_type == "swiglu":
-        g = mm(xf, p["w_gate"], n_in)
-        u = mm(xf, p["w_up"], n_in)
+        g = mm(xf, p["w_gate"], c_in)
+        u = mm(xf, p["w_up"], c_in)
         h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
     else:
         h = jax.nn.gelu(
-            mm(xf, p["w_up"], n_in).astype(jnp.float32)
+            mm(xf, p["w_up"], c_in).astype(jnp.float32)
         ).astype(x.dtype)
     h = constrain(h, "tokens", "mlp_act")
-    n_h = _update_triple(sk["ffn_h"], h, proj, k_active, st)
-    y = mm(h, p["w_down"], n_h)
+    c_h, n_h = _update_triple(sk["ffn_h"], h, proj, k_active, st)
+    y = mm(h, p["w_down"], c_h)
     return y.reshape(B, S, d), {"ffn_in": n_in, "ffn_h": n_h}
 
 
@@ -316,9 +348,10 @@ def _apply_block(
     x = constrain(x, "batch", "seq_sp", "none")
 
     if sk is not None and "res" in sk and mode == "train":
-        # monitoring-only residual-stream sketches (stop-grad inside)
+        # monitoring-only residual-stream sketches (stop-grad inside;
+        # never consumed, so only the out node matters)
         new_sk = dict(sk, res=_update_triple(
-            sk["res"], x.reshape(B * S, d), proj, k_active, st))
+            sk["res"], x.reshape(B * S, d), proj, k_active, st)[1])
     return x, new_cache, aux, new_sk
 
 
@@ -343,10 +376,11 @@ def _attn_with_sketch(p, h, *, cfg, layer_type, positions, mode, cache,
     out = out.reshape(B, S, Hq, D)
     out = constrain(out, "batch", "seq_attn", "heads_act", "none")
     flat = out.reshape(B * S, Hq * D)
-    node = _update_triple(sk, flat, proj, k_active, st)
+    c_node, node = _update_triple(sk, flat, proj, k_active, st)
     wo = p["wo"].astype(dt).reshape(Hq * D, d)
-    y = sketched_matmul(flat, wo, node.x, node.y, node.z, proj["omega"],
-                        k_active, st.recon_mode, st.ridge, st.factored)
+    y = sketched_matmul(flat, wo, c_node.x, c_node.y, c_node.z,
+                        proj["omega"], k_active, st.recon_mode,
+                        st.ridge, st.factored)
     return y.reshape(B, S, d), None, node
 
 

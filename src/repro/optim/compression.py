@@ -47,12 +47,23 @@ class CompressionConfig:
     #                                 sketch, then psum the TRUE residual
     #                                 values at them (0 disables)
     cs_chunk: int = 16384           # streaming heavy-hitter chunk size
+    wire_dtype: str = "fp32"        # "fp32" | "int8" — precision of the
+    #                                 count-sketch table on the DP wire.
+    #                                 int8: symmetric per-row quantization
+    #                                 (countsketch/csvec.quantize_table);
+    #                                 each worker's quantization residual
+    #                                 stays in its error-feedback buffer
+    #                                 (DESIGN.md §9), ~4x fewer wire bytes
 
     def __post_init__(self):
         if self.mode not in ("topk", "countsketch"):
             raise ValueError(
                 f"CompressionConfig.mode must be 'topk' or "
                 f"'countsketch', got {self.mode!r}")
+        if self.wire_dtype not in ("fp32", "int8"):
+            raise ValueError(
+                f"CompressionConfig.wire_dtype must be 'fp32' or "
+                f"'int8', got {self.wire_dtype!r}")
         if self.mode == "countsketch":
             if self.cs_rows < 1:
                 raise ValueError(f"cs_rows must be >= 1, got {self.cs_rows}")
@@ -166,14 +177,18 @@ def compressed_bytes(num_params: int, cfg: CompressionConfig) -> int:
     """Bytes on the DP wire per step.
 
     topk ships (values + int32 indices); countsketch ships the (r, c)
-    f32 table — independent of num_params AND of worker count — plus,
-    when cs_p2 > 0, the second-round exchange of p2*k exact f32 values
+    table — independent of num_params AND of worker count — plus, when
+    cs_p2 > 0, the second-round exchange of p2*k exact f32 values
     (candidate indices are derived identically on every worker from the
-    merged sketch, so only values cross the wire)."""
+    merged sketch, so only values cross the wire). With
+    wire_dtype="int8" each table counter is one byte plus r f32 per-row
+    scales (DESIGN.md §9)."""
     if cfg.mode == "countsketch":
         if cfg.cs_cols is None:
             cfg = resolve_countsketch(cfg, num_params)
         p2 = cfg.cs_p2 * cfg.cs_k * 4 if cfg.cs_p2 > 0 else 0
+        if cfg.wire_dtype == "int8":
+            return cfg.cs_rows * cfg.cs_cols * 1 + cfg.cs_rows * 4 + p2
         return cfg.cs_rows * cfg.cs_cols * 4 + p2
     k = int(num_params * cfg.topk_frac)
     return k * ((1 if cfg.int8 else 4) + 4)

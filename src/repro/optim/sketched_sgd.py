@@ -29,17 +29,45 @@ even the sketch ESTIMATION error in v, so it is corrected on a later
 step — and makes mass conservation exact:  v_new + update == v_old + u
 (tested in tests/test_countsketch.py).
 
+int8 wire (DESIGN.md §9): with cfg.wire_dtype == "int8" the table is
+symmetrically per-row quantized BEFORE the merge. What crosses the wire
+is the int8 counters + r f32 scales (~4x fewer bytes); what the merged
+sum is built from is each worker's dequantized grid values — the psum
+of dequantized tables here is value-identical to an int8 all-gather
+followed by local dequant-sum on a real interconnect. The per-worker
+quantization residual (table - dequant) never leaves the worker: the
+transmitted update is reconstructed from quantized information only, so
+``v_new = v_pre - update`` keeps the full quantization error inside the
+error-feedback accumulator, to be re-sent on a later step — the same
+mechanism that already absorbs sketch estimation error. The symmetric
+(zero-point-free) grid keeps the merged estimate unbiased: a psum of W
+affine-quantized tables would accumulate W zero-point offsets.
+
+The compression is split at the collective boundary so the fused
+one-psum-per-step path (train/step.py) can ride the table on the same
+flat buffer as the EMA sketch increments:
+
+    local  = countsketch_local(grads, err, cfg)     # sketch + quantize
+    merged = <any exact table merge>                # psum / flat psum
+    out    = countsketch_finish(local, merged, ...) # recover + update
+
 Everything is flat-vector space: the gradient pytree is raveled once,
 compressed, and unraveled — static shapes, jit/shard_map friendly.
 """
 from __future__ import annotations
 
+import dataclasses
+from typing import Any
+
 import jax
 import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
+Array = jax.Array
+
 from repro.countsketch.csvec import (
-    CSVec, insert, make_csvec, table_bytes, topk_streaming,
+    CSVec, dequantize_table, insert, make_csvec, quantize_table,
+    quantized_table_bytes, table_bytes, topk_streaming,
 )
 from repro.kernels.csvec_insert import csvec_insert
 from repro.kernels.csvec_topk import csvec_topk
@@ -84,17 +112,31 @@ def _recover_candidates(cs: CSVec, k: int, cfg):
     return topk_streaming(cs, k, chunk=cfg.cs_chunk)
 
 
-def compress_grads_countsketch(grads, err_state, cfg, *,
-                               axis_name: str | None = None):
-    """Returns (compressed grads pytree, new {u, v} state, stats).
+@dataclasses.dataclass
+class CountsketchLocal:
+    """Worker-local compression state at the collective boundary: the
+    wire-ready sketch plus everything `countsketch_finish` needs. Lives
+    entirely inside one traced step — never a jit boundary pytree."""
 
-    With `axis_name` set (inside shard_map/pmap over the DP axis) the
-    O(r*c) sketch table is psum-merged instead of the O(D) dense
-    gradient; without it the path is the single-worker special case
-    (W=1, psum = identity) used under plain jit. With cfg.cs_p2 > 0 a
-    second O(p2*k) collective fetches the exact summed residual values
-    at the nominated candidates (SketchedSGD's p2 exchange), removing
-    sketch estimation noise from the transmitted coordinates."""
+    cs: CSVec           # table holds the WIRE values (dequantized grid
+    #                     values under wire_dtype="int8", raw f32 else).
+    #                     The quantization error table - dequant never
+    #                     needs materializing: the update is recovered
+    #                     from quantized information only, so residual
+    #                     subtraction v_new = v_pre - update retains it
+    #                     in v implicitly (csvec.quantize_residual is
+    #                     the explicit form the property tests check)
+    v_pre: Array        # dense error-feedback residual incl. this grad
+    u: Array            # momentum accumulator
+    unravel: Any        # flat -> grads pytree
+    cfg: Any            # geometry-resolved CompressionConfig
+    dim: int
+
+
+def countsketch_local(grads, err_state, cfg) -> CountsketchLocal:
+    """Everything BEFORE the table merge: momentum + error feedback in
+    dense space, the linear sketch of the residual, and (int8 wire) the
+    symmetric per-row quantize/dequantize whose error stays local."""
     from repro.optim.compression import resolve_countsketch
 
     flat, unravel = ravel_pytree(grads)
@@ -105,40 +147,92 @@ def compress_grads_countsketch(grads, err_state, cfg, *,
     v_pre = err_state["v"] + u
 
     cs = _sketch_residual(grad_csvec(cfg, dim), v_pre, cfg)
-    workers = 1.0
-    if axis_name is not None:
-        from repro.parallel.collectives import psum_csvec
-        cs = psum_csvec(cs, axis_name)
-        workers = jax.lax.psum(1.0, axis_name)
+    if cfg.wire_dtype == "int8":
+        if pallas_enabled():
+            from repro.kernels.csvec_quant import csvec_quant
+            _, _, dhat, _ = csvec_quant(
+                cs.table, interpret=interpret_mode())
+        else:
+            q, scale = quantize_table(cs.table)
+            dhat = dequantize_table(q, scale)
+        cs = dataclasses.replace(cs, table=dhat)
+    return CountsketchLocal(cs=cs, v_pre=v_pre, u=u, unravel=unravel,
+                            cfg=cfg, dim=dim)
 
+
+def countsketch_finish(local: CountsketchLocal, merged: CSVec, *,
+                       workers, axis_name: str | None = None):
+    """Everything AFTER the table merge: heavy-hitter recovery from the
+    merged table (+ optional p2 exact-value round over `axis_name`),
+    the transmitted update, and the new {u, v} error-feedback state.
+
+    `workers` is the DP axis size (traced or static); `merged` must be
+    identical on every worker (the caller's collective contract), so
+    candidate selection needs no index exchange."""
+    cfg, dim, v_pre, u = local.cfg, local.dim, local.v_pre, local.u
     k = min(cfg.cs_k, dim)
     p2_bytes = 0
     if cfg.cs_p2 > 0:
         n_cand = min(cfg.cs_p2 * k, dim)
-        _, cand = _recover_candidates(cs, n_cand, cfg)
+        _, cand = _recover_candidates(merged, n_cand, cfg)
         exact = v_pre[cand]
         if axis_name is not None:
-            exact = jax.lax.psum(exact, axis_name)
+            from repro.parallel.collectives import traced_psum
+            exact = traced_psum(exact, axis_name, name="cs_p2_values")
         exact = exact / workers
         _, pos = jax.lax.top_k(jnp.abs(exact), k)
         sel_idx, sel_val = cand[pos], exact[pos]
         p2_bytes = n_cand * 4
     else:
-        est, sel_idx = _recover_candidates(cs, k, cfg)
+        est, sel_idx = _recover_candidates(merged, k, cfg)
         sel_val = est / workers
 
     update = jnp.zeros(dim, jnp.float32).at[sel_idx].set(sel_val)
     sent = (update != 0.0).astype(jnp.float32)
+    # residual subtraction (not coordinate zeroing): v keeps sketch
+    # estimation error AND, under the int8 wire, the quantization error
+    # baked into `update` — both re-inject on a later step; mass
+    # conservation v_new + update == v_pre holds to one rounding at the
+    # k transmitted coordinates and bit-exactly everywhere else
     new_v = v_pre - update
     new_u = u * (1.0 - sent)
 
     dense_bytes = dim * 4
-    wire = table_bytes(cs) + p2_bytes
+    wire = (quantized_table_bytes(merged)
+            if cfg.wire_dtype == "int8" else table_bytes(merged))
+    wire += p2_bytes
     stats = {
         "wire_bytes": float(wire),
         "compression_ratio": wire / dense_bytes,
     }
-    return (unravel(update), {"u": new_u, "v": new_v}, stats)
+    return (local.unravel(update), {"u": new_u, "v": new_v}, stats)
+
+
+def compress_grads_countsketch(grads, err_state, cfg, *,
+                               axis_name: str | None = None):
+    """Returns (compressed grads pytree, new {u, v} state, stats).
+
+    With `axis_name` set (inside shard_map/pmap over the DP axis) the
+    O(r*c) sketch table is psum-merged instead of the O(D) dense
+    gradient; without it the path is the single-worker special case
+    (W=1, psum = identity) used under plain jit. With cfg.cs_p2 > 0 a
+    second O(p2*k) collective fetches the exact summed residual values
+    at the nominated candidates (SketchedSGD's p2 exchange), removing
+    sketch estimation noise from the transmitted coordinates.
+
+    This is the PER-NODE collective layout (one psum for the table, one
+    for p2); the fused one-collective-per-step path in train/step.py
+    calls `countsketch_local` / `countsketch_finish` directly and rides
+    the table on the step's single flat-segment psum."""
+    local = countsketch_local(grads, err_state, cfg)
+    merged = local.cs
+    workers = 1.0
+    if axis_name is not None:
+        from repro.parallel.collectives import psum_csvec
+        merged = psum_csvec(local.cs, axis_name)
+        workers = jax.lax.psum(1.0, axis_name)
+    return countsketch_finish(local, merged, workers=workers,
+                              axis_name=axis_name)
 
 
 def countsketch_wire_bytes(cfg, num_params: int = 0) -> int:

@@ -11,15 +11,56 @@ psum_csvec: the count-sketch gradient all-reduce. Count sketches are
 LINEAR, so a psum of worker tables IS the sketch of the summed
 gradients — exact merge with O(r*c) bytes on the wire regardless of
 model size or worker count (tested in tests/test_countsketch.py).
+
+psum_flat_segments: THE one collective of the fused DP step
+(DESIGN.md §9). A pytree of per-step cross-worker quantities (sketch
+increments, the count-sketch table, scalar metrics) is packed into a
+single flat f32 buffer, all-reduced once, and unpacked at precomputed
+static offsets — element-wise bitwise identical to issuing one psum per
+leaf, with one collective's latency instead of dozens.
+
+Every helper here reports (name, bytes) to the trace-time accounting
+hook (`collective_trace`), which the bench/tests use to assert the
+per-step collective count and wire-byte budget without parsing HLO.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 
 Array = jax.Array
+
+# -- trace-time collective accounting ---------------------------------------
+
+_TRACE_LOG: list[list] = []          # stack of active recorders
+
+
+@contextlib.contextmanager
+def collective_trace():
+    """Record every collective issued by the helpers in this module
+    while tracing under the context: yields a list of
+    ``{"name": str, "bytes": int}`` dicts (one per collective CALL —
+    a psum inside `lax.scan` is recorded once, matching its single
+    all-reduce in the lowered HLO)."""
+    log: list = []
+    _TRACE_LOG.append(log)
+    try:
+        yield log
+    finally:
+        _TRACE_LOG.pop()
+
+
+def _record(name: str, nbytes: int) -> None:
+    for log in _TRACE_LOG:
+        log.append({"name": name, "bytes": int(nbytes)})
+
+
+def traced_psum(x: Array, axis_name: str, *, name: str) -> Array:
+    _record(name, x.size * jnp.dtype(x.dtype).itemsize)
+    return jax.lax.psum(x, axis_name)
 
 
 def psum_csvec(cs, axis_name: str):
@@ -28,7 +69,27 @@ def psum_csvec(cs, axis_name: str):
     Workers MUST share the hash family (same construction key) — the
     (4, r) `params` leaf is replicated, never reduced."""
     return dataclasses.replace(
-        cs, table=jax.lax.psum(cs.table, axis_name))
+        cs, table=traced_psum(cs.table, axis_name, name="csvec_table"))
+
+
+def psum_flat_segments(tree, axis_name: str, *, spec=None,
+                       name: str = "flat_segments"):
+    """Sum a pytree across `axis_name` through ONE all-reduce.
+
+    Packs the leaves into one flat f32 buffer (layout memoized by
+    `sketches.wire.segment_spec` — pass `spec` to reuse a precomputed
+    one), psums it, and unpacks. Bitwise identical per element to
+    per-leaf psums: an all-reduce is element-wise, so buffer layout
+    cannot change any element's summation order."""
+    from repro.sketches.wire import (
+        pack_segments, segment_spec, unpack_segments,
+    )
+
+    if spec is None:
+        spec = segment_spec(tree)
+    flat = pack_segments(tree)
+    merged = traced_psum(flat, axis_name, name=name)
+    return unpack_segments(spec, merged)
 
 
 def merge_csvecs(sketches: list):

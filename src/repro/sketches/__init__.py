@@ -20,12 +20,18 @@ from repro.sketches.linear import sketched_matmul
 from repro.sketches.compat import (
     adopt_legacy, legacy_layout, restore_legacy_state,
 )
+from repro.sketches.wire import (
+    pack_segments, segment_spec, tree_increment_leaves, tree_wire_spec,
+    unpack_segments,
+)
 
 __all__ = [
     "active_mask", "adopt_legacy", "corange_triple_update",
     "ema_triple_update", "init_node_tree", "init_paper_node",
     "legacy_layout", "mask_columns", "NodeSpec", "NodeTree",
-    "node_paths", "refresh_tree", "restore_legacy_state",
-    "SketchNode", "sketched_matmul", "tree_memory_bytes",
-    "zero_node_sketches", "zero_sketches",
+    "node_paths", "pack_segments", "refresh_tree",
+    "restore_legacy_state", "segment_spec", "SketchNode",
+    "sketched_matmul", "tree_increment_leaves", "tree_memory_bytes",
+    "tree_wire_spec", "unpack_segments", "zero_node_sketches",
+    "zero_sketches",
 ]

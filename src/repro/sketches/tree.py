@@ -84,7 +84,7 @@ def init_node_tree(
                               layers=spec.layers, dtype=dtype)
         for i, (name, spec) in enumerate(specs.items())
     }
-    return NodeTree(
+    tree = NodeTree(
         nodes=nodes,
         proj=proj,
         rank=jnp.asarray((k_max - 1) // 2, jnp.int32),
@@ -92,6 +92,15 @@ def init_node_tree(
         epoch=jnp.asarray(0, jnp.int32),
         step=jnp.asarray(0, jnp.int32),
     )
+    # compute the tree's flat-segment offsets ONCE at construction
+    # (pure function of the static node shapes; DESIGN.md §9). The
+    # fused step's composite buffer — increments + grad wire + scalars
+    # — memoizes its own layout through the same segment_spec cache on
+    # first trace; this entry serves the increment-only consumers
+    # (wire accounting, the differential tier).
+    from repro.sketches.wire import tree_wire_spec
+    tree_wire_spec(tree)
+    return tree
 
 
 def node_paths(tree: NodeTree) -> list[str]:

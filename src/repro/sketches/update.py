@@ -143,6 +143,81 @@ def _fused_kernel_update(x_s, y_s, z_s, a, ups, omg, ph, ps, beta,
 
 
 # ---------------------------------------------------------------------------
+# Deferred-collective form (DESIGN.md §9): local increment + merge-apply
+# ---------------------------------------------------------------------------
+
+
+def ema_triple_increment(
+    x_s: Array, y_s: Array, z_s: Array,
+    a: Array,
+    upsilon: Array, omega: Array, phi: Array, psi: Array,
+    beta: float,
+    k_active,
+    *,
+    a_out: Array | None = None,
+    use_kernel: bool | None = None,
+) -> tuple[Array, Array, Array]:
+    """The worker-LOCAL masked ``(1-beta)``-scaled increments of one EMA
+    update — the quantity the fused DP step packs onto its single
+    flat-segment psum instead of psum-ing per node inside the forward.
+
+    Bit-compatibility contract with ``ema_triple_update(axis_name=...)``:
+    this computes exactly the expression that path feeds its psum, so
+
+        ema_apply_increment(x, psum(ema_triple_increment(...)), ...)
+        == ema_triple_update(..., axis_name=ax)
+
+    element for element (the differential tier in
+    tests/test_distributed.py asserts it bitwise at W=4). x_s/y_s/z_s
+    contribute only their dtype (projections are cast to it, mirroring
+    the inline path).
+    """
+    a = jax.lax.stop_gradient(a)
+    dt = x_s.dtype
+    ups = mask_columns(upsilon.astype(dt), k_active)
+    omg = mask_columns(omega.astype(dt), k_active)
+    ph = mask_columns(phi.astype(dt), k_active)
+    ps = mask_columns(psi.astype(dt), k_active)
+
+    if use_kernel is None:
+        from repro.kernels.ops import pallas_enabled
+        use_kernel = pallas_enabled()
+
+    if use_kernel and a_out is None:
+        # the fused kernel with zero input sketches yields the pure
+        # (1-beta)-scaled f32 increment — same trick as the DP-exact
+        # kernel branch, minus its psum
+        from repro.kernels.ops import interpret_mode
+        from repro.kernels.sketch_update import sketch_update
+
+        f32 = jnp.float32
+        zeros = jnp.zeros(x_s.shape, f32)
+        return sketch_update(
+            a, zeros, zeros, zeros,
+            ups.astype(f32), omg.astype(f32), ph.astype(f32),
+            ps.astype(f32), beta=float(beta),
+            interpret=interpret_mode())
+
+    at = a.astype(dt).T                                    # (d, T)
+    aot = at if a_out is None \
+        else jax.lax.stop_gradient(a_out).astype(dt).T
+    inc_x = (1.0 - beta) * (at @ ups)
+    inc_y = (1.0 - beta) * (aot @ omg)
+    inc_z = (1.0 - beta) * ((aot @ ph) * ps[None, :])
+    return inc_x, inc_y, inc_z
+
+
+def ema_apply_increment(x_s: Array, inc: Array, beta: float,
+                        k_active) -> Array:
+    """Fold a (merged) increment into the EMA state:
+    ``mask(beta * x + inc)`` in the increment's dtype, cast back to the
+    sketch dtype — the exact accumulate formula of both the jnp and the
+    kernel ``axis_name`` branches above."""
+    xn = beta * x_s.astype(inc.dtype) + inc
+    return mask_columns(xn.astype(x_s.dtype), k_active)
+
+
+# ---------------------------------------------------------------------------
 # Corange (Tropp) triple — the other sketch kind a node may carry
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,129 @@
+"""Flat-segment wire format for the one-collective-per-step DP path
+(DESIGN.md §9).
+
+Every per-step cross-worker quantity — the (d, k) EMA sketch increments
+of every node, the count-sketch gradient table, the replicated scalar
+metrics, and a constant-1 worker counter — is raveled into ONE flat f32
+buffer and exchanged with a single `psum`. The segment layout (offsets)
+is a pure function of the pytree's static shapes: it is computed once
+(``init_node_tree`` warms the cache at tree construction) and memoized,
+so packing under `jit` is pure trace-time bookkeeping — XLA sees one
+concatenate, one all-reduce, and static slices.
+
+Bitwise contract (the differential tier in tests/test_distributed.py
+holds the implementation to it): an all-reduce sums element-wise, so
+``unpack(psum(pack(leaves)))`` produces exactly the same bits as
+``[psum(leaf) for leaf in leaves]`` — packing never changes the
+summation order of any element, it only changes how many collectives
+carry them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+WIRE_DTYPE = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentSpec:
+    """Static layout of one packed wire buffer.
+
+    ``shapes``/``dtypes`` are per-leaf (flattening order of the source
+    pytree); ``offsets[i]`` is the start of leaf i in the flat buffer.
+    """
+
+    treedef: Any
+    shapes: tuple[tuple[int, ...], ...]
+    dtypes: tuple[str, ...]
+    offsets: tuple[int, ...]
+    total: int
+
+    @property
+    def num_segments(self) -> int:
+        return len(self.shapes)
+
+    @property
+    def wire_bytes(self) -> int:
+        """Bytes one worker puts on the all-reduce wire per step."""
+        return self.total * jnp.dtype(WIRE_DTYPE).itemsize
+
+
+def _size(shape) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n
+
+
+@functools.lru_cache(maxsize=256)
+def _spec_from_signature(treedef, shapes, dtypes) -> SegmentSpec:
+    offsets = []
+    off = 0
+    for s in shapes:
+        offsets.append(off)
+        off += _size(s)
+    return SegmentSpec(treedef=treedef, shapes=shapes, dtypes=dtypes,
+                       offsets=tuple(offsets), total=off)
+
+
+def segment_spec(tree) -> SegmentSpec:
+    """The (memoized) flat-segment layout of an arbitrary pytree of
+    arrays (or ShapeDtypeStructs). Computed once per distinct shape
+    signature; the NodeTree initializer warms it for the tree's
+    increment leaves so the hot path never recomputes offsets."""
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = tuple(tuple(leaf.shape) for leaf in leaves)
+    dtypes = tuple(str(jnp.dtype(leaf.dtype)) for leaf in leaves)
+    return _spec_from_signature(treedef, shapes, dtypes)
+
+
+def pack_segments(tree) -> Array:
+    """Ravel every leaf to f32 and concatenate into one (total,) buffer.
+
+    Raveling and concatenation are bit-preserving for f32 leaves; non-f32
+    leaves are widened to f32 for the wire (XLA:CPU widens bf16 before
+    collectives anyway — DESIGN.md §5) and narrowed back by `unpack`.
+    """
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return jnp.zeros((0,), WIRE_DTYPE)
+    return jnp.concatenate(
+        [leaf.astype(WIRE_DTYPE).reshape(-1) for leaf in leaves])
+
+
+def unpack_segments(spec: SegmentSpec, flat: Array):
+    """Inverse of `pack_segments`: static slices at the precomputed
+    offsets, reshaped and cast back to each leaf's dtype."""
+    if flat.shape != (spec.total,):
+        raise ValueError(
+            f"packed buffer has shape {flat.shape}, spec expects "
+            f"({spec.total},)")
+    leaves = [
+        flat[off:off + _size(shape)].reshape(shape).astype(dtype)
+        for shape, dtype, off in zip(spec.shapes, spec.dtypes,
+                                     spec.offsets)
+    ]
+    return jax.tree.unflatten(spec.treedef, leaves)
+
+
+def tree_increment_leaves(tree) -> dict:
+    """The cross-worker leaves of a NodeTree: each node's (x, y, z)
+    triple (psi/proj/rank/counters are replicated, never on the wire).
+    Stable ordering: sorted node name, then x, y, z."""
+    return {name: {"x": tree.nodes[name].x,
+                   "y": tree.nodes[name].y,
+                   "z": tree.nodes[name].z}
+            for name in sorted(tree.nodes)}
+
+
+def tree_wire_spec(tree) -> SegmentSpec:
+    """Segment layout of a NodeTree's increment leaves (memoized —
+    `init_node_tree` computes it once at construction)."""
+    return segment_spec(tree_increment_leaves(tree))

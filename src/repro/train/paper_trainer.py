@@ -130,7 +130,13 @@ def sketched_forward(params, x, sk: NodeTree, cfg: MLPConfig,
                      scfg: SketchConfig, variant: str):
     """Returns (logits, new_sketch_state). The "hidden" node's triple for
     node l observes the activation feeding layer l+1; the canonical
-    update in repro.sketches is the ONLY EMA math invoked here."""
+    update in repro.sketches is the ONLY EMA math invoked here.
+
+    The corange variant routes through the BATCHED reconstruction
+    (`_corange_forward`): one vmapped `corange_reconstruct` over the
+    stacked node instead of one solve per layer."""
+    if variant == "corange":
+        return _corange_forward(params, x, sk, cfg, scfg, batched=True)
     act = _act(cfg.activation)
     k_active = sk.k_active
     hidden = sk.nodes["hidden"]
@@ -140,27 +146,18 @@ def sketched_forward(params, x, sk: NodeTree, cfg: MLPConfig,
     for i, p in enumerate(params):
         node = i - 1                       # node feeding layer i
         if 1 <= i and variant in ("sketched_fixed", "sketched_adaptive",
-                                  "monitor", "corange"):
-            if variant == "corange":
-                xc, yc, zc = corange_triple_update(
-                    hidden.x[node], hidden.y[node], hidden.z[node], h,
-                    sk.proj, scfg.beta, k_active)
-                rec = corange_reconstruct(xc, yc, zc, sk.proj, k_active)
-                z = lowrank_grad_matmul(
-                    h, p["w"], rec.left.astype(h.dtype),
-                    rec.right.astype(h.dtype)) + p["bias"]
+                                  "monitor"):
+            xc, yc, zc = ema_triple_update(
+                hidden.x[node], hidden.y[node], hidden.z[node], h,
+                sk.proj["upsilon"], sk.proj["omega"], sk.proj["phi"],
+                hidden.psi[node], scfg.beta, k_active)
+            if variant == "monitor":
+                z = h @ p["w"] + p["bias"]
             else:
-                xc, yc, zc = ema_triple_update(
-                    hidden.x[node], hidden.y[node], hidden.z[node], h,
-                    sk.proj["upsilon"], sk.proj["omega"], sk.proj["phi"],
-                    hidden.psi[node], scfg.beta, k_active)
-                if variant == "monitor":
-                    z = h @ p["w"] + p["bias"]
-                else:
-                    z = sketched_matmul(
-                        h, p["w"], xc, yc, zc, sk.proj["omega"],
-                        k_active, scfg.recon_mode, scfg.ridge, True
-                    ) + p["bias"]
+                z = sketched_matmul(
+                    h, p["w"], xc, yc, zc, sk.proj["omega"],
+                    k_active, scfg.recon_mode, scfg.ridge, True
+                ) + p["bias"]
             xs_new.append(xc), ys_new.append(yc), zs_new.append(zc)
         else:
             z = h @ p["w"] + p["bias"]
@@ -169,6 +166,92 @@ def sketched_forward(params, x, sk: NodeTree, cfg: MLPConfig,
         hidden = dataclasses.replace(
             hidden, x=jnp.stack(xs_new), y=jnp.stack(ys_new),
             z=jnp.stack(zs_new))
+    return h, dataclasses.replace(sk, nodes={"hidden": hidden},
+                                  step=sk.step + 1)
+
+
+def _corange_forward(params, x, sk: NodeTree, cfg: MLPConfig,
+                     scfg: SketchConfig, *, batched: bool):
+    """Corange-variant forward.
+
+    ``batched=True`` (production): the per-layer reconstruct loop is
+    replaced by ONE vmapped reconstruction over the stacked SketchNode.
+    The observed activations are the PRIMAL hidden states, which do not
+    depend on any reconstruction (`lowrank_grad_matmul`'s primal is a
+    plain matmul), so the chain splits into three phases with no cycle:
+
+      1. stop-gradient activation sweep — collect every node's observed
+         activation (bitwise the same values the differentiable chain
+         recomputes in phase 3; XLA CSEs the duplicate matmuls);
+      2. one batched `corange_triple_update` + ONE batched
+         `corange_reconstruct` over the (L,)-stacked triple;
+      3. the differentiable chain, consuming the precomputed per-layer
+         (left, right) factors in `lowrank_grad_matmul`.
+
+    ``batched=False`` keeps the PR 3 sequential update-reconstruct-
+    consume loop as the parity reference (tests/test_reconstruct.py
+    diffs the two at 1e-6 and asserts the jaxpr solve counts).
+    """
+    from repro.core.corange import corange_reconstruct_batched
+
+    act = _act(cfg.activation)
+    k_active = sk.k_active
+    hidden = sk.nodes["hidden"]
+    n = len(params)
+
+    if not batched:                       # sequential reference
+        h = x
+        xs_new, ys_new, zs_new = [], [], []
+        for i, p in enumerate(params):
+            node = i - 1
+            if i >= 1:
+                xc, yc, zc = corange_triple_update(
+                    hidden.x[node], hidden.y[node], hidden.z[node], h,
+                    sk.proj, scfg.beta, k_active)
+                rec = corange_reconstruct(xc, yc, zc, sk.proj, k_active)
+                z = lowrank_grad_matmul(
+                    h, p["w"], rec.left.astype(h.dtype),
+                    rec.right.astype(h.dtype)) + p["bias"]
+                xs_new.append(xc), ys_new.append(yc), zs_new.append(zc)
+            else:
+                z = h @ p["w"] + p["bias"]
+            h = act(z) if i < n - 1 else z
+        hidden = dataclasses.replace(
+            hidden, x=jnp.stack(xs_new), y=jnp.stack(ys_new),
+            z=jnp.stack(zs_new))
+        return h, dataclasses.replace(sk, nodes={"hidden": hidden},
+                                      step=sk.step + 1)
+
+    # phase 1: observed activations (no AD path — updates stop-grad
+    # their observation anyway)
+    h = x
+    obs = []
+    for i, p in enumerate(params):
+        if i >= 1:
+            obs.append(h)
+        if i == n - 1:
+            break
+        h = act(h @ p["w"] + p["bias"])
+    obs = jax.lax.stop_gradient(jnp.stack(obs))        # (L, N_b, d)
+
+    # phase 2: one batched update + ONE batched reconstruction
+    xcs, ycs, zcs = jax.vmap(
+        lambda xc, yc, zc, a: corange_triple_update(
+            xc, yc, zc, a, sk.proj, scfg.beta, k_active)
+    )(hidden.x, hidden.y, hidden.z, obs)
+    rec = corange_reconstruct_batched(xcs, ycs, zcs, sk.proj, k_active)
+
+    # phase 3: differentiable chain consuming the per-layer factors
+    h = x
+    for i, p in enumerate(params):
+        if i >= 1:
+            z = lowrank_grad_matmul(
+                h, p["w"], rec.left[i - 1].astype(h.dtype),
+                rec.right[i - 1].astype(h.dtype)) + p["bias"]
+        else:
+            z = h @ p["w"] + p["bias"]
+        h = act(z) if i < n - 1 else z
+    hidden = dataclasses.replace(hidden, x=xcs, y=ycs, z=zcs)
     return h, dataclasses.replace(sk, nodes={"hidden": hidden},
                                   step=sk.step + 1)
 

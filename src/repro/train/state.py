@@ -45,11 +45,27 @@ class RunConfig:
     # sees only its batch shard (make_dp_train_step validates this
     # against the mesh).
     dp_workers: int = 1
+    # Collective layout of the DP step (DESIGN.md §9):
+    #   "fused"     ONE flat psum per step carrying every sketch-node
+    #               increment + the gradient wire (count-sketch table
+    #               or dense grads) + the scalar metrics. Sketched-
+    #               backprop consumption then reads the previous step's
+    #               merged triple (one-step lag); monitoring-only
+    #               sketches are semantics-exact.
+    #   "per_node"  the PR 3 reference: one psum per node per layer
+    #               inside the forward (consumption sees the current
+    #               step's merged triple) + per-leaf gradient pmean /
+    #               table psum. The differential tier diffs the two.
+    dp_collective: str = "fused"
 
     def __post_init__(self):
         if self.dp_workers < 1:
             raise ValueError(
                 f"dp_workers must be >= 1, got {self.dp_workers}")
+        if self.dp_collective not in ("fused", "per_node"):
+            raise ValueError(
+                f"dp_collective must be 'fused' or 'per_node', got "
+                f"{self.dp_collective!r}")
         if self.dp_workers > 1 and self.global_batch % self.dp_workers:
             raise ValueError(
                 f"global_batch={self.global_batch} not divisible by "

@@ -28,9 +28,47 @@ def cross_entropy(logits, labels, z_weight: float = 0.0):
     return ce
 
 
+def _apply_merged_increments(old_tree, inc_tree, merged_leaves, beta):
+    """Fold the psum-merged per-node increments into the previous
+    step's tree: ``mask(beta * old + inc)`` per x/y/z leaf — the exact
+    accumulate formula of the per-node-psum path, so the resulting tree
+    is bitwise identical to it (DESIGN.md §9)."""
+    import dataclasses
+
+    from repro.sketches.update import ema_apply_increment
+
+    k_active = inc_tree.k_active
+    nodes = {}
+    for name, node in old_tree.nodes.items():
+        m = merged_leaves[name]
+        nodes[name] = dataclasses.replace(
+            inc_tree.nodes[name],
+            x=ema_apply_increment(node.x, m["x"], beta, k_active),
+            y=ema_apply_increment(node.y, m["y"], beta, k_active),
+            z=ema_apply_increment(node.z, m["z"], beta, k_active),
+        )
+    return dataclasses.replace(inc_tree, nodes=nodes)
+
+
 def make_train_step(cfg: ArchConfig, run: RunConfig):
+    import dataclasses
+
     run = finalize_run(cfg, run)
     ax = run.dp_axis_name
+    fused = ax is not None and run.dp_collective == "fused"
+    if fused and run.sketch.enabled and not run.sketch.dp_defer:
+        # fused mode moves the sketch merge out of the forward: the
+        # forward must emit LOCAL increments (dp_defer), never per-node
+        # psums (dp_axis)
+        run = dataclasses.replace(
+            run, sketch=dataclasses.replace(
+                run.sketch, dp_defer=True, dp_axis=None))
+    if run.sketch.dp_defer and not fused:
+        raise ValueError(
+            "SketchSettings.dp_defer requires the fused DP step "
+            "(run.dp_collective='fused' with dp_axis_name set): a "
+            "deferred forward emits raw increments that only the fused "
+            "flat psum ever merges")
 
     def train_step(state: TrainState, batch):
         tokens = constrain(batch["tokens"], "batch", "none")
@@ -47,46 +85,107 @@ def make_train_step(cfg: ArchConfig, run: RunConfig):
 
         (loss, (new_sketch, ce, aux)), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(state.params, state.sketch)
-        if ax is not None:
-            # per-shard losses -> global means, so every replica takes
-            # the same NaN-guard branch and logs the same numbers
-            loss = jax.lax.pmean(loss, ax)
-            ce = jax.lax.pmean(ce, ax)
-            aux = jax.lax.pmean(aux, ax)
-            if new_sketch is not None and run.sketch.dp_axis is None:
-                # legacy approximation: average the float leaves so
-                # replicas stay in sync. With run.sketch.dp_axis set
-                # (make_dp_train_step), the forward already psum-ed the
-                # per-token increments — DP-EXACT full-batch semantics
-                # (DESIGN.md §4) — and every replica holds identical
-                # sketches; no post-hoc collective is needed.
-                new_sketch = jax.tree.map(
-                    lambda x: jax.lax.pmean(x, ax)
-                    if jnp.issubdtype(x.dtype, jnp.floating) else x,
-                    new_sketch)
 
         new_err = None
-        if run.compression is not None and \
-                run.compression.mode == "countsketch":
-            # Mergeable path: workers exchange an O(r*c) linear sketch
-            # (exact under psum) instead of the dense grad; the update
-            # is identical on every worker afterwards.
-            grads, new_err, _ = compress_grads_countsketch(
-                grads, state.opt["err"], run.compression, axis_name=ax)
+        if fused:
+            # ---- ONE collective per step (DESIGN.md §9) -------------
+            # Everything that crosses the DP axis rides a single flat
+            # f32 psum: every sketch node's local increments, the
+            # gradient wire (count-sketch table — int8-grid values
+            # under wire_dtype="int8" — or the dense grads), the
+            # scalar metrics, and a constant-1 worker counter. Segment
+            # offsets are static (memoized at NodeTree init); the
+            # collective count is asserted by the differential tier
+            # and the bench gate.
+            from repro.parallel.collectives import psum_flat_segments
+            from repro.sketches.wire import tree_increment_leaves
+
+            cs_mode = run.compression is not None and \
+                run.compression.mode == "countsketch"
+            segments = {
+                "n": jnp.ones((), jnp.float32),
+                "scalars": jnp.stack([loss, ce, aux]),
+            }
+            if new_sketch is not None:
+                segments["sketch"] = tree_increment_leaves(new_sketch)
+            local = None
+            if cs_mode:
+                from repro.optim.sketched_sgd import countsketch_local
+                local = countsketch_local(
+                    grads, state.opt["err"], run.compression)
+                segments["cs_table"] = local.cs.table
+            else:
+                # dense DP wire (also carries topk mode — top-k is NOT
+                # psum-mergeable, so under DP it rides the dense sum
+                # and its sparsification happens post-merge)
+                segments["grads"] = grads
+            merged = psum_flat_segments(segments, ax, name="fused_step")
+            workers = merged["n"]
+            loss = merged["scalars"][0] / workers
+            ce = merged["scalars"][1] / workers
+            aux = merged["scalars"][2] / workers
+            if new_sketch is not None:
+                new_sketch = _apply_merged_increments(
+                    state.sketch, new_sketch, merged["sketch"],
+                    run.sketch.beta)
+            if cs_mode:
+                import dataclasses as _dc
+
+                from repro.optim.sketched_sgd import countsketch_finish
+                merged_cs = _dc.replace(local.cs,
+                                        table=merged["cs_table"])
+                grads, new_err, _ = countsketch_finish(
+                    local, merged_cs, workers=workers, axis_name=ax)
+            else:
+                grads = jax.tree.map(lambda g: g / workers,
+                                     merged["grads"])
+                if run.compression is not None:
+                    grads, new_err, _ = compress_grads(
+                        grads, state.opt["err"], run.compression)
         else:
             if ax is not None:
-                # dense DP wire: the baseline all-reduce countsketch
-                # replaces — O(D) bytes across the axis. NOTE: top-k
-                # sparsification is NOT psum-mergeable, so under DP it
-                # rides this dense collective and saves no wire bytes;
-                # its compressed_bytes() accounting applies only to a
-                # (index, value)-shipping aggregation it doesn't have
-                # here. Use mode="countsketch" for real DP wire savings.
-                grads = jax.tree.map(
-                    lambda g: jax.lax.pmean(g, ax), grads)
-            if run.compression is not None:
-                grads, new_err, _ = compress_grads(
-                    grads, state.opt["err"], run.compression)
+                # per-shard losses -> global means, so every replica
+                # takes the same NaN-guard branch and logs the same
+                # numbers
+                loss = jax.lax.pmean(loss, ax)
+                ce = jax.lax.pmean(ce, ax)
+                aux = jax.lax.pmean(aux, ax)
+                if new_sketch is not None and run.sketch.dp_axis is None:
+                    # legacy approximation: average the float leaves so
+                    # replicas stay in sync. With run.sketch.dp_axis set
+                    # (make_dp_train_step per_node), the forward already
+                    # psum-ed the per-token increments — DP-EXACT
+                    # full-batch semantics (DESIGN.md §4) — and every
+                    # replica holds identical sketches; no post-hoc
+                    # collective is needed.
+                    new_sketch = jax.tree.map(
+                        lambda x: jax.lax.pmean(x, ax)
+                        if jnp.issubdtype(x.dtype, jnp.floating) else x,
+                        new_sketch)
+
+            if run.compression is not None and \
+                    run.compression.mode == "countsketch":
+                # Mergeable path: workers exchange an O(r*c) linear
+                # sketch (exact under psum) instead of the dense grad;
+                # the update is identical on every worker afterwards.
+                grads, new_err, _ = compress_grads_countsketch(
+                    grads, state.opt["err"], run.compression,
+                    axis_name=ax)
+            else:
+                if ax is not None:
+                    # dense DP wire: the baseline all-reduce countsketch
+                    # replaces — O(D) bytes across the axis. NOTE: top-k
+                    # sparsification is NOT psum-mergeable, so under DP
+                    # it rides this dense collective and saves no wire
+                    # bytes; its compressed_bytes() accounting applies
+                    # only to a (index, value)-shipping aggregation it
+                    # doesn't have here. Use mode="countsketch" for real
+                    # DP wire savings.
+                    grads = jax.tree.map(
+                        lambda g: jax.lax.pmean(g, ax), grads)
+                if run.compression is not None:
+                    grads, new_err, _ = compress_grads(
+                        grads, state.opt["err"], run.compression)
 
         lr_scale = warmup_cosine(
             state.step, warmup_steps=run.warmup_steps,
@@ -138,16 +237,27 @@ def make_eval_step(cfg: ArchConfig, run: RunConfig):
 def make_dp_train_step(cfg: ArchConfig, run: RunConfig, mesh):
     """The real multi-worker step: shard_map over `run.dp_axis_name`
     with the train state replicated and the batch split on its leading
-    axis. Inside, the only cross-worker traffic is the gradient
-    exchange — an O(D) dense pmean, or with countsketch compression the
-    O(r*c) sketch-table psum plus the optional O(p2*k) second-round
-    value exchange — and, with sketching enabled, the O(d*k) per-node
-    EMA increment psum that gives DP-EXACT full-batch sketch semantics
-    (the forward psums the per-token increments over the axis before
-    the EMA accumulate; see sketches.ema_triple_update / DESIGN.md §4).
+    axis.
+
+    Collective layout per `run.dp_collective` (DESIGN.md §9):
+
+      * "fused" (default): ONE flat-segment psum per step carries every
+        sketch node's local EMA increments, the gradient wire (the
+        count-sketch table — int8-grid values under wire_dtype="int8" —
+        or the dense grads), the scalar metrics, and a worker counter.
+        Only the optional countsketch p2 round adds a second, O(p2*k)
+        collective. Sketched-backprop consumption reads the previous
+        step's merged triples (one-step lag); monitoring-only sketches
+        are bitwise identical to per_node.
+      * "per_node": the PR 3 reference layout — with sketching enabled,
+        an O(d*k) psum per node per layer inside the forward (DP-EXACT
+        consumption of the current step's full-batch sketch, DESIGN.md
+        §4), plus the per-leaf dense pmean or table psum for grads.
+
     Params/optimizer moments/sketches stay identical on every replica
     (the update is computed from merged quantities only); the
-    countsketch error-feedback accumulators are INTENTIONALLY
+    countsketch error-feedback accumulators — which under the int8 wire
+    also carry each worker's quantization residual — are INTENTIONALLY
     per-worker (SketchedSGD keeps each worker's unsent residual local —
     they live as device-local buffers under the replicated out-spec,
     and train/loop.py pmean-merges them mass-exactly before any
@@ -160,9 +270,12 @@ def make_dp_train_step(cfg: ArchConfig, run: RunConfig, mesh):
     run = finalize_run(cfg, run)
     ax = run.dp_axis_name
     if ax is not None and run.sketch.enabled and \
+            run.dp_collective == "per_node" and \
             run.sketch.dp_axis is None:
         run = dataclasses.replace(
             run, sketch=dataclasses.replace(run.sketch, dp_axis=ax))
+    # (fused mode needs no settings surgery here: make_train_step flips
+    # the forward to deferred-increment emission itself)
     if ax is None or ax not in mesh.axis_names:
         raise ValueError(
             f"make_dp_train_step needs run.dp_axis_name naming a mesh "

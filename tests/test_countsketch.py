@@ -662,3 +662,190 @@ def test_query_all_shape_and_cols_validation(rng):
         make_csvec(rng, dim=10, rows=2, cols=100)   # not a power of two
     cs = make_csvec(rng, dim=300, rows=3, cols=128)
     assert query_all(insert(cs, jnp.ones(300))).shape == (300,)
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 4: int8 wire + flat-segment wire format
+# ---------------------------------------------------------------------------
+
+
+def test_quant_kernel_matches_reference(rng):
+    """Pallas csvec_quant vs the jnp reference: q/scale/dhat bit-exact;
+    resid within one ulp of the row amax (XLA may FMA-contract the
+    final multiply-subtract)."""
+    from repro.kernels.csvec_quant import csvec_quant, csvec_quant_ref
+
+    for seed, shape, mult in [(0, (5, 256), 10.0), (1, (3, 128), 1e-4),
+                              (2, (7, 512), 1e6), (3, (1, 128), 0.0)]:
+        t = jax.random.normal(jax.random.PRNGKey(seed), shape) * mult
+        t = t.at[0].set(0.0) if seed == 2 else t   # an all-zero row
+        got = csvec_quant(t)
+        want = csvec_quant_ref(t)
+        for name, a, b in zip(("q", "scale", "dhat"), got[:3],
+                              want[:3]):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), \
+                (seed, name)
+        ulp = np.spacing(np.float32(np.abs(np.asarray(t)).max()))
+        d = np.abs(np.asarray(got[3]) - np.asarray(want[3])).max()
+        assert d <= max(float(ulp), 0.0), (seed, d)
+
+
+def test_compressed_bytes_int8_accounting():
+    """int8 wire = 1 byte/counter + r f32 scales (+ p2 round)."""
+    base = dict(mode="countsketch", cs_rows=5, cs_cols=1024, cs_k=64)
+    f32 = CompressionConfig(**base)
+    i8 = CompressionConfig(**base, wire_dtype="int8")
+    assert compressed_bytes(10 ** 6, f32) == 5 * 1024 * 4
+    assert compressed_bytes(10 ** 6, i8) == 5 * 1024 + 5 * 4
+    i8p2 = CompressionConfig(**base, wire_dtype="int8", cs_p2=2)
+    assert compressed_bytes(10 ** 6, i8p2) == \
+        5 * 1024 + 5 * 4 + 2 * 64 * 4
+    with pytest.raises(ValueError):
+        CompressionConfig(**base, wire_dtype="fp16")
+
+
+def test_int8_error_feedback_converges_on_fixed_gradient(rng):
+    """The int8 twin of the fp32 convergence test above: feeding the
+    same sparse heavy gradient repeatedly through the int8-wire
+    compressor, the cumulative transmitted mass still catches up with
+    steps * g — the error-feedback buffer absorbs the quantization
+    residual on top of the sketch estimation error — and the exact
+    decomposition sent + v == steps * g (mass conservation across the
+    whole run) holds to fp accumulation tolerance."""
+    cfg = CompressionConfig(mode="countsketch", cs_rows=5, cs_cols=1024,
+                            cs_k=32, cs_momentum=0.0, wire_dtype="int8")
+    g = {"w": jnp.zeros(5000).at[jnp.arange(0, 5000, 250)].set(5.0)}
+    err = init_countsketch_state(g)
+    sent = jnp.zeros(5000)
+    steps = 10
+    for _ in range(steps):
+        comp, err, _ = compress_grads_countsketch(g, err, cfg)
+        sent = sent + comp["w"]
+    heavy = np.arange(0, 5000, 250)
+    np.testing.assert_allclose(np.asarray(sent)[heavy], steps * 5.0,
+                               rtol=0.1)
+    np.testing.assert_allclose(np.asarray(sent + err["v"]),
+                               np.asarray(steps * g["w"]), atol=1e-3)
+
+
+# -- property tests (hypothesis-fuzzed in CI, seeded fallback locally) ------
+
+
+def _check_quant_mass_exact(seed: int, rows: int, cols: int,
+                            scale_exp: int):
+    """quantize -> dequantize + residual reproduces the table: bitwise
+    with the reference decomposition, and the row SUM is preserved to
+    fp32 ulp resolution."""
+    from repro.countsketch.csvec import (
+        dequantize_table, quantize_residual, quantize_table,
+    )
+
+    t = jax.random.normal(jax.random.PRNGKey(seed), (rows, cols)) \
+        * (10.0 ** scale_exp)
+    q, scale = quantize_table(t)
+    dhat = dequantize_table(q, scale)
+    resid = quantize_residual(t, q, scale)
+    assert np.array_equal(np.asarray(dhat + resid), np.asarray(t))
+    row_amax = np.abs(np.asarray(t)).max(axis=1)
+    sum_err = np.abs(np.asarray((dhat + resid).sum(axis=1) -
+                                t.sum(axis=1)))
+    assert np.all(sum_err <= cols * np.spacing(
+        row_amax.astype(np.float32)))
+
+
+def _check_quantized_merge_linearity(seed: int, workers: int,
+                                     rows: int, cols: int):
+    """Merging W quantized tables (sum of dequantized grids — exactly
+    what an int8 all-gather + local dequant-sum computes) deviates from
+    the exact f32 merge by at most the stacked rounding bound
+    sum_w scale_w / 2 per entry — the amount the per-worker error
+    feedback retains."""
+    from repro.countsketch.csvec import dequantize_table, quantize_table
+
+    key = jax.random.PRNGKey(seed)
+    tables = jax.random.normal(key, (workers, rows, cols)) * \
+        jnp.exp(jax.random.normal(jax.random.fold_in(key, 1),
+                                  (workers, 1, 1)))
+    merged_q = jnp.zeros((rows, cols))
+    bound = jnp.zeros((rows, 1))
+    for w in range(workers):
+        q, scale = quantize_table(tables[w])
+        merged_q = merged_q + dequantize_table(q, scale)
+        bound = bound + scale[:, None] / 2.0
+    exact = tables.sum(axis=0)
+    slack = 1.0 + 1e-5     # fp accumulation slop on the bound itself
+    assert np.all(np.abs(np.asarray(merged_q - exact)) <=
+                  np.asarray(bound) * slack + 1e-12)
+
+
+def _check_pack_roundtrip(seed: int, shapes):
+    """pack/unpack over ragged node shapes is a bitwise bijection in
+    both directions (unpack∘pack == id on leaves; pack∘unpack == id on
+    the flat buffer)."""
+    from repro.sketches.wire import (
+        pack_segments, segment_spec, unpack_segments,
+    )
+
+    key = jax.random.PRNGKey(seed)
+    tree = {f"n{i}": jax.random.normal(jax.random.fold_in(key, i), s)
+            for i, s in enumerate(shapes)}
+    spec = segment_spec(tree)
+    flat = pack_segments(tree)
+    assert flat.shape == (spec.total,)
+    back = unpack_segments(spec, flat)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    flat2 = pack_segments(back)
+    assert np.array_equal(np.asarray(flat), np.asarray(flat2))
+
+
+@pytest.mark.parametrize("seed,rows,cols,scale_exp", [
+    (0, 5, 256, 0), (1, 3, 128, -6), (2, 7, 512, 6), (3, 1, 128, 2),
+])
+def test_quant_mass_exact_seeded(seed, rows, cols, scale_exp):
+    _check_quant_mass_exact(seed, rows, cols, scale_exp)
+
+
+@pytest.mark.parametrize("seed,workers,rows,cols", [
+    (0, 4, 5, 256), (1, 2, 3, 128), (2, 8, 5, 512),
+])
+def test_quantized_merge_linearity_seeded(seed, workers, rows, cols):
+    _check_quantized_merge_linearity(seed, workers, rows, cols)
+
+
+@pytest.mark.parametrize("seed,shapes", [
+    (0, [(3, 24, 9), (24, 9), (5, 7), (19,)]),          # mixed ranks
+    (1, [(9, 16), (48, 9), (19, 19)]),                  # corange-ish
+    (2, [(1,)]),
+    (3, [(2, 3), (0, 5), (4,)]),                        # empty leaf
+])
+def test_pack_roundtrip_seeded(seed, shapes):
+    _check_pack_roundtrip(seed, shapes)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HYP_SETTINGS = dict(max_examples=25, deadline=None)
+
+    @given(st.integers(0, 2 ** 31 - 1), st.integers(1, 8),
+           st.sampled_from([128, 256, 512]), st.integers(-6, 6))
+    @settings(**_HYP_SETTINGS)
+    def test_quant_mass_exact_property(seed, rows, cols, scale_exp):
+        _check_quant_mass_exact(seed, rows, cols, scale_exp)
+
+    @given(st.integers(0, 2 ** 31 - 1), st.integers(1, 8),
+           st.integers(1, 6), st.sampled_from([128, 256]))
+    @settings(**_HYP_SETTINGS)
+    def test_quantized_merge_linearity_property(seed, workers, rows,
+                                                cols):
+        _check_quantized_merge_linearity(seed, workers, rows, cols)
+
+    @given(st.integers(0, 2 ** 31 - 1),
+           st.lists(st.lists(st.integers(0, 12), min_size=1,
+                             max_size=3),
+                    min_size=1, max_size=6))
+    @settings(**_HYP_SETTINGS)
+    def test_pack_roundtrip_property(seed, shapes):
+        _check_pack_roundtrip(seed, [tuple(s) for s in shapes])
+except ImportError:     # hypothesis is a dev-only dependency
+    pass

@@ -249,3 +249,370 @@ def test_mini_multipod_dryrun_compiles():
         print("OK")
     """)
     assert "OK" in out
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 4 differential tier: the fused one-collective-per-step DP path
+# vs the PR 3 per-node-psum reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_fused_flat_psum_bitwise_parity_mlp_variant_trees():
+    """W=4 differential parity at the sketch-subsystem level, one tree
+    per MLP variant (sketched_fixed / sketched_adaptive / monitor as
+    paper-kind trees at their distinct ranks+betas, corange as the
+    ragged Tropp tree): packing every node's local increments into ONE
+    flat psum and applying the merged result must be BITWISE identical
+    to the PR 3 per-node `ema_triple_update(axis_name=...)` psums —
+    and, for the corange kind, to per-leaf psums of its increments."""
+    out = _run("""
+        import dataclasses, functools
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.configs.paper import MLPConfig
+        from repro.core.sketch import SketchConfig
+        from repro.sketches import corange_triple_update, \\
+            ema_triple_update, segment_spec, tree_increment_leaves
+        from repro.sketches.update import ema_apply_increment, \\
+            ema_triple_increment
+        from repro.parallel.collectives import psum_flat_segments
+        from repro.train.paper_trainer import init_mlp_sketch
+
+        mesh = Mesh(np.array(jax.devices()[:4]), ("data",))
+        W, Tl = 4, 8
+
+        def paper_tree(variant, rank, beta, seed):
+            cfg = MLPConfig(name="t", d_in=20, d_hidden=28, d_out=4,
+                            num_hidden_layers=3, activation="tanh",
+                            batch_size=Tl, learning_rate=1e-3)
+            scfg = SketchConfig(rank=rank, max_rank=4, beta=beta,
+                                batch_size=Tl)
+            sk = init_mlp_sketch(jax.random.PRNGKey(seed), cfg, scfg,
+                                 variant)
+            if variant != "corange":
+                # nonzero state so the beta*x + inc accumulate is
+                # exercised, not just the increment
+                sk = dataclasses.replace(sk, nodes={
+                    "hidden": dataclasses.replace(
+                        sk.nodes["hidden"],
+                        x=0.1 * sk.nodes["hidden"].psi[..., None, :] *
+                        jnp.ones((28, 1)))})
+            return cfg, scfg, sk
+
+        variants = [("sketched_fixed", 3, 0.9, 0),
+                    ("sketched_adaptive", 2, 0.9, 1),
+                    ("monitor", 4, 0.95, 2),
+                    ("corange", 3, 0.9, 3)]
+        for variant, rank, beta, seed in variants:
+            cfg, scfg, sk = paper_tree(variant, rank, beta, seed)
+            node = sk.nodes["hidden"]
+            L = cfg.num_hidden_layers
+            ka = sk.k_active
+            d = cfg.d_hidden
+            acts = jax.random.normal(jax.random.PRNGKey(100 + seed),
+                                     (L, W * Tl, d))
+
+            if variant == "corange":
+                # increments (zero-state update == pure increment),
+                # per worker shard, per layer
+                def incs(a_sh):   # a_sh (L, Tl, d)
+                    ups = jax.vmap(lambda xc, yc, zc, a:
+                                   corange_triple_update(
+                                       xc, yc, zc, a, sk.proj,
+                                       scfg.beta, ka))
+                    return ups(jnp.zeros_like(node.x),
+                               jnp.zeros_like(node.y),
+                               jnp.zeros_like(node.z), a_sh)
+
+                def fused(a_sh):
+                    ix, iy, iz = incs(a_sh)
+                    leaves = {"hidden": {"x": ix, "y": iy, "z": iz}}
+                    return psum_flat_segments(leaves, "data")
+
+                def per_leaf(a_sh):
+                    ix, iy, iz = incs(a_sh)
+                    pm = lambda t: jax.lax.psum(t, "data")
+                    return {"hidden": {"x": pm(ix), "y": pm(iy),
+                                       "z": pm(iz)}}
+
+                sh = lambda f: jax.jit(shard_map(
+                    lambda a: f(a.reshape(L, Tl, d)),
+                    mesh=mesh, in_specs=P(None, "data"), out_specs=P(),
+                    check_rep=False))
+                got = sh(fused)(acts)
+                want = sh(per_leaf)(acts)
+                for g, w in zip(jax.tree.leaves(got),
+                                jax.tree.leaves(want)):
+                    assert np.array_equal(np.asarray(g), np.asarray(w))
+                print("corange flat-psum bitwise OK")
+                continue
+
+            # paper-kind trees: full apply parity vs the PR 3 path
+            def per_node(a_sh):   # a_sh (L, Tl, d)
+                def one(l):
+                    return ema_triple_update(
+                        node.x[l], node.y[l], node.z[l], a_sh[l],
+                        sk.proj["upsilon"], sk.proj["omega"],
+                        sk.proj["phi"], node.psi[l], scfg.beta, ka,
+                        axis_name="data")
+                outs = [one(l) for l in range(L)]
+                return {"hidden": {
+                    "x": jnp.stack([o[0] for o in outs]),
+                    "y": jnp.stack([o[1] for o in outs]),
+                    "z": jnp.stack([o[2] for o in outs])}}
+
+            def fused(a_sh):
+                def one(l):
+                    return ema_triple_increment(
+                        node.x[l], node.y[l], node.z[l], a_sh[l],
+                        sk.proj["upsilon"], sk.proj["omega"],
+                        sk.proj["phi"], node.psi[l], scfg.beta, ka)
+                outs = [one(l) for l in range(L)]
+                leaves = {"hidden": {
+                    "x": jnp.stack([o[0] for o in outs]),
+                    "y": jnp.stack([o[1] for o in outs]),
+                    "z": jnp.stack([o[2] for o in outs])}}
+                merged = psum_flat_segments(leaves, "data")
+                m = merged["hidden"]
+                return {"hidden": {
+                    "x": ema_apply_increment(node.x, m["x"], scfg.beta,
+                                             ka),
+                    "y": ema_apply_increment(node.y, m["y"], scfg.beta,
+                                             ka),
+                    "z": ema_apply_increment(node.z, m["z"], scfg.beta,
+                                             ka)}}
+
+            sh = lambda f: jax.jit(shard_map(
+                lambda a: f(a.reshape(L, Tl, d)),
+                mesh=mesh, in_specs=P(None, "data"), out_specs=P(),
+                check_rep=False))
+            got = sh(fused)(acts)
+            want = sh(per_node)(acts)
+            for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+                assert np.array_equal(np.asarray(g), np.asarray(w)), \\
+                    variant
+            print(variant, "fused apply bitwise OK")
+        print("OK")
+    """, devices=4)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_fused_step_bitwise_vs_per_node_and_one_collective_w4():
+    """E2E LM differential at W=4 (fp32 wire): with monitoring-only
+    sketches (never consumed by the backward) the fused step must be
+    BITWISE identical to the PR 3 per-node-psum step — full state AND
+    metrics, over multiple steps, both on the dense grad wire and on
+    the countsketch wire — while its compiled HLO contains exactly ONE
+    collective (the flat-segment psum)."""
+    out = _run("""
+        import dataclasses, re
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.configs import get_arch, reduced
+        from repro.data.synthetic import lm_batch
+        from repro.models.transformer import SketchSettings
+        from repro.optim.compression import CompressionConfig
+        from repro.train.state import RunConfig, init_train_state
+        from repro.train.step import make_dp_train_step
+
+        mesh = Mesh(np.array(jax.devices()[:4]), ("data",))
+        cfg = dataclasses.replace(reduced(get_arch("tinyllama-1.1b")),
+                                  sketch_mode="monitor")
+        ccfg = CompressionConfig(mode="countsketch", cs_rows=5,
+                                 cs_cols=512, cs_k=256, cs_momentum=0.0)
+        key = jax.random.PRNGKey(0)
+        tokens, labels = lm_batch(jax.random.PRNGKey(2), 8, 16,
+                                  cfg.vocab_size)
+        batch = {"tokens": tokens, "labels": labels}
+
+        for comp in (None, ccfg):
+            states = {}
+            for mode in ("per_node", "fused"):
+                run = RunConfig(seq_len=16, global_batch=8,
+                                dp_axis_name="data", dp_workers=4,
+                                compression=comp, dp_collective=mode,
+                                sketch=SketchSettings(
+                                    enabled=True, k_max=9, beta=0.9,
+                                    recon_mode="fast"))
+                state = init_train_state(key, cfg, run)
+                state = jax.device_put(state, NamedSharding(mesh, P()))
+                step = jax.jit(make_dp_train_step(cfg, run, mesh))
+                for _ in range(3):
+                    state, m = step(state, batch)
+                states[mode] = (state, m)
+            a, b = states["per_node"], states["fused"]
+            la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+            assert len(la) == len(lb)
+            for x, y in zip(la, lb):
+                assert np.array_equal(np.asarray(x), np.asarray(y)), \\
+                    "fused step diverged from per_node"
+            print("bitwise OK", "countsketch" if comp else "dense")
+
+            # exactly ONE collective in the fused HLO
+            run = RunConfig(seq_len=16, global_batch=8,
+                            dp_axis_name="data", dp_workers=4,
+                            compression=comp, dp_collective="fused",
+                            sketch=SketchSettings(enabled=True, k_max=9,
+                                                  beta=0.9,
+                                                  recon_mode="fast"))
+            state = init_train_state(key, cfg, run)
+            txt = jax.jit(make_dp_train_step(cfg, run, mesh)).lower(
+                jax.device_put(state, NamedSharding(mesh, P())),
+                batch).compile().as_text()
+            ops = re.findall(
+                r"= \\S+ (all-reduce|all-gather|reduce-scatter|"
+                r"all-to-all|collective-permute)", txt)
+            assert len(ops) == 1 and ops[0] == "all-reduce", ops
+            print("one-collective OK", "countsketch" if comp else
+                  "dense")
+        print("OK")
+    """, devices=4)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_fused_step_int8_and_backprop_lag_loss_gap_w4():
+    """The two documented approximations of the fused path stay inside
+    the 0.05 loss-gap budget at W=4 on the synthetic LM task:
+
+      * int8 wire (monitor sketches): quantization noise on the
+        count-sketch table, absorbed by error feedback;
+      * sketched-backprop consumption lag (fp32): sketched_matmul reads
+        the previous step's merged triple instead of the current one.
+    """
+    out = _run("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.configs import get_arch, reduced
+        from repro.data.synthetic import lm_batch
+        from repro.models.transformer import SketchSettings
+        from repro.optim.compression import CompressionConfig
+        from repro.train.state import RunConfig, init_train_state
+        from repro.train.step import make_dp_train_step
+
+        STEPS, LAST = 20, 5
+        mesh = Mesh(np.array(jax.devices()[:4]), ("data",))
+        key = jax.random.PRNGKey(0)
+
+        def train(cfg, run):
+            state = init_train_state(key, cfg, run)
+            state = jax.device_put(state, NamedSharding(mesh, P()))
+            step = jax.jit(make_dp_train_step(cfg, run, mesh))
+            losses = []
+            for s in range(STEPS):
+                tok, lab = lm_batch(jax.random.fold_in(key, s), 8, 16,
+                                    cfg.vocab_size)
+                state, m = step(state, {"tokens": tok, "labels": lab})
+                losses.append(float(m["loss"]))
+            assert all(np.isfinite(losses))
+            return sum(losses[-LAST:]) / LAST
+
+        # --- int8 wire vs fp32 wire (monitor sketches) ---------------
+        cfg = dataclasses.replace(reduced(get_arch("tinyllama-1.1b")),
+                                  sketch_mode="monitor")
+        mk = lambda wd: RunConfig(
+            seq_len=16, global_batch=8, dp_axis_name="data",
+            dp_workers=4, warmup_steps=2, total_steps=STEPS,
+            compression=CompressionConfig(
+                mode="countsketch", cs_rows=5, cs_cols=512, cs_k=512,
+                cs_momentum=0.0, wire_dtype=wd),
+            sketch=SketchSettings(enabled=True, k_max=9, beta=0.9,
+                                  recon_mode="fast"))
+        f32, i8 = train(cfg, mk("fp32")), train(cfg, mk("int8"))
+        gap = abs(i8 - f32)
+        print(f"int8 gap {gap:.4f} (fp32 {f32:.4f} int8 {i8:.4f})")
+        assert gap <= 0.05, (f32, i8)
+
+        # --- consumption lag: fused vs per_node, backprop sketches ---
+        cfg = reduced(get_arch("tinyllama-1.1b"))
+        mk = lambda mode: RunConfig(
+            seq_len=16, global_batch=8, dp_axis_name="data",
+            dp_workers=4, warmup_steps=2, total_steps=STEPS,
+            dp_collective=mode,
+            sketch=SketchSettings(enabled=True, k_max=9, beta=0.9,
+                                  recon_mode="fast"))
+        fused, ref = train(cfg, mk("fused")), train(cfg, mk("per_node"))
+        gap = abs(fused - ref)
+        print(f"lag gap {gap:.4f} (per_node {ref:.4f} fused {fused:.4f})")
+        assert gap <= 0.05, (ref, fused)
+        print("OK")
+    """, devices=4)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_int8_error_feedback_survives_checkpoint_merge_w4():
+    """Checkpoint round-trip of the per-worker error-feedback residuals
+    under wire_dtype=int8 (they now carry quantization error too): the
+    loop's pmean-merge must preserve the worker SUM mass-exactly
+    (W * mean == sum, bitwise for power-of-two W), and a Checkpointer
+    save/restore of the merged state must be bitwise."""
+    out = _run("""
+        import dataclasses, tempfile
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.checkpoint.checkpointer import Checkpointer
+        from repro.configs import get_arch, reduced
+        from repro.data.synthetic import lm_batch
+        from repro.models.transformer import SketchSettings
+        from repro.optim.compression import CompressionConfig
+        from repro.train.state import RunConfig, init_train_state
+        from repro.train.step import make_dp_train_step
+
+        W = 4
+        mesh = Mesh(np.array(jax.devices()[:W]), ("data",))
+        cfg = dataclasses.replace(reduced(get_arch("tinyllama-1.1b")),
+                                  sketch_mode="monitor")
+        run = RunConfig(
+            seq_len=16, global_batch=8, dp_axis_name="data",
+            dp_workers=W, warmup_steps=2, total_steps=10,
+            compression=CompressionConfig(
+                mode="countsketch", cs_rows=5, cs_cols=512, cs_k=256,
+                cs_momentum=0.0, wire_dtype="int8"),
+            sketch=SketchSettings(enabled=True, k_max=9, beta=0.9,
+                                  recon_mode="fast"))
+        key = jax.random.PRNGKey(0)
+        state = init_train_state(key, cfg, run)
+        state = jax.device_put(state, NamedSharding(mesh, P()))
+        step = jax.jit(make_dp_train_step(cfg, run, mesh))
+        for s in range(3):
+            tok, lab = lm_batch(jax.random.fold_in(key, s), 8, 16,
+                                cfg.vocab_size)
+            state, _ = step(state, {"tokens": tok, "labels": lab})
+
+        # per-worker residuals -> the loop's pmean merge
+        err = state.opt["err"]
+        gather = jax.jit(shard_map(
+            lambda e: jax.tree.map(lambda x: x[None], e),
+            mesh=mesh, in_specs=P(), out_specs=P("data"),
+            check_rep=False))
+        per_worker = gather(err)          # leaves (W, dim)
+        merge = jax.jit(shard_map(
+            lambda e: jax.tree.map(lambda x: jax.lax.pmean(x, "data"),
+                                   e),
+            mesh=mesh, in_specs=P(), out_specs=P(), check_rep=False))
+        merged = merge(err)
+        for pw, m in zip(jax.tree.leaves(per_worker),
+                         jax.tree.leaves(merged)):
+            assert np.array_equal(np.asarray(pw).sum(0),
+                                  np.asarray(m) * W), \\
+                "pmean merge lost error-feedback mass"
+
+        # checkpoint round-trip of the merged state is bitwise
+        opt = dict(state.opt); opt["err"] = merged
+        persist = dataclasses.replace(state, opt=opt)
+        with tempfile.TemporaryDirectory() as d:
+            ck = Checkpointer(d, keep=1)
+            ck.save(3, persist)
+            restored, meta = ck.restore(persist)
+        for a, b in zip(jax.tree.leaves(persist),
+                        jax.tree.leaves(restored)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+        print("OK")
+    """, devices=4)
+    assert "OK" in out

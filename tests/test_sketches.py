@@ -418,3 +418,49 @@ def test_single_ema_implementation():
     assert not offenders, (
         f"EMA update math re-inlined outside sketches//kernels/: "
         f"{offenders}")
+
+
+def test_increment_apply_decomposition_matches_update(rng):
+    """The fused-DP decomposition ema_apply_increment(x,
+    ema_triple_increment(...)) must reproduce the per_node DP-exact
+    path ema_triple_update(..., axis_name=ax) bitwise — checked at W=1
+    (psum identity) under a 1-device shard_map, for both the jnp and
+    the Pallas kernel branch. (The axis-FREE kernel update fuses the
+    EMA accumulate inside the kernel — a different rounding order —
+    which is why the per_node axis path, the thing the fused layout
+    actually replaces, is the reference.)"""
+    import functools
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.sketches.update import (
+        ema_apply_increment, ema_triple_increment, ema_triple_update,
+    )
+
+    T, d, k = 24, 16, 9
+    ks = jax.random.split(rng, 6)
+    a = jax.random.normal(ks[0], (T, d))
+    ups, omg, phi = (jax.random.normal(ks[i], (T, k)) for i in (1, 2, 3))
+    psi = jax.random.normal(ks[4], (k,))
+    x0, y0, z0 = (0.3 * jax.random.normal(jax.random.fold_in(ks[5], i),
+                                          (d, k)) for i in range(3))
+    ka = jnp.asarray(7)
+    beta = 0.9
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+
+    for use_kernel in (False, True):
+        upd = functools.partial(
+            ema_triple_update, upsilon=ups, omega=omg, phi=phi, psi=psi,
+            beta=beta, k_active=ka, axis_name="data",
+            use_kernel=use_kernel)
+        want = jax.jit(shard_map(
+            lambda aa: upd(x0, y0, z0, a=aa), mesh=mesh,
+            in_specs=P("data"), out_specs=P(), check_rep=False))(a)
+        incs = ema_triple_increment(x0, y0, z0, a, ups, omg, phi, psi,
+                                    beta, ka, use_kernel=use_kernel)
+        got = [ema_apply_increment(s, i, beta, ka)
+               for s, i in zip((x0, y0, z0), incs)]
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                          err_msg=f"kernel={use_kernel}")
