@@ -32,12 +32,28 @@ Sections:
                  with the int8 count-sketch wire — wire bytes <= 2.5%
                  of dense at a matched-loss gap <= 0.05, with exactly
                  ONE collective per step in the compiled HLO.
+  8. overlap_gate ISSUE 5 acceptance: the TWO-phase overlap W=4 step
+                 with sketched-BACKPROP trees and the int8 wire — wire
+                 bytes <= 2.5% of dense at loss gap <= 0.05 vs the
+                 dense-wire overlap run, with exactly TWO all-reduces
+                 per compiled step and the sketch psum scheduled first.
 
-Run: PYTHONPATH=src python -m benchmarks.bench_countsketch
-(sections 4, 6 and 7 spawn subprocesses with their own XLA_FLAGS).
+Machine-readable output (ISSUE 5 CI): --json PATH writes every gated
+metric (wire ratios, loss gaps, collective counts per section) as
+BENCH_countsketch.json; --baseline PATH compares against a committed
+baseline and FAILS on >10% regression of any wire ratio or collective
+count (loss-gap gates stay absolute asserts). The committed baseline
+lives at the repo root (BENCH_countsketch.json).
+
+Run: PYTHONPATH=src python -m benchmarks.bench_countsketch \\
+         [--json artifacts/BENCH_countsketch.json] \\
+         [--baseline BENCH_countsketch.json]
+(sections 4 and 6-8 spawn subprocesses with their own XLA_FLAGS).
 """
 from __future__ import annotations
 
+import argparse
+import json
 import os
 import subprocess
 import sys
@@ -272,6 +288,8 @@ def bench_collectives():
               f"{3 * L + 1} collectives W=4")
         print(f"ROW,fused_flat_psum,{us_f:.0f}us,"
               f"{len(log_f)} collective {nbytes}B W=4")
+        print(f"ROW,fused_collective_count,{len(log_f)},"
+              "trace-time accounting")
         assert len(log_f) == 1, log_f
     """)
     return [tuple(r.split(",")[1:]) for r in rows]
@@ -416,9 +434,168 @@ def bench_int8_gate():
     return [tuple(r.split(",")[1:]) for r in rows]
 
 
-def main():
+def bench_overlap_gate():
+    """ISSUE 5 acceptance: the overlap two-phase W=4 step with sketched
+    BACKPROP trees (current-step DP-exact consumption, no lag) and the
+    int8 count-sketch wire. Gate: int8 wire bytes <= 2.5% of dense at a
+    loss gap <= 0.05 vs the dense-wire overlap run, with exactly TWO
+    all-reduces per compiled step — the sketch psum first (it is the
+    smaller, increment-sized buffer; the differential tier additionally
+    asserts its schedule against the backward)."""
+    rows = _run_sub(f"""
+        import dataclasses, re
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.configs import get_arch, reduced
+        from repro.data.synthetic import lm_batch
+        from repro.models.transformer import SketchSettings
+        from repro.optim.compression import (
+            CompressionConfig, compressed_bytes)
+        from repro.optim.sketched_sgd import flat_dim
+        from repro.sketches import tree_wire_spec
+        from repro.train.state import RunConfig, init_train_state
+        from repro.train.step import make_dp_train_step
+
+        STEPS, LAST = {I8_STEPS}, {LAST}
+        mesh = Mesh(np.array(jax.devices()), ("data",))
+        cfg = reduced(get_arch("tinyllama-1.1b"))   # sketch_mode=backprop
+        i8 = CompressionConfig(mode="countsketch", cs_rows=5,
+                               cs_cols=2048, cs_k=2048,
+                               cs_momentum=0.0, cs_p2=0,
+                               wire_dtype="int8")
+        mk = lambda comp: RunConfig(
+            seq_len=16, global_batch=8, warmup_steps=5,
+            total_steps=STEPS, dp_axis_name="data", dp_workers=4,
+            dp_collective="overlap", compression=comp,
+            sketch=SketchSettings(enabled=True, k_max=9, beta=0.9,
+                                  recon_mode="fast"))
+        key = jax.random.PRNGKey(0)
+        finals = {{}}
+        for name, comp in (("dense", None), ("int8", i8)):
+            run = mk(comp)
+            state = init_train_state(key, cfg, run)
+            state = jax.device_put(state, NamedSharding(mesh, P()))
+            step = jax.jit(make_dp_train_step(cfg, run, mesh))
+            losses = []
+            for s in range(STEPS):
+                tok, lab = lm_batch(jax.random.fold_in(key, s), 8, 16,
+                                    cfg.vocab_size)
+                state, m = step(state, {{"tokens": tok,
+                                         "labels": lab}})
+                losses.append(float(m["loss"]))
+            assert all(np.isfinite(losses))
+            finals[name] = sum(losses[-LAST:]) / LAST
+            d = flat_dim(state.params)
+
+        # exactly TWO all-reduces, sketch psum (increment-sized) first
+        run = mk(i8)
+        state = init_train_state(key, cfg, run)
+        early_total = tree_wire_spec(state.sketch).total
+        tok, lab = lm_batch(key, 8, 16, cfg.vocab_size)
+        txt = jax.jit(make_dp_train_step(cfg, run, mesh)).lower(
+            jax.device_put(state, NamedSharding(mesh, P())),
+            {{"tokens": tok, "labels": lab}}).compile().as_text()
+        colls = re.findall(
+            r"= \\S+ (all-reduce|all-gather|reduce-scatter|"
+            r"all-to-all|collective-permute)", txt)
+        entry = txt[txt.index("ENTRY"):]
+        sizes = [int(m.group(1)) for m in re.finditer(
+            r"= f32\\[(\\d+)\\]\\S* all-reduce\\(", entry)]
+
+        dense_b = d * 4
+        cs_b = compressed_bytes(d, i8)
+        ratio = cs_b / dense_b
+        gap = abs(finals["int8"] - finals["dense"])
+        print(f"ROW,final_loss_dense_overlap_w4,"
+              f"{{finals['dense']:.4f}},{{STEPS}} steps backprop trees")
+        print(f"ROW,final_loss_int8_overlap_w4,"
+              f"{{finals['int8']:.4f}},{{STEPS}} steps backprop trees")
+        print(f"ROW,overlap_int8_wire_ratio,{{ratio:.4f}},{{cs_b}}B vs "
+              f"{{dense_b}}B per step per worker")
+        print(f"ROW,overlap_int8_loss_gap,{{gap:.4f}},tolerance=0.05")
+        print(f"ROW,overlap_collectives_per_step,{{len(colls)}},"
+              f"{{colls}} sizes={{sizes}}")
+        assert ratio <= 0.025, (cs_b, dense_b)
+        assert gap <= 0.05, finals
+        assert len(colls) == 2 and set(colls) == {{"all-reduce"}}, colls
+        # early = the increment buffer; late = table + 3 scalars + n
+        late_total = i8.cs_rows * i8.cs_cols + 4
+        assert sizes == [early_total, late_total], \\
+            (sizes, early_total, late_total)
+        print("ROW,overlap_gate,PASS,two collectives/step (sketch psum "
+              "first); int8 wire<=2.5% dense at loss gap<=0.05 with "
+              "NO consumption lag")
+    """)
+    return [tuple(r.split(",")[1:]) for r in rows]
+
+
+def _rows_value(rows, name):
+    for row in rows:
+        if row[0] == name:
+            return float(row[1])
+    raise KeyError(f"bench row {name!r} not emitted")
+
+
+# Metrics gated RELATIVELY against the committed baseline: wire ratios
+# and collective counts — the two quantities the collective layouts
+# exist to hold down. Loss gaps stay ABSOLUTE gates (asserted in their
+# sections): a baseline captured on a lucky seed must not ratchet them.
+RELATIVE_GATES = (
+    "wire_ratio_countsketch",
+    "wire_ratio_countsketch_int8",
+    "collectives_fused_flat_psum",
+    "w4_wire_ratio",
+    "int8_wire_ratio",
+    "int8_collectives_per_step",
+    "overlap_int8_wire_ratio",
+    "overlap_collectives_per_step",
+)
+REGRESSION_TOL = 0.10
+
+
+def check_baseline(metrics: dict, baseline_path: str) -> list[str]:
+    """Compare the relative-gated metrics against the committed
+    baseline: >10% above baseline fails. Returns the failure list
+    (empty == pass). Metrics absent from an older baseline are skipped
+    (the next baseline refresh picks them up); metrics absent from the
+    CURRENT run fail — a section silently dropping a gate is itself a
+    regression."""
+    with open(baseline_path) as f:
+        base = json.load(f)["metrics"]
+    failures = []
+    for key in RELATIVE_GATES:
+        if key not in metrics:
+            failures.append(f"{key}: missing from this run")
+            continue
+        if key not in base:
+            print(f"baseline,{key},skipped,not in committed baseline")
+            continue
+        now, ref = metrics[key], base[key]
+        limit = ref * (1.0 + REGRESSION_TOL)
+        status = "PASS" if now <= limit else "FAIL"
+        print(f"baseline,{key},{status},{now:.4f} vs baseline "
+              f"{ref:.4f} (limit {limit:.4f})")
+        if now > limit:
+            failures.append(
+                f"{key}: {now:.4f} regressed >{REGRESSION_TOL:.0%} vs "
+                f"baseline {ref:.4f}")
+    return failures
+
+
+def main(argv=None):
     from repro.optim.compression import CompressionConfig
     from repro.optim.sketched_sgd import countsketch_wire_bytes
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write machine-readable metrics (wire ratios, "
+                         "loss gaps, collective counts) as JSON")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help="committed BENCH_countsketch.json to gate "
+                         "against (wire-ratio or collective-count "
+                         "regression beyond 10%% fails)")
+    args = ap.parse_args(argv)
+    metrics: dict = {}
 
     ccfg = CompressionConfig(mode="countsketch", cs_rows=5,
                              cs_cols=2048, cs_k=2048, cs_momentum=0.0)
@@ -433,10 +610,15 @@ def main():
     num_params = 106_816          # reduced tinyllama (the LM task below)
     for name, nbytes, ratio, note in bench_wire(num_params, ccfg, tcfg):
         print(f"wire,{name},{nbytes}B,ratio={ratio:.3f} ({note})")
+        if name in ("countsketch", "countsketch_int8"):
+            metrics[f"wire_ratio_{name}"] = ratio
     assert countsketch_wire_bytes(ccfg) == ccfg.cs_rows * ccfg.cs_cols * 4
 
-    for row in bench_collectives():
+    coll_rows = bench_collectives()
+    for row in coll_rows:
         print(",".join(("collectives",) + row))
+    metrics["collectives_fused_flat_psum"] = _rows_value(
+        coll_rows, "fused_collective_count")
 
     finals = bench_convergence(ccfg, tcfg)
     for name, loss in finals.items():
@@ -444,6 +626,7 @@ def main():
               f"over {STEPS} steps")
     gap = abs(finals["countsketch"] - finals["dense"])
     print(f"convergence,cs_vs_dense_gap,{gap:.4f},tolerance={TOL}")
+    metrics["convergence_cs_vs_dense_gap"] = gap
     assert gap <= TOL, (
         f"countsketch final loss {finals['countsketch']:.4f} not within "
         f"{TOL} of dense {finals['dense']:.4f}")
@@ -451,11 +634,47 @@ def main():
           f"bytes ratio {countsketch_wire_bytes(ccfg) / (num_params * 4):.3f}"
           " <= 0.10 at matched final loss")
 
-    for row in bench_w4_gate():
+    w4_rows = bench_w4_gate()
+    for row in w4_rows:
         print(",".join(("w4",) + row))
+    metrics["w4_wire_ratio"] = _rows_value(w4_rows, "w4_wire_ratio")
+    metrics["w4_loss_gap"] = _rows_value(w4_rows, "w4_loss_gap")
 
-    for row in bench_int8_gate():
+    i8_rows = bench_int8_gate()
+    for row in i8_rows:
         print(",".join(("int8",) + row))
+    metrics["int8_wire_ratio"] = _rows_value(i8_rows, "int8_wire_ratio")
+    metrics["int8_loss_gap"] = _rows_value(i8_rows, "int8_loss_gap")
+    metrics["int8_collectives_per_step"] = _rows_value(
+        i8_rows, "collectives_per_step")
+
+    ov_rows = bench_overlap_gate()
+    for row in ov_rows:
+        print(",".join(("overlap",) + row))
+    metrics["overlap_int8_wire_ratio"] = _rows_value(
+        ov_rows, "overlap_int8_wire_ratio")
+    metrics["overlap_int8_loss_gap"] = _rows_value(
+        ov_rows, "overlap_int8_loss_gap")
+    metrics["overlap_collectives_per_step"] = _rows_value(
+        ov_rows, "overlap_collectives_per_step")
+
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump({"schema": 1, "metrics": metrics}, f, indent=2,
+                      sort_keys=True)
+            f.write("\n")
+        print(f"json,written,{args.json},{len(metrics)} metrics")
+
+    if args.baseline:
+        failures = check_baseline(metrics, args.baseline)
+        if failures:
+            print("baseline,gate,FAIL," + "; ".join(failures))
+            raise SystemExit(
+                "bench regression vs committed baseline:\n  " +
+                "\n  ".join(failures))
+        print(f"baseline,gate,PASS,wire ratios + collective counts "
+              f"within {REGRESSION_TOL:.0%} of {args.baseline}")
 
 
 if __name__ == "__main__":

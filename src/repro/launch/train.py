@@ -72,11 +72,16 @@ def main():
                          "quantization residual stays in its error-"
                          "feedback buffer)")
     ap.add_argument("--dp-collective", default="fused",
-                    choices=["fused", "per_node"],
+                    choices=["fused", "per_node", "overlap"],
                     help="DP collective layout: 'fused' = ONE flat "
                          "psum per step (sketch increments + gradient "
-                         "wire + metrics), 'per_node' = PR 3 reference "
-                         "(one psum per sketch node per layer)")
+                         "wire + metrics; sketched-backprop consumes "
+                         "the previous step's merge), 'overlap' = "
+                         "two-phase schedule (sketch psum issued after "
+                         "the forward and hidden behind the backward; "
+                         "consumption is current-step DP-exact, no "
+                         "lag), 'per_node' = PR 3 reference (one psum "
+                         "per sketch node per layer)")
     ap.add_argument("--strategy", default="megatron",
                     choices=["megatron", "fsdp"])
     ap.add_argument("--no-sketch", action="store_true")

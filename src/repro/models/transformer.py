@@ -92,6 +92,13 @@ class SketchSettings:
     # merged through the previous step — a documented one-step lag.
     # Mutually exclusive with dp_axis; set by make_dp_train_step.
     dp_defer: bool = False
+    # Overlap phase-2 mode (DESIGN.md §10): the forward CONSUMES the
+    # tree it is given as-is — the triple already merged through this
+    # step's early psum — and emits neither updates nor increments.
+    # With it the backward reads the CURRENT step's merged triple
+    # (DP-exact, no lag); the increments were computed by a phase-1
+    # sweep under dp_defer. Set by the overlap train step only.
+    dp_premerged: bool = False
 
     def __post_init__(self):
         if self.dp_defer and self.dp_axis is not None:
@@ -99,6 +106,12 @@ class SketchSettings:
                 "SketchSettings.dp_defer (fused one-psum step) and "
                 "dp_axis (per-node psum inside the forward) are "
                 "mutually exclusive collective layouts")
+        if self.dp_premerged and (self.dp_defer or
+                                  self.dp_axis is not None):
+            raise ValueError(
+                "SketchSettings.dp_premerged consumes an already-merged "
+                "tree: it excludes both dp_defer (increment emission) "
+                "and dp_axis (per-node psums inside the forward)")
 
 
 def lm_node_specs(cfg: ArchConfig) -> dict[str, NodeSpec]:
@@ -247,8 +260,13 @@ def _update_triple(node, a, proj, k_active, st: SketchSettings):
       * fused mode (`st.dp_defer`): `out_node` carries the LOCAL
         increments in its x/y/z slots (merged by the step's single
         psum), and `consume_node` is the incoming node — the triple
-        merged through the PREVIOUS step, identical on every worker.
+        merged through the PREVIOUS step, identical on every worker;
+      * overlap phase 2 (`st.dp_premerged`): the incoming node IS this
+        step's merged triple (folded in after the early psum) — consume
+        it unchanged, emit nothing (DESIGN.md §10).
     """
+    if st.dp_premerged:
+        return node, node
     if st.dp_defer:
         ix, iy, iz = ema_triple_increment(
             node.x, node.y, node.z, a,

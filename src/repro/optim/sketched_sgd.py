@@ -51,6 +51,14 @@ flat buffer as the EMA sketch increments:
     merged = <any exact table merge>                # psum / flat psum
     out    = countsketch_finish(local, merged, ...) # recover + update
 
+Under the overlap schedule (DESIGN.md §10) the same split holds at the
+PHASE-2 boundary: the gradients only exist after the backward, so
+`countsketch_local` — including the int8 symmetric quantize whose
+residual stays in the per-worker error feedback — runs after the
+backward sweep and the table rides the LATE psum, while the sketch
+increments already crossed on the early one. Nothing about the
+quantize/dequantize/residual rule changes with the schedule.
+
 Everything is flat-vector space: the gradient pytree is raveled once,
 compressed, and unraveled — static shapes, jit/shard_map friendly.
 """

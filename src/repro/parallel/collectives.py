@@ -73,14 +73,26 @@ def psum_csvec(cs, axis_name: str):
 
 
 def psum_flat_segments(tree, axis_name: str, *, spec=None,
-                       name: str = "flat_segments"):
+                       name: str = "flat_segments",
+                       barrier: bool = False):
     """Sum a pytree across `axis_name` through ONE all-reduce.
 
     Packs the leaves into one flat f32 buffer (layout memoized by
     `sketches.wire.segment_spec` — pass `spec` to reuse a precomputed
     one), psums it, and unpacks. Bitwise identical per element to
     per-leaf psums: an all-reduce is element-wise, so buffer layout
-    cannot change any element's summation order."""
+    cannot change any element's summation order.
+
+    ``barrier=True`` routes the packed buffer through
+    `lax.optimization_barrier` on both sides of the all-reduce — the
+    HLO-visible scheduling fence of the overlap schedule (DESIGN.md
+    §10). It is the identity on values (bitwise-neutral), but pins the
+    collective as a distinct HLO op at its issue point: XLA may neither
+    fold it into a later collective (the all-reduce combiner would
+    re-serialize the two-phase layout back into one post-backward
+    exchange) nor sink the pack/psum past the consumers' side of the
+    fence. The differential tier asserts the resulting schedule —
+    early sketch all-reduce before the backward's reconstructions."""
     from repro.sketches.wire import (
         pack_segments, segment_spec, unpack_segments,
     )
@@ -88,7 +100,11 @@ def psum_flat_segments(tree, axis_name: str, *, spec=None,
     if spec is None:
         spec = segment_spec(tree)
     flat = pack_segments(tree)
+    if barrier:
+        flat = jax.lax.optimization_barrier(flat)
     merged = traced_psum(flat, axis_name, name=name)
+    if barrier:
+        merged = jax.lax.optimization_barrier(merged)
     return unpack_segments(spec, merged)
 
 

@@ -7,7 +7,8 @@ monitor / checkpoint in this repo goes through this package — adding a
 sketched node anywhere is a one-line ``NodeSpec`` registration.
 """
 from repro.sketches.update import (
-    active_mask, corange_triple_update, ema_triple_update, mask_columns,
+    active_mask, corange_apply_increment, corange_triple_increment,
+    corange_triple_update, ema_triple_update, mask_columns,
 )
 from repro.sketches.node import (
     SketchNode, init_paper_node, zero_node_sketches,
@@ -21,15 +22,16 @@ from repro.sketches.compat import (
     adopt_legacy, legacy_layout, restore_legacy_state,
 )
 from repro.sketches.wire import (
-    pack_segments, segment_spec, tree_increment_leaves, tree_wire_spec,
-    unpack_segments,
+    pack_segments, partition_segments, segment_spec,
+    tree_increment_leaves, tree_wire_spec, unpack_segments,
 )
 
 __all__ = [
-    "active_mask", "adopt_legacy", "corange_triple_update",
+    "active_mask", "adopt_legacy", "corange_apply_increment",
+    "corange_triple_increment", "corange_triple_update",
     "ema_triple_update", "init_node_tree", "init_paper_node",
     "legacy_layout", "mask_columns", "NodeSpec", "NodeTree",
-    "node_paths", "pack_segments", "refresh_tree",
+    "node_paths", "pack_segments", "partition_segments", "refresh_tree",
     "restore_legacy_state", "segment_spec", "SketchNode",
     "sketched_matmul", "tree_increment_leaves", "tree_memory_bytes",
     "tree_wire_spec", "unpack_segments", "zero_node_sketches",

@@ -222,6 +222,42 @@ def ema_apply_increment(x_s: Array, inc: Array, beta: float,
 # ---------------------------------------------------------------------------
 
 
+def corange_triple_increment(
+    x_c: Array, y_c: Array, z_c: Array,
+    a: Array,
+    proj,
+    beta: float,
+    k_active,
+) -> tuple[Array, Array, Array]:
+    """Worker-LOCAL masked ``(1-beta)``-scaled increments of one corange
+    EMA update — every term of the Tropp triple is LINEAR in the batch
+    matrix ``M = a^T``, so the zero-state update IS the psum-mergeable
+    increment (the corange analogue of ``ema_triple_increment``).
+    x_c/y_c/z_c contribute only their shapes and dtypes."""
+    return corange_triple_update(
+        jnp.zeros_like(x_c), jnp.zeros_like(y_c), jnp.zeros_like(z_c),
+        a, proj, beta, k_active)
+
+
+def corange_apply_increment(
+    x_c: Array, y_c: Array, z_c: Array,
+    inc_x: Array, inc_y: Array, inc_z: Array,
+    beta: float,
+    k_active,
+) -> tuple[Array, Array, Array]:
+    """Fold (merged) corange increments into the EMA triple with the
+    exact masking of ``corange_triple_update`` (x masked along its
+    leading k axis, y along its trailing k axis, z on both dims at
+    s_active = 2k+1) — bitwise the accumulate that path computes, since
+    the increments arrive already masked and masking is idempotent."""
+    s_active = 2 * k_active + 1
+    x_new = mask_columns((beta * x_c + inc_x).T, k_active).T
+    y_new = mask_columns(beta * y_c + inc_y, k_active)
+    z_new = beta * z_c + inc_z
+    z_new = mask_columns(mask_columns(z_new, s_active).T, s_active).T
+    return x_new, y_new, z_new
+
+
 def corange_triple_update(
     x_c: Array,        # (k_max, N_b) co-range sketch
     y_c: Array,        # (d, k_max)   range sketch

@@ -113,6 +113,31 @@ def unpack_segments(spec: SegmentSpec, flat: Array):
     return jax.tree.unflatten(spec.treedef, leaves)
 
 
+# Segment keys of the fused-step composite buffer that the overlap
+# schedule (DESIGN.md §10) lifts into the EARLY sub-buffer: quantities
+# whose merged value the BACKWARD consumes (the EMA sketch increments).
+# Everything else — the gradient wire, metrics, worker counter — only
+# feeds the optimizer and rides the LATE sub-buffer after the backward.
+OVERLAP_EARLY_KEYS = ("sketch",)
+
+
+def partition_segments(segments: dict, early_keys=OVERLAP_EARLY_KEYS):
+    """Split a fused-step segment dict into the overlap schedule's
+    (early, late) sub-buffers (DESIGN.md §10).
+
+    The early sub-buffer carries the segments whose merged values the
+    backward consumes — issued right after the forward so the collective
+    hides behind the backward sweep. The late sub-buffer carries the
+    rest, issued once the backward has produced the gradient wire. Each
+    sub-buffer's offsets memoize independently through `segment_spec`
+    (the early one is exactly the layout `tree_wire_spec` warms at
+    NodeTree init), so the partition costs nothing at trace time.
+    """
+    early = {k: v for k, v in segments.items() if k in early_keys}
+    late = {k: v for k, v in segments.items() if k not in early_keys}
+    return early, late
+
+
 def tree_increment_leaves(tree) -> dict:
     """The cross-worker leaves of a NodeTree: each node's (x, y, z)
     triple (psi/proj/rank/counters are replicated, never on the wire).

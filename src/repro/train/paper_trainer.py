@@ -127,15 +127,29 @@ def init_mlp_sketch(key, cfg: MLPConfig, scfg: SketchConfig,
 
 
 def sketched_forward(params, x, sk: NodeTree, cfg: MLPConfig,
-                     scfg: SketchConfig, variant: str):
+                     scfg: SketchConfig, variant: str, *,
+                     dp_axis: str | None = None,
+                     premerged: bool = False):
     """Returns (logits, new_sketch_state). The "hidden" node's triple for
     node l observes the activation feeding layer l+1; the canonical
     update in repro.sketches is the ONLY EMA math invoked here.
 
     The corange variant routes through the BATCHED reconstruction
     (`_corange_forward`): one vmapped `corange_reconstruct` over the
-    stacked node instead of one solve per layer."""
+    stacked node instead of one solve per layer.
+
+    DP layouts (DESIGN.md §4/§10): with ``dp_axis`` the per-token
+    increments are psum-ed inside each `ema_triple_update` — the
+    per-node reference. With ``premerged`` the incoming tree already
+    holds THIS step's merged triples (folded in after the overlap
+    schedule's early flat psum): consume them as-is, emit no updates —
+    the returned state is the input tree unchanged."""
     if variant == "corange":
+        if dp_axis is not None or premerged:
+            raise ValueError(
+                "the corange variant has no per-node DP reference path "
+                "— its overlap coverage is the subsystem-level "
+                "differential (tests/test_distributed.py)")
         return _corange_forward(params, x, sk, cfg, scfg, batched=True)
     act = _act(cfg.activation)
     k_active = sk.k_active
@@ -147,10 +161,15 @@ def sketched_forward(params, x, sk: NodeTree, cfg: MLPConfig,
         node = i - 1                       # node feeding layer i
         if 1 <= i and variant in ("sketched_fixed", "sketched_adaptive",
                                   "monitor"):
-            xc, yc, zc = ema_triple_update(
-                hidden.x[node], hidden.y[node], hidden.z[node], h,
-                sk.proj["upsilon"], sk.proj["omega"], sk.proj["phi"],
-                hidden.psi[node], scfg.beta, k_active)
+            if premerged:
+                xc, yc, zc = (hidden.x[node], hidden.y[node],
+                              hidden.z[node])
+            else:
+                xc, yc, zc = ema_triple_update(
+                    hidden.x[node], hidden.y[node], hidden.z[node], h,
+                    sk.proj["upsilon"], sk.proj["omega"],
+                    sk.proj["phi"], hidden.psi[node], scfg.beta,
+                    k_active, axis_name=dp_axis)
             if variant == "monitor":
                 z = h @ p["w"] + p["bias"]
             else:
@@ -158,16 +177,70 @@ def sketched_forward(params, x, sk: NodeTree, cfg: MLPConfig,
                     h, p["w"], xc, yc, zc, sk.proj["omega"],
                     k_active, scfg.recon_mode, scfg.ridge, True
                 ) + p["bias"]
-            xs_new.append(xc), ys_new.append(yc), zs_new.append(zc)
+            if not premerged:
+                xs_new.append(xc), ys_new.append(yc), zs_new.append(zc)
         else:
             z = h @ p["w"] + p["bias"]
         h = act(z) if i < n - 1 else z
+    if premerged:
+        return h, sk
     if xs_new:
         hidden = dataclasses.replace(
             hidden, x=jnp.stack(xs_new), y=jnp.stack(ys_new),
             z=jnp.stack(zs_new))
     return h, dataclasses.replace(sk, nodes={"hidden": hidden},
                                   step=sk.step + 1)
+
+
+def mlp_sketch_increments(params, x, sk: NodeTree, cfg: MLPConfig,
+                          scfg: SketchConfig) -> NodeTree:
+    """Phase 1 of the overlap schedule for the paper MLPs (DESIGN.md
+    §10): the stop-gradient activation sweep (same observations the
+    inline path sees — the primal never depends on any triple) followed
+    by each node's LOCAL masked ``(1-beta)``-scaled increments, stacked
+    into the "hidden" node's x/y/z slots with the step counter
+    advanced. The per-layer loop mirrors `sketched_forward`'s update
+    order exactly, so psum-merging these increments and folding them in
+    (`ema_apply_increment`) is bitwise the per-node DP path."""
+    from repro.sketches.update import (
+        corange_triple_increment, ema_triple_increment,
+    )
+
+    act = _act(cfg.activation)
+    hidden = sk.nodes["hidden"]
+    k_active = sk.k_active
+    n = len(params)
+    h = x
+    obs = []
+    for i, p in enumerate(params):
+        if i >= 1:
+            obs.append(jax.lax.stop_gradient(h))
+        if i == n - 1:
+            break
+        h = act(h @ p["w"] + p["bias"])
+    if hidden.kind == "corange":
+        incs = [
+            corange_triple_increment(
+                hidden.x[l], hidden.y[l], hidden.z[l], obs[l],
+                sk.proj, scfg.beta, k_active)
+            for l in range(len(obs))
+        ]
+    else:
+        incs = [
+            ema_triple_increment(
+                hidden.x[l], hidden.y[l], hidden.z[l], obs[l],
+                sk.proj["upsilon"], sk.proj["omega"], sk.proj["phi"],
+                hidden.psi[l], scfg.beta, k_active)
+            for l in range(len(obs))
+        ]
+    node = dataclasses.replace(
+        hidden,
+        x=jnp.stack([i[0] for i in incs]),
+        y=jnp.stack([i[1] for i in incs]),
+        z=jnp.stack([i[2] for i in incs]),
+    )
+    return dataclasses.replace(sk, nodes={"hidden": node},
+                               step=sk.step + 1)
 
 
 def _corange_forward(params, x, sk: NodeTree, cfg: MLPConfig,
@@ -292,6 +365,101 @@ def make_step(cfg: MLPConfig, scfg: SketchConfig, variant: str,
         return params, opt, new_sk, loss
 
     return jax.jit(step)
+
+
+def make_dp_step(cfg: MLPConfig, scfg: SketchConfig, variant: str,
+                 opt_cfg: AdamWConfig, mesh, *, axis: str = "data",
+                 collective: str = "overlap"):
+    """W-way data-parallel MLP train step — the differential tier's MLP
+    half (DESIGN.md §10). The train state is replicated; the batch is
+    split on its leading axis.
+
+      * ``collective="per_node"``: the DP-exact reference — one psum
+        per node inside `sketched_forward` (`ema_triple_update` with
+        ``axis_name``), then a dense gradient/loss pmean.
+      * ``collective="overlap"``: phase 1 sweeps the activations and
+        issues the sketch-increment flat psum immediately
+        (barrier-pinned, hideable behind the backward); the merged
+        triples are folded in and phase 2's backward consumes THEM
+        through `sketched_matmul` — current-step DP-exact consumption,
+        bitwise equal to per_node — before the gradient wire + loss
+        ride the second, post-backward psum.
+
+    Differential contract (tests/test_distributed.py): the SKETCH TREES
+    and the loss are bitwise identical between the two layouts at any
+    worker count; the gradient-derived leaves (params, Adam moments)
+    agree to last-ulp compiler noise only — the freely-inlined MLP
+    backward is re-fused by XLA per program, unlike the LM's
+    scan/remat-bounded backward, which IS bitwise end to end."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel.collectives import psum_flat_segments
+    from repro.sketches.update import ema_apply_increment
+    from repro.sketches.wire import tree_increment_leaves
+
+    if variant not in ("sketched_fixed", "sketched_adaptive", "monitor"):
+        raise ValueError(
+            f"make_dp_step supports the paper-kind variants; got "
+            f"{variant!r} (corange's overlap coverage is the "
+            f"subsystem-level differential)")
+    if collective not in ("per_node", "overlap"):
+        raise ValueError(
+            f"collective must be 'per_node' or 'overlap', got "
+            f"{collective!r}")
+
+    def step(params, opt, sk, x, y):
+        if collective == "per_node":
+            def loss_fn(p):
+                logits, new_sk = sketched_forward(
+                    p, x, sk, cfg, scfg, variant, dp_axis=axis)
+                return ce_loss(logits, y), new_sk
+
+            (loss, new_sk), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            loss = jax.lax.pmean(loss, axis)
+            grads = jax.tree.map(lambda g: jax.lax.pmean(g, axis),
+                                 grads)
+        else:
+            inc_tree = mlp_sketch_increments(params, x, sk, cfg, scfg)
+            merged = psum_flat_segments(
+                tree_increment_leaves(inc_tree), axis,
+                name="overlap_sketch", barrier=True)
+            m = merged["hidden"]
+            old = sk.nodes["hidden"]
+            ka = sk.k_active
+            new_sk = dataclasses.replace(
+                inc_tree,
+                nodes={"hidden": dataclasses.replace(
+                    inc_tree.nodes["hidden"],
+                    x=ema_apply_increment(old.x, m["x"], scfg.beta, ka),
+                    y=ema_apply_increment(old.y, m["y"], scfg.beta, ka),
+                    z=ema_apply_increment(old.z, m["z"], scfg.beta, ka),
+                )})
+
+            def loss_fn(p):
+                logits, _ = sketched_forward(
+                    p, x, new_sk, cfg, scfg, variant, premerged=True)
+                return ce_loss(logits, y)
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            mg = psum_flat_segments(
+                {"n": jnp.ones((), jnp.float32), "scalars": loss[None],
+                 "grads": grads},
+                axis, name="overlap_grad")
+            loss = mg["scalars"][0] / mg["n"]
+            grads = jax.tree.map(lambda g: g / mg["n"], mg["grads"])
+        if cfg.optimizer == "adam":
+            params, opt, _ = adamw_update(params, grads, opt, opt_cfg)
+        else:
+            params = sgd_update(params, grads, opt_cfg.lr)
+        return params, opt, new_sk, loss
+
+    return jax.jit(shard_map(
+        step, mesh=mesh,
+        in_specs=(P(), P(), P(), P(axis), P(axis)),
+        out_specs=(P(), P(), P(), P()),
+        check_rep=False))
 
 
 @dataclasses.dataclass

@@ -56,16 +56,26 @@ class RunConfig:
     #               inside the forward (consumption sees the current
     #               step's merged triple) + per-leaf gradient pmean /
     #               table psum. The differential tier diffs the two.
+    #   "overlap"   DESIGN.md §10: two-phase schedule for sketched-
+    #               backprop trees — the sketch-increment flat psum is
+    #               issued right after the forward (hidden behind the
+    #               backward sweep) and its merged triple is folded in
+    #               BEFORE sketched_matmul's backward consumes it, so
+    #               consumption is DP-exact with NO lag (bitwise equal
+    #               to per_node); the gradient wire + metrics ride a
+    #               second psum after the backward. Trees with no
+    #               backprop consumer (monitor mode / sketching off)
+    #               keep the fused single-collective fast path.
     dp_collective: str = "fused"
 
     def __post_init__(self):
         if self.dp_workers < 1:
             raise ValueError(
                 f"dp_workers must be >= 1, got {self.dp_workers}")
-        if self.dp_collective not in ("fused", "per_node"):
+        if self.dp_collective not in ("fused", "per_node", "overlap"):
             raise ValueError(
-                f"dp_collective must be 'fused' or 'per_node', got "
-                f"{self.dp_collective!r}")
+                f"dp_collective must be 'fused', 'per_node' or "
+                f"'overlap', got {self.dp_collective!r}")
         if self.dp_workers > 1 and self.global_batch % self.dp_workers:
             raise ValueError(
                 f"global_batch={self.global_batch} not divisible by "

@@ -9,7 +9,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core.monitor import monitor_record, tree_metrics
-from repro.models.transformer import forward
+from repro.models.transformer import forward, sketch_groups
 from repro.optim.adamw import adamw_update
 from repro.optim.compression import compress_grads, init_error_feedback
 from repro.optim.sketched_sgd import compress_grads_countsketch
@@ -26,6 +26,74 @@ def cross_entropy(logits, labels, z_weight: float = 0.0):
     if z_weight > 0:
         ce = ce + z_weight * (lse ** 2).mean()
     return ce
+
+
+def _psum_wire_segments(run, ax, err_state, grads, loss, ce, aux, *,
+                        sketch_leaves=None, name):
+    """THE flat-segment gradient-wire exchange shared by the fused and
+    overlap layouts (DESIGN.md §9/§10): pack the gradient wire (the
+    count-sketch table — int8-grid values under wire_dtype="int8" — or
+    the dense grads), the scalar metrics and a constant-1 worker
+    counter — plus, for the fused single-collective layout, every
+    sketch node's local increments (``sketch_leaves``) — into ONE flat
+    psum, and post-process the merge.
+
+    Returns ``(loss, ce, aux, grads, new_err, merged_sketch)`` with
+    ``merged_sketch`` None unless ``sketch_leaves`` rode the buffer.
+    Segment offsets are static (memoized at NodeTree init); the
+    collective count is asserted by the differential tier and the bench
+    gate."""
+    from repro.parallel.collectives import psum_flat_segments
+    from repro.sketches.wire import partition_segments
+
+    cs_mode = run.compression is not None and \
+        run.compression.mode == "countsketch"
+    segments = {
+        "n": jnp.ones((), jnp.float32),
+        "scalars": jnp.stack([loss, ce, aux]),
+    }
+    if sketch_leaves is not None:
+        segments["sketch"] = sketch_leaves
+    local = None
+    if cs_mode:
+        from repro.optim.sketched_sgd import countsketch_local
+        local = countsketch_local(grads, err_state, run.compression)
+        segments["cs_table"] = local.cs.table
+    else:
+        # dense DP wire (also carries topk mode — top-k is NOT
+        # psum-mergeable, so under DP it rides the dense sum and its
+        # sparsification happens post-merge)
+        segments["grads"] = grads
+    if sketch_leaves is None:
+        # overlap's LATE psum (or sketching off): nothing early-keyed
+        # may ride this buffer — partition_segments is the single
+        # definition of the early/late split, so a segment added to
+        # OVERLAP_EARLY_KEYS without a matching early psum fails loudly
+        # at trace time instead of silently re-serializing the schedule
+        early, segments = partition_segments(segments)
+        if early:
+            raise ValueError(
+                f"early-keyed segments {sorted(early)} on the late "
+                f"wire psum — they must ride the early collective")
+    merged = psum_flat_segments(segments, ax, name=name)
+    workers = merged["n"]
+    loss = merged["scalars"][0] / workers
+    ce = merged["scalars"][1] / workers
+    aux = merged["scalars"][2] / workers
+    new_err = None
+    if cs_mode:
+        import dataclasses as _dc
+
+        from repro.optim.sketched_sgd import countsketch_finish
+        merged_cs = _dc.replace(local.cs, table=merged["cs_table"])
+        grads, new_err, _ = countsketch_finish(
+            local, merged_cs, workers=workers, axis_name=ax)
+    else:
+        grads = jax.tree.map(lambda g: g / workers, merged["grads"])
+        if run.compression is not None:
+            grads, new_err, _ = compress_grads(
+                grads, err_state, run.compression)
+    return loss, ce, aux, grads, new_err, merged.get("sketch")
 
 
 def _apply_merged_increments(old_tree, inc_tree, merged_leaves, beta):
@@ -55,7 +123,23 @@ def make_train_step(cfg: ArchConfig, run: RunConfig):
 
     run = finalize_run(cfg, run)
     ax = run.dp_axis_name
-    fused = ax is not None and run.dp_collective == "fused"
+    if run.sketch.dp_premerged:
+        raise ValueError(
+            "SketchSettings.dp_premerged is internal to the overlap "
+            "step's phase 2 — select it with run.dp_collective="
+            "'overlap', never directly")
+    groups = sketch_groups(cfg) if run.sketch.enabled else {}
+    consumed = bool(groups) and "res" not in groups
+    # The overlap schedule (DESIGN.md §10) only pays its second
+    # collective when the backward actually CONSUMES the merged triple
+    # (sketched-backprop trees). Monitor-mode trees — or sketching off —
+    # have no consumer, so overlap degrades to the fused
+    # single-collective fast path, which is already bitwise-exact for
+    # them.
+    overlap = ax is not None and run.dp_collective == "overlap" \
+        and consumed
+    fused = ax is not None and not overlap and \
+        run.dp_collective in ("fused", "overlap")
     if fused and run.sketch.enabled and not run.sketch.dp_defer:
         # fused mode moves the sketch merge out of the forward: the
         # forward must emit LOCAL increments (dp_defer), never per-node
@@ -63,12 +147,18 @@ def make_train_step(cfg: ArchConfig, run: RunConfig):
         run = dataclasses.replace(
             run, sketch=dataclasses.replace(
                 run.sketch, dp_defer=True, dp_axis=None))
-    if run.sketch.dp_defer and not fused:
+    if run.sketch.dp_defer and not (fused or overlap):
         raise ValueError(
-            "SketchSettings.dp_defer requires the fused DP step "
-            "(run.dp_collective='fused' with dp_axis_name set): a "
-            "deferred forward emits raw increments that only the fused "
-            "flat psum ever merges")
+            "SketchSettings.dp_defer requires a deferred-merge DP step "
+            "(run.dp_collective='fused' or 'overlap' with dp_axis_name "
+            "set): a deferred forward emits raw increments that only "
+            "the flat-segment psums ever merge")
+    # overlap phase settings: phase 1 emits local increments (dp_defer),
+    # phase 2 consumes the merged tree as-is (dp_premerged)
+    defer_st = dataclasses.replace(
+        run.sketch, dp_defer=True, dp_axis=None)
+    premerged_st = dataclasses.replace(
+        run.sketch, dp_defer=False, dp_axis=None, dp_premerged=True)
 
     def train_step(state: TrainState, batch):
         tokens = constrain(batch["tokens"], "batch", "none")
@@ -83,66 +173,77 @@ def make_train_step(cfg: ArchConfig, run: RunConfig):
             loss = ce + run.aux_weight * out["aux"]
             return loss, (out["sketch_state"], ce, out["aux"])
 
-        (loss, (new_sketch, ce, aux)), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(state.params, state.sketch)
-
         new_err = None
-        if fused:
-            # ---- ONE collective per step (DESIGN.md §9) -------------
-            # Everything that crosses the DP axis rides a single flat
-            # f32 psum: every sketch node's local increments, the
-            # gradient wire (count-sketch table — int8-grid values
-            # under wire_dtype="int8" — or the dense grads), the
-            # scalar metrics, and a constant-1 worker counter. Segment
-            # offsets are static (memoized at NodeTree init); the
-            # collective count is asserted by the differential tier
-            # and the bench gate.
+        if overlap:
+            # ---- TWO-PHASE OVERLAP SCHEDULE (DESIGN.md §10) ---------
+            # Phase 1: a forward sweep emits every node's LOCAL EMA
+            # increments, and the sketch flat psum is issued IMMEDIATELY
+            # — before the differentiated forward/backward below — so
+            # XLA can hide its latency behind the backward sweep. The
+            # merged triple is folded in (same accumulate as per_node,
+            # bitwise) and phase 2's backward consumes THIS step's
+            # merged triple through sketched_matmul's residuals: the
+            # fused layout's one-step consumption lag is gone. Only the
+            # logits head of this sweep is dead code (DCE'd); the
+            # activation matmuls it shares with phase 2 are CSE-able.
             from repro.parallel.collectives import psum_flat_segments
             from repro.sketches.wire import tree_increment_leaves
 
-            cs_mode = run.compression is not None and \
-                run.compression.mode == "countsketch"
-            segments = {
-                "n": jnp.ones((), jnp.float32),
-                "scalars": jnp.stack([loss, ce, aux]),
-            }
-            if new_sketch is not None:
-                segments["sketch"] = tree_increment_leaves(new_sketch)
-            local = None
-            if cs_mode:
-                from repro.optim.sketched_sgd import countsketch_local
-                local = countsketch_local(
-                    grads, state.opt["err"], run.compression)
-                segments["cs_table"] = local.cs.table
-            else:
-                # dense DP wire (also carries topk mode — top-k is NOT
-                # psum-mergeable, so under DP it rides the dense sum
-                # and its sparsification happens post-merge)
-                segments["grads"] = grads
-            merged = psum_flat_segments(segments, ax, name="fused_step")
-            workers = merged["n"]
-            loss = merged["scalars"][0] / workers
-            ce = merged["scalars"][1] / workers
-            aux = merged["scalars"][2] / workers
+            inc_out = forward(
+                state.params, tokens, cfg=cfg, mode="train",
+                sketch_state=state.sketch, settings=defer_st,
+                patch_embeds=batch.get("patch_embeds"))
+            inc_tree = inc_out["sketch_state"]
+            merged_inc = psum_flat_segments(
+                tree_increment_leaves(inc_tree), ax,
+                name="overlap_sketch", barrier=True)
+            new_sketch = _apply_merged_increments(
+                state.sketch, inc_tree, merged_inc, run.sketch.beta)
+
+            # Phase 2: loss + backward. The primal never reads the
+            # triple (sketched_matmul's forward is a plain matmul), so
+            # only the backward's reconstructions wait on the early
+            # collective.
+            def overlap_loss_fn(params, sketch):
+                out = forward(
+                    params, tokens, cfg=cfg, mode="train",
+                    sketch_state=sketch, settings=premerged_st,
+                    patch_embeds=batch.get("patch_embeds"))
+                ce = cross_entropy(out["logits"], labels, run.z_weight)
+                loss = ce + run.aux_weight * out["aux"]
+                return loss, (ce, out["aux"])
+
+            (loss, (ce, aux)), grads = jax.value_and_grad(
+                overlap_loss_fn, has_aux=True)(state.params, new_sketch)
+
+            # Late collective: gradient wire + metrics + worker counter
+            # — the same segments the fused layout packs, minus the
+            # sketch increments that already rode the early psum.
+            loss, ce, aux, grads, new_err, _ = _psum_wire_segments(
+                run, ax, state.opt.get("err"), grads, loss, ce, aux,
+                name="overlap_grad")
+        elif fused:
+            (loss, (new_sketch, ce, aux)), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params, state.sketch)
+            # ---- ONE collective per step (DESIGN.md §9) -------------
+            # Everything that crosses the DP axis rides a single flat
+            # f32 psum: the sketch increments + the gradient wire + the
+            # metrics + the worker counter.
+            from repro.sketches.wire import tree_increment_leaves
+
+            sketch_leaves = tree_increment_leaves(new_sketch) \
+                if new_sketch is not None else None
+            loss, ce, aux, grads, new_err, merged_sketch = \
+                _psum_wire_segments(
+                    run, ax, state.opt.get("err"), grads, loss, ce,
+                    aux, sketch_leaves=sketch_leaves, name="fused_step")
             if new_sketch is not None:
                 new_sketch = _apply_merged_increments(
-                    state.sketch, new_sketch, merged["sketch"],
+                    state.sketch, new_sketch, merged_sketch,
                     run.sketch.beta)
-            if cs_mode:
-                import dataclasses as _dc
-
-                from repro.optim.sketched_sgd import countsketch_finish
-                merged_cs = _dc.replace(local.cs,
-                                        table=merged["cs_table"])
-                grads, new_err, _ = countsketch_finish(
-                    local, merged_cs, workers=workers, axis_name=ax)
-            else:
-                grads = jax.tree.map(lambda g: g / workers,
-                                     merged["grads"])
-                if run.compression is not None:
-                    grads, new_err, _ = compress_grads(
-                        grads, state.opt["err"], run.compression)
         else:
+            (loss, (new_sketch, ce, aux)), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params, state.sketch)
             if ax is not None:
                 # per-shard losses -> global means, so every replica
                 # takes the same NaN-guard branch and logs the same
@@ -253,6 +354,14 @@ def make_dp_train_step(cfg: ArchConfig, run: RunConfig, mesh):
         an O(d*k) psum per node per layer inside the forward (DP-EXACT
         consumption of the current step's full-batch sketch, DESIGN.md
         §4), plus the per-leaf dense pmean or table psum for grads.
+      * "overlap": the two-phase schedule (DESIGN.md §10) — for
+        sketched-backprop trees, the sketch-increment flat psum is
+        issued right after the forward (barrier-pinned, hideable
+        behind the backward sweep) and the merged triple is folded in
+        BEFORE sketched_matmul's backward consumes it: current-step
+        DP-exact consumption, bitwise equal to per_node with TWO
+        all-reduces per step. Monitor-mode trees (no consumer) keep
+        the fused single-collective fast path.
 
     Params/optimizer moments/sketches stay identical on every replica
     (the update is computed from merged quantities only); the

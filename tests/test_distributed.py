@@ -544,6 +544,440 @@ def test_fused_step_int8_and_backprop_lag_loss_gap_w4():
     assert "OK" in out
 
 
+# ---------------------------------------------------------------------------
+# ISSUE 5 differential tier: the overlap two-phase DP schedule vs the
+# per-node reference — sketched-backprop consumption with NO lag
+# ---------------------------------------------------------------------------
+
+
+OVERLAP_LM_CODE = """
+    import dataclasses, re
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from repro.configs import get_arch, reduced
+    from repro.data.synthetic import lm_batch
+    from repro.models.transformer import SketchSettings
+    from repro.optim.compression import CompressionConfig
+    from repro.sketches import tree_wire_spec
+    from repro.train.state import RunConfig, init_train_state
+    from repro.train.step import make_dp_train_step
+
+    STEPS = {steps}
+    mesh = Mesh(np.array(jax.devices()[:4]), ("data",))
+    cfg = reduced(get_arch("tinyllama-1.1b"))          # sketch_mode=backprop
+    ccfg = CompressionConfig(mode="countsketch", cs_rows=5,
+                             cs_cols=512, cs_k=256, cs_momentum=0.0)
+    key = jax.random.PRNGKey(0)
+    tokens, labels = lm_batch(jax.random.PRNGKey(2), 8, 16,
+                              cfg.vocab_size)
+    batch = {{"tokens": tokens, "labels": labels}}
+
+    def mk(mode, comp):
+        return RunConfig(seq_len=16, global_batch=8,
+                         dp_axis_name="data", dp_workers=4,
+                         compression=comp, dp_collective=mode,
+                         sketch=SketchSettings(enabled=True, k_max=9,
+                                               beta=0.9,
+                                               recon_mode="fast"))
+
+    for comp in {wires}:
+        states = {{}}
+        for mode in ("per_node", "overlap"):
+            run = mk(mode, comp)
+            state = init_train_state(key, cfg, run)
+            state = jax.device_put(state, NamedSharding(mesh, P()))
+            step = jax.jit(make_dp_train_step(cfg, run, mesh))
+            for _ in range(STEPS):
+                state, m = step(state, batch)
+            states[mode] = (state, m)
+        a, b = states["per_node"], states["overlap"]
+        la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+        assert len(la) == len(lb)
+        for x, y in zip(la, lb):
+            # NO lag allowance: sketched-backprop consumption under
+            # overlap is the current step's merged triple — full state
+            # AND metrics must be BITWISE equal to per_node
+            assert np.array_equal(np.asarray(x), np.asarray(y)), \\
+                "overlap step diverged from per_node"
+        print("bitwise OK", "countsketch" if comp else "dense")
+
+    # HLO: <= 2 all-reduces, the sketch psum scheduled BEFORE the
+    # backward — its merged result is consumed (the triple fold the
+    # backward reads) strictly before the gradient-wire all-reduce,
+    # whose operand the backward produces.
+    run = mk("overlap", None)
+    state = init_train_state(key, cfg, run)
+    early_total = tree_wire_spec(state.sketch).total
+    txt = jax.jit(make_dp_train_step(cfg, run, mesh)).lower(
+        jax.device_put(state, NamedSharding(mesh, P())),
+        batch).compile().as_text()
+    colls = re.findall(
+        r"= \\S+ (all-reduce|all-gather|reduce-scatter|"
+        r"all-to-all|collective-permute)", txt)
+    assert len(colls) == 2 and set(colls) == {{"all-reduce"}}, colls
+    entry = txt[txt.index("ENTRY"):]
+    lines = entry.splitlines()
+    ars = [(i, ln) for i, ln in enumerate(lines)
+           if re.search(r"= f32\\[\\d+\\]\\S* all-reduce\\(", ln)]
+    assert len(ars) == 2, [ln[:80] for _, ln in ars]
+    sizes = [int(re.search(r"f32\\[(\\d+)\\]", ln).group(1))
+             for _, ln in ars]
+    assert sizes[0] == early_total, (sizes, early_total)
+    assert sizes[1] > sizes[0], sizes
+    early_name = re.match(r"\\s*(\\S+)", ars[0][1]).group(1)
+    consumers = [i for i, ln in enumerate(lines)
+                 if early_name + ")" in ln or early_name + "," in ln
+                 or early_name + " " in ln]
+    consumers = [i for i in consumers if i != ars[0][0]]
+    assert consumers and min(consumers) < ars[1][0], \\
+        (min(consumers, default=-1), ars[1][0])
+    print("overlap HLO schedule OK", sizes)
+    print("OK")
+"""
+
+
+OVERLAP_MLP_CODE = """
+    import dataclasses
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.configs.paper import MLPConfig
+    from repro.core.sketch import SketchConfig
+    from repro.optim.adamw import AdamWConfig, init_adamw
+    from repro.models.mlp import mlp_init
+    from repro.train.paper_trainer import init_mlp_sketch, make_dp_step
+
+    STEPS = {steps}
+    mesh = Mesh(np.array(jax.devices()[:4]), ("data",))
+    W, Tl = 4, 8
+    cfg = MLPConfig(name="t", d_in=20, d_hidden=28, d_out=4,
+                    num_hidden_layers=3, activation="tanh",
+                    batch_size=Tl, learning_rate=1e-3)
+    scfg = SketchConfig(rank=3, max_rank=4, beta=0.9, batch_size=Tl)
+    opt_cfg = AdamWConfig(lr=1e-3, b2=0.999)
+    key = jax.random.PRNGKey(0)
+    kp, ks, kx = jax.random.split(key, 3)
+    params0 = mlp_init(kp, cfg)
+    x = jax.random.normal(kx, (W * Tl, cfg.d_in))
+    y = jax.random.randint(jax.random.fold_in(kx, 1), (W * Tl,), 0,
+                           cfg.d_out)
+
+    for variant in {variants}:
+        step_pn = make_dp_step(cfg, scfg, variant, opt_cfg, mesh,
+                               collective="per_node")
+        step_ov = make_dp_step(cfg, scfg, variant, opt_cfg, mesh,
+                               collective="overlap")
+        p = params0
+        opt = init_adamw(params0, opt_cfg)
+        sk = init_mlp_sketch(ks, cfg, scfg, variant)
+        # Both layouts step from the SAME reference state each
+        # iteration (the per_node trajectory), so the per-step bitwise
+        # contract stays observable along a real multi-step run: the
+        # gradient-derived leaves carry last-ulp cross-program fusion
+        # noise (XLA:CPU re-fuses the freely-inlined MLP backward per
+        # program — the LM e2e, whose backward is scan/remat-bounded,
+        # is the fully-bitwise witness), and letting the two
+        # trajectories free-run would feed that noise back into the
+        # step-2 observations.
+        for s in range(STEPS):
+            pa, oa, ska, la = step_pn(p, opt, sk, x, y)
+            pb, ob, skb, lb = step_ov(p, opt, sk, x, y)
+            # sketch trees + loss: BITWISE (current-step DP-exact merge)
+            for u, v in zip(jax.tree.leaves((ska, la)),
+                            jax.tree.leaves((skb, lb))):
+                assert np.array_equal(np.asarray(u), np.asarray(v)), \\
+                    (variant, s, "tree/loss diverged")
+            for u, v in zip(jax.tree.leaves((pa, oa)),
+                            jax.tree.leaves((pb, ob))):
+                np.testing.assert_allclose(np.asarray(u), np.asarray(v),
+                                           atol=1e-6, rtol=1e-6)
+            p, opt, sk = pa, oa, ska
+        print(variant, "trees+loss bitwise OK, grads ulp-close OK")
+    print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_overlap_partition_psum_bitwise_parity_mlp_variant_trees():
+    """Subsystem-level overlap differential at W=4, one tree per MLP
+    variant: routing the increments through the overlap schedule's
+    machinery — `partition_segments` early/late split + the
+    barrier-pinned early flat psum + the apply helpers — must be
+    BITWISE identical to the per-node `ema_triple_update(axis_name=...)`
+    psums (paper kind), and for the ragged corange kind the new
+    increment/apply decomposition must be bitwise the canonical
+    `corange_triple_update` both per worker and under per-leaf psums."""
+    out = _run("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.configs.paper import MLPConfig
+        from repro.core.sketch import SketchConfig
+        from repro.sketches import (
+            corange_apply_increment, corange_triple_increment,
+            corange_triple_update, ema_triple_update, partition_segments)
+        from repro.sketches.update import ema_apply_increment, \\
+            ema_triple_increment
+        from repro.parallel.collectives import psum_flat_segments
+        from repro.train.paper_trainer import init_mlp_sketch
+
+        mesh = Mesh(np.array(jax.devices()[:4]), ("data",))
+        W, Tl = 4, 8
+
+        def paper_tree(variant, rank, beta, seed):
+            cfg = MLPConfig(name="t", d_in=20, d_hidden=28, d_out=4,
+                            num_hidden_layers=3, activation="tanh",
+                            batch_size=Tl, learning_rate=1e-3)
+            scfg = SketchConfig(rank=rank, max_rank=4, beta=beta,
+                                batch_size=Tl)
+            sk = init_mlp_sketch(jax.random.PRNGKey(seed), cfg, scfg,
+                                 variant)
+            if variant != "corange":
+                sk = dataclasses.replace(sk, nodes={
+                    "hidden": dataclasses.replace(
+                        sk.nodes["hidden"],
+                        x=0.1 * sk.nodes["hidden"].psi[..., None, :] *
+                        jnp.ones((28, 1)))})
+            return cfg, scfg, sk
+
+        variants = [("sketched_fixed", 3, 0.9, 0),
+                    ("sketched_adaptive", 2, 0.9, 1),
+                    ("monitor", 4, 0.95, 2),
+                    ("corange", 3, 0.9, 3)]
+        for variant, rank, beta, seed in variants:
+            cfg, scfg, sk = paper_tree(variant, rank, beta, seed)
+            node = sk.nodes["hidden"]
+            L = cfg.num_hidden_layers
+            ka = sk.k_active
+            d = cfg.d_hidden
+            acts = jax.random.normal(jax.random.PRNGKey(100 + seed),
+                                     (L, W * Tl, d))
+
+            if variant == "corange":
+                key = jax.random.PRNGKey(7)
+                nz = lambda s, i: 0.05 * jax.random.normal(
+                    jax.random.fold_in(key, i), s)
+                xc = nz(node.x.shape, 0)
+                yc = nz(node.y.shape, 1)
+                zc = nz(node.z.shape, 2)
+
+                # (a) increment + apply == THE canonical update, per
+                # worker (no DP), nonzero state, bitwise
+                a0 = acts[:, :Tl]
+                for l in range(L):
+                    want = corange_triple_update(
+                        xc[l], yc[l], zc[l], a0[l], sk.proj,
+                        scfg.beta, ka)
+                    ix, iy, iz = corange_triple_increment(
+                        xc[l], yc[l], zc[l], a0[l], sk.proj,
+                        scfg.beta, ka)
+                    got = corange_apply_increment(
+                        xc[l], yc[l], zc[l], ix, iy, iz, scfg.beta, ka)
+                    for g, w in zip(got, want):
+                        assert np.array_equal(np.asarray(g),
+                                              np.asarray(w))
+                print("corange increment/apply == update OK")
+
+                # (b) partitioned early psum of the ragged increments ==
+                # per-leaf psums, then bitwise through the apply
+                def incs(a_sh):
+                    outs = [corange_triple_increment(
+                        xc[l], yc[l], zc[l], a_sh[l], sk.proj,
+                        scfg.beta, ka) for l in range(L)]
+                    return {"hidden": {
+                        "x": jnp.stack([o[0] for o in outs]),
+                        "y": jnp.stack([o[1] for o in outs]),
+                        "z": jnp.stack([o[2] for o in outs])}}
+
+                def apply_(m):
+                    outs = [corange_apply_increment(
+                        xc[l], yc[l], zc[l], m["hidden"]["x"][l],
+                        m["hidden"]["y"][l], m["hidden"]["z"][l],
+                        scfg.beta, ka) for l in range(L)]
+                    return {"x": jnp.stack([o[0] for o in outs]),
+                            "y": jnp.stack([o[1] for o in outs]),
+                            "z": jnp.stack([o[2] for o in outs])}
+
+                def overlap(a_sh):
+                    early, late = partition_segments(
+                        {"sketch": incs(a_sh),
+                         "n": jnp.ones((), jnp.float32)})
+                    assert set(early) == {"sketch"} and \\
+                        set(late) == {"n"}
+                    merged = psum_flat_segments(
+                        early["sketch"], "data",
+                        name="overlap_sketch", barrier=True)
+                    return apply_(merged)
+
+                def per_leaf(a_sh):
+                    pm = lambda t: jax.lax.psum(t, "data")
+                    return apply_(jax.tree.map(pm, incs(a_sh)))
+
+                sh = lambda f: jax.jit(shard_map(
+                    lambda a: f(a.reshape(L, Tl, d)),
+                    mesh=mesh, in_specs=P(None, "data"), out_specs=P(),
+                    check_rep=False))
+                got = sh(overlap)(acts)
+                want = sh(per_leaf)(acts)
+                for g, w in zip(jax.tree.leaves(got),
+                                jax.tree.leaves(want)):
+                    assert np.array_equal(np.asarray(g), np.asarray(w))
+                print("corange overlap partition bitwise OK")
+                continue
+
+            # paper-kind trees: the overlap early psum + apply vs the
+            # per-node reference psums
+            def per_node(a_sh):
+                def one(l):
+                    return ema_triple_update(
+                        node.x[l], node.y[l], node.z[l], a_sh[l],
+                        sk.proj["upsilon"], sk.proj["omega"],
+                        sk.proj["phi"], node.psi[l], scfg.beta, ka,
+                        axis_name="data")
+                outs = [one(l) for l in range(L)]
+                return {"hidden": {
+                    "x": jnp.stack([o[0] for o in outs]),
+                    "y": jnp.stack([o[1] for o in outs]),
+                    "z": jnp.stack([o[2] for o in outs])}}
+
+            def overlap(a_sh):
+                def one(l):
+                    return ema_triple_increment(
+                        node.x[l], node.y[l], node.z[l], a_sh[l],
+                        sk.proj["upsilon"], sk.proj["omega"],
+                        sk.proj["phi"], node.psi[l], scfg.beta, ka)
+                outs = [one(l) for l in range(L)]
+                leaves = {"hidden": {
+                    "x": jnp.stack([o[0] for o in outs]),
+                    "y": jnp.stack([o[1] for o in outs]),
+                    "z": jnp.stack([o[2] for o in outs])}}
+                early, late = partition_segments({
+                    "sketch": leaves,
+                    "n": jnp.ones((), jnp.float32),
+                    "scalars": jnp.zeros((3,), jnp.float32)})
+                assert set(early) == {"sketch"}
+                assert set(late) == {"n", "scalars"}
+                merged = psum_flat_segments(
+                    early["sketch"], "data", name="overlap_sketch",
+                    barrier=True)
+                m = merged["hidden"]
+                return {"hidden": {
+                    "x": ema_apply_increment(node.x, m["x"], scfg.beta,
+                                             ka),
+                    "y": ema_apply_increment(node.y, m["y"], scfg.beta,
+                                             ka),
+                    "z": ema_apply_increment(node.z, m["z"], scfg.beta,
+                                             ka)}}
+
+            sh = lambda f: jax.jit(shard_map(
+                lambda a: f(a.reshape(L, Tl, d)),
+                mesh=mesh, in_specs=P(None, "data"), out_specs=P(),
+                check_rep=False))
+            got = sh(overlap)(acts)
+            want = sh(per_node)(acts)
+            for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+                assert np.array_equal(np.asarray(g), np.asarray(w)), \\
+                    variant
+            print(variant, "overlap partition apply bitwise OK")
+        print("OK")
+    """, devices=4)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_overlap_step_bitwise_vs_per_node_sketched_backprop_w4():
+    """ISSUE 5 acceptance, LM half: with dp_collective="overlap" at W=4
+    the sketched-backprop LM is BITWISE equal to per_node over 3 full
+    steps — state AND metrics, dense and countsketch wires; the lag
+    allowance of the fused layout does not apply. The compiled step
+    holds <= 2 all-reduces, with the sketch psum scheduled before the
+    backward (its merged triple is consumed before the gradient-wire
+    all-reduce the backward feeds)."""
+    out = _run(OVERLAP_LM_CODE.format(
+        steps=3, wires="(None, ccfg)"), devices=4)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_overlap_mlp_e2e_vs_per_node_w4():
+    """ISSUE 5 acceptance, MLP half (full variant set, 3 steps): the
+    e2e DP MLP step under the overlap schedule reproduces the per-node
+    reference — sketch trees and loss bitwise, gradient-derived state
+    to last-ulp compiler noise."""
+    out = _run(OVERLAP_MLP_CODE.format(
+        steps=3,
+        variants="('sketched_fixed', 'sketched_adaptive', 'monitor')"),
+        devices=4)
+    assert "OK" in out
+
+
+@pytest.mark.dp_differential
+def test_dp_differential_mlp_sketched_backprop_w4():
+    """Per-PR reduced differential (CI job `differential-w4`): ONE
+    sketched-backprop MLP variant, 2 steps at W=4 — overlap vs
+    per_node, trees + loss bitwise."""
+    out = _run(OVERLAP_MLP_CODE.format(
+        steps=2, variants="('sketched_fixed',)"), devices=4)
+    assert "OK" in out
+
+
+@pytest.mark.dp_differential
+def test_dp_differential_monitor_lm_w4():
+    """Per-PR reduced differential (CI job `differential-w4`): the
+    monitor LM, 2 steps at W=4 — under overlap a monitor-only tree has
+    no backward consumer, so the step must stay on the fused
+    single-collective fast path AND remain bitwise equal to
+    per_node."""
+    out = _run("""
+        import dataclasses, re
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.configs import get_arch, reduced
+        from repro.data.synthetic import lm_batch
+        from repro.models.transformer import SketchSettings
+        from repro.train.state import RunConfig, init_train_state
+        from repro.train.step import make_dp_train_step
+
+        mesh = Mesh(np.array(jax.devices()[:4]), ("data",))
+        cfg = dataclasses.replace(reduced(get_arch("tinyllama-1.1b")),
+                                  sketch_mode="monitor")
+        key = jax.random.PRNGKey(0)
+        tokens, labels = lm_batch(jax.random.PRNGKey(2), 8, 16,
+                                  cfg.vocab_size)
+        batch = {"tokens": tokens, "labels": labels}
+        mk = lambda mode: RunConfig(
+            seq_len=16, global_batch=8, dp_axis_name="data",
+            dp_workers=4, dp_collective=mode,
+            sketch=SketchSettings(enabled=True, k_max=9, beta=0.9,
+                                  recon_mode="fast"))
+        states = {}
+        for mode in ("per_node", "overlap"):
+            run = mk(mode)
+            state = init_train_state(key, cfg, run)
+            state = jax.device_put(state, NamedSharding(mesh, P()))
+            step = jax.jit(make_dp_train_step(cfg, run, mesh))
+            for _ in range(2):
+                state, m = step(state, batch)
+            states[mode] = (state, m)
+        for x, y in zip(jax.tree.leaves(states["per_node"]),
+                        jax.tree.leaves(states["overlap"])):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), \\
+                "overlap monitor fast path diverged from per_node"
+
+        run = mk("overlap")
+        state = init_train_state(key, cfg, run)
+        txt = jax.jit(make_dp_train_step(cfg, run, mesh)).lower(
+            jax.device_put(state, NamedSharding(mesh, P())),
+            batch).compile().as_text()
+        colls = re.findall(
+            r"= \\S+ (all-reduce|all-gather|reduce-scatter|"
+            r"all-to-all|collective-permute)", txt)
+        assert len(colls) == 1 and colls[0] == "all-reduce", colls
+        print("OK")
+    """, devices=4)
+    assert "OK" in out
+
+
 @pytest.mark.slow
 def test_int8_error_feedback_survives_checkpoint_merge_w4():
     """Checkpoint round-trip of the per-worker error-feedback residuals
