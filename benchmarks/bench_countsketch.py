@@ -553,17 +553,23 @@ RELATIVE_GATES = (
 REGRESSION_TOL = 0.10
 
 
-def check_baseline(metrics: dict, baseline_path: str) -> list[str]:
+def check_baseline(metrics: dict, baseline_path: str,
+                   gates: tuple = RELATIVE_GATES,
+                   tol: float = REGRESSION_TOL) -> list[str]:
     """Compare the relative-gated metrics against the committed
-    baseline: >10% above baseline fails. Returns the failure list
+    baseline: >tol above baseline fails. Returns the failure list
     (empty == pass). Metrics absent from an older baseline are skipped
     (the next baseline refresh picks them up); metrics absent from the
     CURRENT run fail — a section silently dropping a gate is itself a
-    regression."""
+    regression.
+
+    Shared across the BENCH_* suite (bench_serve.py gates its monitor
+    overhead ratio through the same machinery with its own gate
+    tuple)."""
     with open(baseline_path) as f:
         base = json.load(f)["metrics"]
     failures = []
-    for key in RELATIVE_GATES:
+    for key in gates:
         if key not in metrics:
             failures.append(f"{key}: missing from this run")
             continue
@@ -571,15 +577,29 @@ def check_baseline(metrics: dict, baseline_path: str) -> list[str]:
             print(f"baseline,{key},skipped,not in committed baseline")
             continue
         now, ref = metrics[key], base[key]
-        limit = ref * (1.0 + REGRESSION_TOL)
+        limit = ref * (1.0 + tol)
         status = "PASS" if now <= limit else "FAIL"
         print(f"baseline,{key},{status},{now:.4f} vs baseline "
               f"{ref:.4f} (limit {limit:.4f})")
         if now > limit:
             failures.append(
-                f"{key}: {now:.4f} regressed >{REGRESSION_TOL:.0%} vs "
+                f"{key}: {now:.4f} regressed >{tol:.0%} vs "
                 f"baseline {ref:.4f}")
     return failures
+
+
+def write_bench_json(path: str, metrics: dict) -> None:
+    """BENCH_*.json writer shared by the bench suite: schema tag +
+    ``telemetry.run_metadata`` attribution header + the gated metrics —
+    so every committed baseline records the commit/environment it was
+    captured on (DESIGN.md §11)."""
+    from repro.telemetry import run_metadata
+
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({"schema": 1, "meta": run_metadata(),
+                   "metrics": metrics}, f, indent=2, sort_keys=True)
+        f.write("\n")
 
 
 def main(argv=None):
@@ -659,11 +679,7 @@ def main(argv=None):
         ov_rows, "overlap_collectives_per_step")
 
     if args.json:
-        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
-        with open(args.json, "w") as f:
-            json.dump({"schema": 1, "metrics": metrics}, f, indent=2,
-                      sort_keys=True)
-            f.write("\n")
+        write_bench_json(args.json, metrics)
         print(f"json,written,{args.json},{len(metrics)} metrics")
 
     if args.baseline:

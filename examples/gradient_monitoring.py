@@ -1,6 +1,8 @@
 """Gradient monitoring demo (paper §5.3 / Figure 5): healthy vs
 problematic deep MLPs, diagnosed ONLY from EMA sketches in O(L·k·d)
-memory — no gradient matrix is ever stored.
+memory — no gradient matrix is ever stored. Each run's diagnosis is
+also drained through the shared telemetry schema (DESIGN.md §11) —
+the same records the training loop and serving engine export.
 
     PYTHONPATH=src python examples/gradient_monitoring.py
 """
@@ -11,8 +13,11 @@ from repro.configs.paper import MONITOR_HEALTHY, MONITOR_PROBLEMATIC
 from repro.core.monitor import detect_pathologies, stable_rank
 from repro.core.sketch import SketchConfig, sketch_memory_bytes
 from repro.data.synthetic import class_prototypes, classification_batch
+from repro.sketches import node_paths
+from repro.telemetry import TelemetryLog, TelemetryRecord, monitor_report
 from repro.train.paper_trainer import accuracy, train
 
+tlog = TelemetryLog("artifacts/monitoring_telemetry.jsonl")
 for cfg in (MONITOR_HEALTHY, MONITOR_PROBLEMATIC):
     key = jax.random.PRNGKey(11)
     protos = class_prototypes(key, cfg.d_out, cfg.d_in)
@@ -37,6 +42,19 @@ for cfg in (MONITOR_HEALTHY, MONITOR_PROBLEMATIC):
     print(f"  collapsed layers   : "
           f"{int(flags['diversity_collapse'].sum())}"
           f"/{sr.shape[0]}")
+
+    # drain the run's monitor ring into the shared telemetry schema —
+    # node metrics + pathology flags resolved to node paths
+    nodes, path_flags = monitor_report(
+        res.monitor, node_paths(res.sketch), k)
+    tlog.append(TelemetryRecord(
+        kind="train", step=120,
+        scalars={"test_acc": float(accuracy(res.params, cfg,
+                                            x_test, y_test))},
+        nodes=nodes, flags=path_flags))
+
+tlog.close()
+print(f"\ntelemetry: {tlog.records_written} records -> {tlog.path}")
 
 scfg = SketchConfig(rank=4, max_rank=4, batch_size=128)
 sk_mb = sketch_memory_bytes(scfg, 16, 1024) / 2 ** 20

@@ -1,5 +1,7 @@
 """Batched serving demo: prefill a batch of prompts and decode greedily
-with the slot-based engine (KV ring caches for windowed archs).
+with the slot-based engine (KV ring caches for windowed archs), with
+live sketch monitoring + telemetry export on the last arch
+(DESIGN.md §11).
 
     PYTHONPATH=src python examples/serve_decode.py
 """
@@ -8,7 +10,8 @@ import jax.numpy as jnp
 
 from repro.configs import get_arch, reduced
 from repro.models.transformer import init_params
-from repro.serve.engine import ServeEngine
+from repro.serve import ServeEngine
+from repro.telemetry import TelemetryLog, read_jsonl
 
 for arch in ("tinyllama-1.1b", "recurrentgemma-2b", "xlstm-1.3b"):
     cfg = reduced(get_arch(arch))
@@ -19,3 +22,40 @@ for arch in ("tinyllama-1.1b", "recurrentgemma-2b", "xlstm-1.3b"):
     out = engine.generate(prompts, max_new_tokens=8)
     print(f"{arch:20s} generated {out.shape} tokens; "
           f"sample: {out[0].tolist()}")
+
+# -- live monitoring: the same engine with monitor=True threads EMA
+# activation sketches (one per layer) through the SAME jitted steps.
+# Generated tokens are bitwise identical — the sketches have no
+# consumer — and the run exports through the shared telemetry schema.
+print("\n== live monitoring (tinyllama-1.1b) ==")
+cfg = reduced(get_arch("tinyllama-1.1b"))
+params = init_params(jax.random.PRNGKey(0), cfg)
+prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                             cfg.vocab_size)
+plain = ServeEngine(cfg=cfg, params=params, max_context=64)
+path = "artifacts/serve_telemetry.jsonl"
+with TelemetryLog(path) as tlog:
+    monitored = ServeEngine(cfg=cfg, params=params, max_context=64,
+                            monitor=True, telemetry_log=tlog)
+    out_plain = plain.generate(prompts, max_new_tokens=8)
+    out_mon = monitored.generate(prompts, max_new_tokens=8)
+assert (out_plain == out_mon).all(), "monitoring must not change tokens"
+print("bitwise token parity monitor on/off: OK")
+
+rec = monitored.telemetry_record()
+for node, mets in rec.nodes.items():
+    print(f"  {node}: stable_rank {mets['stable_rank']:.2f}  "
+          f"y_norm {mets['y_norm']:.2e}")
+print(f"  flags: {rec.flags or 'none'}")
+print(f"  decode throughput: {rec.scalars['decode_tok_s']:.1f} tok/s")
+
+# slot refill (continuous batching): replace slot 0 mid-run; its
+# warmup counter resets so it cannot emit spurious pathology flags
+monitored.refill(0, jnp.asarray(range(16), dtype=jnp.int32))
+monitored.decode_step()
+print(f"  refilled slot 0; slot_steps = "
+      f"{monitored._slots['mon'].slot_steps.tolist()}")
+
+header, records = read_jsonl(path)
+print(f"telemetry: {len(records)} record(s) in {path} "
+      f"(git {header.get('git_sha', '?')[:9]})")

@@ -147,7 +147,11 @@ def detect_pathologies(
     `th.min_fill` readings: a warming-up ring has rel_span == 0 and an
     unsettled stable-rank mean, which would otherwise flag healthy runs
     on step one. Point-in-time flags (vanishing/exploding) need no
-    warm-up and fire immediately."""
+    window warm-up, but DO need at least one reading: an EMPTY ring
+    (count == 0 — a freshly-initialized serving engine polled before
+    its first decode) has mean_norm == 0, which would otherwise emit a
+    spurious "vanishing" on every layer (serving-warmup regression
+    tests in tests/test_serve.py)."""
     buf = state.buffer                                 # (W, L, M)
     n = jnp.minimum(state.count, buf.shape[0]).astype(jnp.float32)
     n = jnp.maximum(n, 1.0)
@@ -159,10 +163,11 @@ def detect_pathologies(
     min_norm = jnp.where(valid[..., 0], buf[..., 0], jnp.inf).min(0)
     sr = jnp.where(valid[..., 0], buf[..., 1], 0.0).sum(0) / n
     rel_span = (max_norm - min_norm) / jnp.maximum(mean_norm, 1e-30)
+    has_data = state.count >= 1
     warmed = state.count >= jnp.minimum(th.min_fill, buf.shape[0])
     return {
-        "vanishing": mean_norm < th.vanish_norm,
-        "exploding": max_norm > th.explode_norm,
+        "vanishing": has_data & (mean_norm < th.vanish_norm),
+        "exploding": has_data & (max_norm > th.explode_norm),
         "stagnating": warmed & (rel_span < th.stagnation_rel),
         "diversity_collapse": warmed & (sr < th.collapse_frac * k_active),
     }

@@ -4,6 +4,10 @@
     PYTHONPATH=src python -m repro.launch.serve \
         --arch tinyllama-1.1b --reduced --debug-mesh \
         --num-prompts 4 --max-new 8
+
+Live monitoring (DESIGN.md §11): ``--monitor`` threads activation
+sketches through the jitted serve steps and prints pathology flags;
+``--telemetry-json PATH`` exports the run as schema-versioned JSONL.
 """
 import argparse
 import time
@@ -19,6 +23,7 @@ from repro.launch.mesh import (
 from repro.models.transformer import init_params
 from repro.parallel.sharding import param_shardings, use_rules
 from repro.serve.engine import ServeEngine
+from repro.telemetry import TelemetryLog
 
 
 def main():
@@ -31,6 +36,11 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-context", type=int, default=64)
+    ap.add_argument("--monitor", action="store_true",
+                    help="live activation sketches in the serve steps")
+    ap.add_argument("--monitor-rank", type=int, default=4)
+    ap.add_argument("--telemetry-json", default=None, metavar="PATH",
+                    help="export TelemetryRecords as JSONL")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -39,6 +49,13 @@ def main():
     key = jax.random.PRNGKey(0)
     prompts = jax.random.randint(
         key, (args.num_prompts, args.prompt_len), 0, cfg.vocab_size)
+
+    tlog = TelemetryLog(args.telemetry_json) if args.telemetry_json \
+        else None
+    mk = lambda params: ServeEngine(
+        cfg=cfg, params=params, max_context=args.max_context,
+        monitor=args.monitor, monitor_rank=args.monitor_rank,
+        telemetry_log=tlog)
 
     if args.debug_mesh or args.multi_pod:
         mesh = make_debug_mesh(2, 4) if args.debug_mesh \
@@ -49,15 +66,13 @@ def main():
                                   init_params(key, cfg))
             params = jax.device_put(params,
                                     param_shardings(rules, params))
-            engine = ServeEngine(cfg=cfg, params=params,
-                                 max_context=args.max_context)
+            engine = mk(params)
             t0 = time.time()
             out = engine.generate(prompts, args.max_new)
             dt = time.time() - t0
     else:
         params = init_params(key, cfg)
-        engine = ServeEngine(cfg=cfg, params=params,
-                             max_context=args.max_context)
+        engine = mk(params)
         t0 = time.time()
         out = engine.generate(prompts, args.max_new)
         dt = time.time() - t0
@@ -67,6 +82,19 @@ def main():
           f"({tput:.1f} tok/s incl. compile)")
     for i in range(min(2, args.num_prompts)):
         print(f"  prompt {i}: {out[i].tolist()}")
+
+    if args.monitor:
+        rec = engine.telemetry_record()
+        if rec.flags:
+            print("pathology flags:")
+            for name, paths in sorted(rec.flags.items()):
+                print(f"  {name}: {', '.join(paths)}")
+        else:
+            print("pathology flags: none")
+    if tlog is not None:
+        tlog.close()
+        print(f"telemetry: {tlog.records_written} record(s) -> "
+              f"{args.telemetry_json}")
 
 
 if __name__ == "__main__":

@@ -99,6 +99,13 @@ class SketchSettings:
     # (DP-exact, no lag); the increments were computed by a phase-1
     # sweep under dp_defer. Set by the overlap train step only.
     dp_premerged: bool = False
+    # Serving monitor (DESIGN.md §11): monitoring-only nodes ("res")
+    # also update their EMA triples in prefill/decode, inside the same
+    # jitted step — live activation sketching in the serving path. The
+    # nodes have no consumer, so generated tokens are BITWISE identical
+    # to the unmonitored engine (tests/test_serve.py). eval stays
+    # frozen either way. Set by serve.engine, never by training.
+    serve_monitor: bool = False
 
     def __post_init__(self):
         if self.dp_defer and self.dp_axis is not None:
@@ -112,6 +119,12 @@ class SketchSettings:
                 "SketchSettings.dp_premerged consumes an already-merged "
                 "tree: it excludes both dp_defer (increment emission) "
                 "and dp_axis (per-node psums inside the forward)")
+        if self.serve_monitor and (self.dp_defer or self.dp_premerged
+                                   or self.dp_axis is not None):
+            raise ValueError(
+                "SketchSettings.serve_monitor is the single-program "
+                "serving path: it excludes the DP training layouts "
+                "(dp_axis / dp_defer / dp_premerged)")
 
 
 def lm_node_specs(cfg: ArchConfig) -> dict[str, NodeSpec]:
@@ -365,12 +378,21 @@ def _apply_block(
         x = x + y
     x = constrain(x, "batch", "seq_sp", "none")
 
-    if sk is not None and "res" in sk and mode == "train":
+    if sk is not None and "res" in sk and _monitor_active(mode, st):
         # monitoring-only residual-stream sketches (stop-grad inside;
-        # never consumed, so only the out node matters)
+        # never consumed, so only the out node matters). Active in
+        # train mode AND — under st.serve_monitor — in prefill/decode
+        # (DESIGN.md §11): the serving engine's live activation
+        # monitor, updated inside the same jitted step.
         new_sk = dict(sk, res=_update_triple(
             sk["res"], x.reshape(B * S, d), proj, k_active, st)[1])
     return x, new_cache, aux, new_sk
+
+
+def _monitor_active(mode: str, st: SketchSettings) -> bool:
+    """Whether monitoring-only sketch nodes advance in this mode."""
+    return mode == "train" or (st.serve_monitor and
+                               mode in ("prefill", "decode"))
 
 
 def _attn_with_sketch(p, h, *, cfg, layer_type, positions, mode, cache,
@@ -520,12 +542,14 @@ def forward(
                      "tail": new_tail_caches}
     new_sketch = None
     if sketch_state is not None:
-        if mode == "train":
+        if _monitor_active(mode, settings):
             new_sketch = _merge_sketch(sketch_state, new_group_sk,
                                        new_tail_sk, cfg)
         else:
-            # eval/prefill/decode never advance the sketch EMAs or the
-            # step counter — monitoring sees training activations only
+            # eval — and prefill/decode without serve_monitor — never
+            # advances the sketch EMAs or the step counter: training
+            # monitors see training activations only, and serving
+            # monitoring is an explicit opt-in (DESIGN.md §11)
             new_sketch = sketch_state
     return {"logits": logits, "cache": new_cache, "aux": aux,
             "sketch_state": new_sketch}

@@ -1,0 +1,11 @@
+"""Serving: slot-batched prefill/decode engine with optional
+sketch-native live activation monitoring (DESIGN.md §11)."""
+from repro.serve.engine import (
+    ServeEngine, ServeMonitorState, detect_slot_pathologies,
+    make_decode_step, make_prefill_step, make_refill_step,
+)
+
+__all__ = [
+    "ServeEngine", "ServeMonitorState", "detect_slot_pathologies",
+    "make_decode_step", "make_prefill_step", "make_refill_step",
+]

@@ -1,60 +1,342 @@
 """Batched serving engine: prefill + decode steps with slot-based
 continuous batching (fixed batch of request slots; finished slots are
-refilled without recompiling — all shapes static)."""
+refilled without recompiling — all shapes static, refill indices
+traced).
+
+Live activation monitoring (DESIGN.md §11, paper §4.6 applied to the
+serving path): with ``monitor=True`` the engine threads a monitor-mode
+``sketches.NodeTree`` ("res" nodes — one EMA activation sketch per
+layer, O(L·d·k) memory amortized over every slot) through the SAME
+jitted prefill/decode steps — no extra dispatch — plus a per-slot
+activation-energy EMA for degenerate-request flagging. The sketch nodes
+have no consumer, so generated tokens are BITWISE identical to the
+unmonitored engine (tests/test_serve.py asserts it); overhead is gated
+< 5% by benchmarks/bench_serve.py. Telemetry drains host-side through
+``repro.telemetry`` into the one train+serve schema.
+"""
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.models.transformer import forward, init_cache
+from repro.core.monitor import (
+    MonitorState, PathologyThresholds, detect_pathologies,
+    init_monitor_state, monitor_record, tree_metrics,
+)
+from repro.models.transformer import SketchSettings, forward
+from repro.sketches import NodeSpec, init_node_tree, node_paths
+from repro.telemetry import (
+    TelemetryRecord, flag_paths, latest_reading, node_metrics, span,
+)
 
 
-def make_prefill_step(cfg: ArchConfig, seq_len_ctx: int):
-    def prefill(params, tokens):
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ServeMonitorState:
+    """All monitoring state of one engine, updated inside the jitted
+    prefill/decode/refill steps (DESIGN.md §11)."""
+
+    tree: Any           # monitor-mode NodeTree ("res" nodes, L layers);
+    #                     proj sized for the DECODE token count (B) —
+    #                     prefill/refill swap in their own projections
+    ring: MonitorState  # (window, L, 3) tree_metrics ring buffer
+    slot_ema: jax.Array     # (B,) f32 per-slot activation-energy EMA
+    slot_steps: jax.Array   # (B,) i32 readings since slot (re)fill —
+    #                         gates per-slot flags exactly like the ring
+    #                         buffer's min_fill (warmup semantics)
+
+
+def _slot_energy(logits: jax.Array) -> jax.Array:
+    """(B,) activation-energy proxy from the last-position logits —
+    the per-slot analogue of the y_norm sketch metric."""
+    return jnp.linalg.norm(logits[:, -1].astype(jnp.float32), axis=-1)
+
+
+def _monitor_update(mon: ServeMonitorState, new_tree, logits, *,
+                    beta: float) -> ServeMonitorState:
+    """Fold one step's observations into the monitor state: ring-record
+    the tree metrics and advance every slot's energy EMA."""
+    energy = _slot_energy(logits)
+    first = mon.slot_steps == 0
+    ema = jnp.where(first, energy,
+                    beta * mon.slot_ema + (1.0 - beta) * energy)
+    return ServeMonitorState(
+        tree=new_tree,
+        ring=monitor_record(mon.ring, tree_metrics(new_tree)),
+        slot_ema=ema,
+        slot_steps=mon.slot_steps + 1,
+    )
+
+
+def detect_slot_pathologies(
+    mon: ServeMonitorState,
+    th: PathologyThresholds = PathologyThresholds(),
+) -> dict[str, jax.Array]:
+    """Boolean (B,) per-slot flags from the energy EMA. Slots gate on
+    their OWN fill counter (reset by refill), so a freshly-(re)filled
+    slot cannot flag before its window warms up — the serving analogue
+    of the ring buffer's min_fill semantics."""
+    warmed = mon.slot_steps >= th.min_fill
+    return {
+        "slot_vanishing": warmed & (mon.slot_ema < th.vanish_norm),
+        "slot_exploding": warmed & (mon.slot_ema > th.explode_norm),
+    }
+
+
+def make_prefill_step(cfg: ArchConfig, seq_len_ctx: int,
+                      settings: SketchSettings | None = None):
+    """mon/prefill_proj are None when monitoring is off; prefill_proj
+    carries (B*S0, k) projections (the tree's are decode-sized)."""
+    st = settings or SketchSettings()
+
+    def prefill(params, tokens, mon, prefill_proj):
+        sk = None
+        if mon is not None:
+            sk = dataclasses.replace(mon.tree, proj=prefill_proj)
         out = forward(params, tokens, cfg=cfg, mode="prefill",
-                      seq_len_ctx=seq_len_ctx, logits_only_last=True)
+                      seq_len_ctx=seq_len_ctx, logits_only_last=True,
+                      sketch_state=sk, settings=st)
         next_tok = jnp.argmax(out["logits"][:, -1], axis=-1)
-        return out["cache"], next_tok.astype(jnp.int32)
+        new_mon = mon
+        if mon is not None:
+            tree = dataclasses.replace(out["sketch_state"],
+                                       proj=mon.tree.proj)
+            new_mon = _monitor_update(mon, tree, out["logits"],
+                                      beta=st.beta)
+        return out["cache"], next_tok.astype(jnp.int32), new_mon
     return prefill
 
 
-def make_decode_step(cfg: ArchConfig, seq_len_ctx: int):
-    def decode(params, cache, tokens, positions):
+def make_decode_step(cfg: ArchConfig, seq_len_ctx: int,
+                     settings: SketchSettings | None = None):
+    st = settings or SketchSettings()
+
+    def decode(params, cache, tokens, positions, mon):
+        sk = mon.tree if mon is not None else None
         out = forward(params, tokens, cfg=cfg, mode="decode",
                       positions=positions, cache=cache,
-                      seq_len_ctx=seq_len_ctx)
+                      seq_len_ctx=seq_len_ctx, sketch_state=sk,
+                      settings=st)
         next_tok = jnp.argmax(out["logits"][:, -1], axis=-1)
-        return out["cache"], next_tok.astype(jnp.int32), out["logits"]
+        new_mon = mon
+        if mon is not None:
+            new_mon = _monitor_update(mon, out["sketch_state"],
+                                      out["logits"], beta=st.beta)
+        return (out["cache"], next_tok.astype(jnp.int32), out["logits"],
+                positions + 1, new_mon)
     return decode
+
+
+def _write_slot(cache, one, slot):
+    """Overwrite request slot `slot` of the batched cache with a
+    freshly-prefilled single-request cache. Group-stacked leaves carry
+    batch at axis 1 ((G, B, ...)), tail leaves at axis 0 — `slot` is
+    traced, so refilling any slot reuses one compiled program."""
+    def upd(axis):
+        return lambda c, n: jax.lax.dynamic_update_slice_in_dim(
+            c, n.astype(c.dtype), slot, axis=axis)
+
+    return {
+        "groups": [jax.tree.map(upd(1), c, n)
+                   for c, n in zip(cache["groups"], one["groups"])],
+        "tail": [jax.tree.map(upd(0), c, n)
+                 for c, n in zip(cache["tail"], one["tail"])],
+    }
+
+
+def make_refill_step(cfg: ArchConfig, seq_len_ctx: int,
+                     settings: SketchSettings | None = None):
+    """Continuous batching: prefill ONE new prompt and splice it into
+    request slot `slot` (cache, next-token, position, monitor state) —
+    all shapes static, one compile per prompt length."""
+    st = settings or SketchSettings()
+
+    def refill(params, cache, tok, pos, mon, slot, prompt, refill_proj):
+        sk = None
+        if mon is not None:
+            sk = dataclasses.replace(mon.tree, proj=refill_proj)
+        out = forward(params, prompt, cfg=cfg, mode="prefill",
+                      seq_len_ctx=seq_len_ctx, logits_only_last=True,
+                      sketch_state=sk, settings=st)
+        new_tok = jnp.argmax(out["logits"][0, -1]).astype(jnp.int32)
+        cache = _write_slot(cache, out["cache"], slot)
+        tok = tok.at[slot].set(new_tok)
+        pos = pos.at[slot].set(prompt.shape[1])
+        new_mon = mon
+        if mon is not None:
+            # the shared tree keeps accumulating (amortized over
+            # slots); the refilled slot's OWN stats restart so its
+            # warmup gating holds (slot_steps -> 1)
+            tree = dataclasses.replace(out["sketch_state"],
+                                       proj=mon.tree.proj)
+            new_mon = ServeMonitorState(
+                tree=tree,
+                ring=monitor_record(mon.ring, tree_metrics(tree)),
+                slot_ema=mon.slot_ema.at[slot].set(
+                    _slot_energy(out["logits"])[0]),
+                slot_steps=mon.slot_steps.at[slot].set(1),
+            )
+        return cache, tok, pos, new_mon
+    return refill
 
 
 @dataclasses.dataclass
 class ServeEngine:
-    """Greedy batched generation over fixed slots."""
+    """Greedy batched generation over fixed request slots, with
+    optional sketch-native live monitoring (DESIGN.md §11)."""
 
     cfg: ArchConfig
     params: object
     max_context: int
+    monitor: bool = False
+    monitor_rank: int = 4
+    monitor_window: int = 32
+    monitor_beta: float = 0.9
+    monitor_seed: int = 17
+    thresholds: PathologyThresholds = PathologyThresholds()
+    telemetry_log: Any = None          # telemetry.TelemetryLog | None
 
     def __post_init__(self):
-        self._prefill = jax.jit(make_prefill_step(self.cfg,
-                                                  self.max_context))
-        self._decode = jax.jit(make_decode_step(self.cfg,
-                                                self.max_context))
+        self._settings = None
+        if self.monitor:
+            self._settings = SketchSettings(
+                enabled=True, beta=self.monitor_beta,
+                k_max=2 * self.monitor_rank + 1, serve_monitor=True)
+        self._prefill = jax.jit(make_prefill_step(
+            self.cfg, self.max_context, self._settings))
+        self._decode = jax.jit(make_decode_step(
+            self.cfg, self.max_context, self._settings))
+        self._refill = jax.jit(make_refill_step(
+            self.cfg, self.max_context, self._settings))
+        self._proj_cache: dict[int, dict] = {}
+        self._slots = None
+        self._decode_steps = 0
+        self.spans: dict[str, float] = {}
+        self.last_logits = None
+
+    # -- monitoring plumbing ------------------------------------------
+
+    @property
+    def _k_max(self) -> int:
+        return 2 * self.monitor_rank + 1
+
+    def _proj_for(self, n_tokens: int) -> dict:
+        """(n_tokens, k_max) projection triple, derived deterministically
+        from the monitor seed and cached per token count — prefill
+        (B*S0), decode (B) and refill (S0) each get a stable set."""
+        if n_tokens not in self._proj_cache:
+            base = jax.random.fold_in(
+                jax.random.PRNGKey(self.monitor_seed), n_tokens)
+            ks = jax.random.split(base, 3)
+            self._proj_cache[n_tokens] = {
+                name: jax.random.normal(k, (n_tokens, self._k_max),
+                                        jnp.float32)
+                for name, k in zip(("upsilon", "omega", "phi"), ks)
+            }
+        return self._proj_cache[n_tokens]
+
+    def _init_monitor(self, batch: int) -> ServeMonitorState:
+        tree = init_node_tree(
+            jax.random.PRNGKey(self.monitor_seed),
+            {"res": NodeSpec(width=self.cfg.d_model,
+                             layers=self.cfg.num_layers)},
+            num_tokens=batch, k_max=self._k_max)
+        tree = dataclasses.replace(
+            tree, rank=jnp.asarray(self.monitor_rank, jnp.int32))
+        return ServeMonitorState(
+            tree=tree,
+            ring=init_monitor_state(self.monitor_window,
+                                    self.cfg.num_layers),
+            slot_ema=jnp.zeros((batch,), jnp.float32),
+            slot_steps=jnp.zeros((batch,), jnp.int32),
+        )
+
+    # -- slot lifecycle -----------------------------------------------
+
+    def start(self, prompts: jnp.ndarray) -> jnp.ndarray:
+        """Prefill a (B, S0) prompt batch into the B request slots;
+        returns the (B,) first generated tokens."""
+        B, S0 = prompts.shape
+        mon = proj = None
+        if self.monitor:
+            mon = self._init_monitor(B)
+            proj = self._proj_for(B * S0)
+        with span(self.spans, "prefill") as block:
+            cache, tok, mon = self._prefill(self.params, prompts, mon,
+                                            proj)
+            block(tok)
+        self._slots = {
+            "cache": cache, "tok": tok,
+            "pos": jnp.full((B,), S0, jnp.int32), "mon": mon,
+        }
+        return tok
+
+    def decode_step(self) -> jnp.ndarray:
+        """One greedy decode step for every slot; returns (B,) tokens."""
+        s = self._slots
+        cache, tok, logits, pos, mon = self._decode(
+            self.params, s["cache"], s["tok"][:, None], s["pos"],
+            s["mon"])
+        s.update(cache=cache, tok=tok, pos=pos, mon=mon)
+        self._decode_steps += 1
+        self.last_logits = logits
+        return tok
+
+    def refill(self, slot, prompt: jnp.ndarray) -> None:
+        """Replace request slot `slot` with a new (S0,) prompt —
+        continuous batching without recompiles (slot is traced; each
+        distinct prompt LENGTH compiles once)."""
+        s = self._slots
+        proj = self._proj_for(prompt.shape[-1]) if self.monitor else None
+        cache, tok, pos, mon = self._refill(
+            self.params, s["cache"], s["tok"], s["pos"], s["mon"],
+            jnp.asarray(slot, jnp.int32), prompt[None, :], proj)
+        s.update(cache=cache, tok=tok, pos=pos, mon=mon)
 
     def generate(self, prompts: jnp.ndarray, max_new_tokens: int):
         """prompts (B, S0) -> (B, max_new_tokens) greedy continuations."""
-        B, S0 = prompts.shape
-        cache, tok = self._prefill(self.params, prompts)
-        toks = [tok]
-        pos = jnp.full((B,), S0, jnp.int32)
-        for _ in range(max_new_tokens - 1):
-            cache, tok, _ = self._decode(
-                self.params, cache, tok[:, None], pos)
-            toks.append(tok)
-            pos = pos + 1
-        return jnp.stack(toks, axis=1)
+        toks = [self.start(prompts)]
+        with span(self.spans, "decode") as block:
+            for _ in range(max_new_tokens - 1):
+                toks.append(self.decode_step())
+            block(toks[-1])
+        out = jnp.stack(toks, axis=1)
+        if self.telemetry_log is not None:
+            self.telemetry_log.append(self.telemetry_record())
+        return out
+
+    # -- telemetry ----------------------------------------------------
+
+    def telemetry_record(self) -> TelemetryRecord:
+        """Drain the monitor state into the shared telemetry schema
+        (kind="serve"). Works with monitoring off (scalars/spans only)
+        and on a freshly-started engine (no flags before data)."""
+        scalars: dict[str, float] = {
+            "decode_steps": float(self._decode_steps),
+        }
+        dt = self.spans.get("decode", 0.0)
+        if dt > 0 and self._slots is not None and self._decode_steps:
+            B = self._slots["tok"].shape[0]
+            scalars["decode_tok_s"] = B * self._decode_steps / dt
+        nodes: dict = {}
+        flags: dict = {}
+        if self.monitor and self._slots is not None:
+            mon = self._slots["mon"]
+            paths = node_paths(mon.tree)
+            nodes = node_metrics(latest_reading(mon.ring), paths)
+            ring_flags = jax.device_get(detect_pathologies(
+                mon.ring, 2 * self.monitor_rank + 1, self.thresholds))
+            flags = flag_paths(ring_flags, paths)
+            slot_flags = jax.device_get(
+                detect_slot_pathologies(mon, self.thresholds))
+            flags.update(flag_paths(
+                slot_flags,
+                [f"slot/{i}" for i in range(mon.slot_ema.shape[0])]))
+            scalars["sketch_step"] = float(mon.tree.step)
+        return TelemetryRecord(
+            kind="serve", step=self._decode_steps, scalars=scalars,
+            nodes=nodes, flags=flags, spans=dict(self.spans))

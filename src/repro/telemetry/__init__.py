@@ -1,0 +1,24 @@
+"""Sketch-native telemetry (DESIGN.md §11).
+
+One schema for train AND serve: compiled steps keep writing sketch
+metrics into the in-device ring buffer (`core.monitor.MonitorState` —
+the hot path stays jit-pure and recompile-free), and the host drains it
+into ``TelemetryRecord``s exported as JSONL. ``run_metadata`` is the
+shared attribution header for telemetry logs and the BENCH_*.json
+baselines.
+"""
+from repro.telemetry.schema import (
+    RECORD_KINDS, SCHEMA_VERSION, TelemetryRecord, record_from_json,
+    record_to_json, record_to_line, run_metadata,
+)
+from repro.telemetry.log import TelemetryLog, read_jsonl, scalarize
+from repro.telemetry.collector import (
+    flag_paths, latest_reading, monitor_report, node_metrics, span,
+)
+
+__all__ = [
+    "RECORD_KINDS", "SCHEMA_VERSION", "TelemetryLog", "TelemetryRecord",
+    "flag_paths", "latest_reading", "monitor_report", "node_metrics",
+    "read_jsonl", "record_from_json", "record_to_json", "record_to_line",
+    "run_metadata", "scalarize", "span",
+]

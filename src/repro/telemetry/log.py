@@ -1,0 +1,119 @@
+"""JSONL telemetry exporter (DESIGN.md §11).
+
+``TelemetryLog`` appends one header line (``run_metadata``) then one
+line per ``TelemetryRecord``. Appends are host-side IO and therefore
+MUST stay out of compiled code: ``append`` detects traced values (a
+record built inside ``jit``) and becomes a no-op instead of crashing
+the trace — the hot path never pays for telemetry it cannot emit
+(tests/test_telemetry.py asserts both the no-op and that the file is
+untouched).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import IO
+
+import jax
+
+from repro.telemetry.schema import (
+    SCHEMA_VERSION, TelemetryRecord, record_from_json, record_to_line,
+    run_metadata,
+)
+
+
+def _has_tracer(obj) -> bool:
+    """True if any value reachable from obj is an abstract jax tracer
+    (i.e. the record was built inside a jit trace)."""
+    if isinstance(obj, jax.core.Tracer):
+        return True
+    if isinstance(obj, dict):
+        return any(_has_tracer(v) for v in obj.values())
+    if isinstance(obj, (list, tuple)):
+        return any(_has_tracer(v) for v in obj)
+    return False
+
+
+def scalarize(obj):
+    """Recursively convert jax/numpy scalars to python floats/ints so
+    records serialize cleanly. Tracers pass through untouched (append
+    will then no-op)."""
+    if isinstance(obj, jax.core.Tracer):
+        return obj
+    if isinstance(obj, dict):
+        return {k: scalarize(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [scalarize(v) for v in obj]
+    if hasattr(obj, "item") and getattr(obj, "ndim", None) == 0:
+        return obj.item()
+    return obj
+
+
+class TelemetryLog:
+    """Append-only JSONL sink for one run's telemetry stream.
+
+    The header line ({"telemetry_header": 1, ...run_metadata}) is
+    written lazily on first append so constructing a log (e.g. in a
+    config default) costs no IO. Use as a context manager or call
+    ``close``.
+    """
+
+    def __init__(self, path: str, meta: dict | None = None):
+        self.path = path
+        self.meta = meta
+        self.records_written = 0
+        self._fh: IO[str] | None = None
+
+    def _ensure_open(self):
+        if self._fh is None:
+            d = os.path.dirname(self.path)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            self._fh = open(self.path, "w")
+            header = {"telemetry_header": SCHEMA_VERSION,
+                      **(self.meta if self.meta is not None
+                         else run_metadata())}
+            self._fh.write(json.dumps(header, sort_keys=True) + "\n")
+
+    def append(self, rec: TelemetryRecord) -> bool:
+        """Write one record; returns False (no-op, no IO) if the record
+        holds traced values — i.e. it was built inside jit."""
+        if _has_tracer((rec.scalars, rec.nodes, rec.flags, rec.spans,
+                        rec.step, rec.wire_bytes, rec.collectives)):
+            return False
+        self._ensure_open()
+        self._fh.write(record_to_line(rec) + "\n")
+        self.records_written += 1
+        return True
+
+    def flush(self):
+        if self._fh is not None:
+            self._fh.flush()
+
+    def close(self):
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def read_jsonl(path: str) -> tuple[dict, list[TelemetryRecord]]:
+    """Parse one telemetry JSONL file -> (header, records)."""
+    header: dict = {}
+    records: list[TelemetryRecord] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            obj = json.loads(line)
+            if "telemetry_header" in obj:
+                header = obj
+            else:
+                records.append(record_from_json(obj))
+    return header, records

@@ -1,0 +1,120 @@
+"""The one telemetry schema for train AND serve (DESIGN.md §11).
+
+A run is a JSONL stream: one header object (``run_metadata`` — git sha,
+jax version, device platform, UTC timestamp) followed by one
+``TelemetryRecord`` per emission. Both training (`train/loop.py`) and
+serving (`serve/engine.py`) export through this module, so a single
+parser reads any run this repo produces — and the bench JSON headers
+(`BENCH_*.json`) reuse ``run_metadata`` so perf trajectories stay
+attributable across PRs.
+
+Per-record content maps 1:1 onto what the sketch subsystem already
+computes on-device: ``nodes`` carries the ``core/monitor.tree_metrics``
+row (grad_norm_proxy / stable_rank / y_norm per node path), ``flags``
+the ``detect_pathologies`` booleans resolved to node paths, ``scalars``
+the step metrics (loss/ce/...), ``spans`` host wall-clock sections
+(block-until-ready timed), and ``wire_bytes``/``collectives`` the
+structural DP accounting from ``train.step.collective_plan``.
+
+Round-trip contract (asserted by tests/test_telemetry.py): for records
+built from finite floats, ``record_from_json(record_to_json(r)) == r``
+bit-exactly — Python's json emits float repr, which round-trips IEEE
+doubles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import platform
+import subprocess
+import sys
+from datetime import datetime, timezone
+
+SCHEMA_VERSION = 1
+RECORD_KINDS = ("train", "serve")
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryRecord:
+    """One telemetry emission — a training step or a serving window."""
+
+    kind: str                                  # "train" | "serve"
+    step: int                                  # step / decode counter
+    scalars: dict = dataclasses.field(default_factory=dict)
+    # {node_path: {metric_name: value}} in sketches.node_paths order
+    nodes: dict = dataclasses.field(default_factory=dict)
+    # {pathology_name: [flagged node paths / slot ids]}
+    flags: dict = dataclasses.field(default_factory=dict)
+    # {span_name: seconds} — host wall-clock, block-until-ready timed
+    spans: dict = dataclasses.field(default_factory=dict)
+    wire_bytes: int = 0                        # DP bytes/step/worker
+    collectives: int = 0                       # DP collectives/step
+
+    def __post_init__(self):
+        if self.kind not in RECORD_KINDS:
+            raise ValueError(
+                f"TelemetryRecord.kind must be one of {RECORD_KINDS}, "
+                f"got {self.kind!r}")
+
+
+def record_to_json(rec: TelemetryRecord) -> dict:
+    """Plain-dict form of a record (stable key set, schema-tagged)."""
+    return {
+        "schema": SCHEMA_VERSION,
+        "kind": rec.kind,
+        "step": rec.step,
+        "scalars": dict(rec.scalars),
+        "nodes": {p: dict(m) for p, m in rec.nodes.items()},
+        "flags": {n: list(v) for n, v in rec.flags.items()},
+        "spans": dict(rec.spans),
+        "wire_bytes": rec.wire_bytes,
+        "collectives": rec.collectives,
+    }
+
+
+def record_from_json(obj: dict) -> TelemetryRecord:
+    """Inverse of ``record_to_json``; rejects unknown schema versions."""
+    schema = obj.get("schema")
+    if schema != SCHEMA_VERSION:
+        raise ValueError(
+            f"telemetry record schema {schema!r} != {SCHEMA_VERSION} "
+            f"(this reader)")
+    return TelemetryRecord(
+        kind=obj["kind"],
+        step=obj["step"],
+        scalars=dict(obj.get("scalars", {})),
+        nodes={p: dict(m) for p, m in obj.get("nodes", {}).items()},
+        flags={n: list(v) for n, v in obj.get("flags", {}).items()},
+        spans=dict(obj.get("spans", {})),
+        wire_bytes=obj.get("wire_bytes", 0),
+        collectives=obj.get("collectives", 0),
+    )
+
+
+def record_to_line(rec: TelemetryRecord) -> str:
+    """One JSONL line (sorted keys so diffs of logs are stable)."""
+    return json.dumps(record_to_json(rec), sort_keys=True)
+
+
+def run_metadata() -> dict:
+    """Attribution header for telemetry logs and BENCH_*.json files:
+    enough to pin a metric trajectory to a commit + environment."""
+    import jax
+
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True,
+            text=True, timeout=10).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        sha = "unknown"
+    dev = jax.devices()[0]
+    return {
+        "git_sha": sha,
+        "jax_version": jax.__version__,
+        "backend": dev.platform,
+        "device_kind": getattr(dev, "device_kind", "unknown"),
+        "num_devices": jax.device_count(),
+        "python": sys.version.split()[0],
+        "os": platform.platform(),
+        "timestamp_utc": datetime.now(timezone.utc).isoformat(),
+    }

@@ -25,9 +25,12 @@ import jax.numpy as jnp
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.core.adaptive import adaptive_step
 from repro.data.pipeline import PipelineConfig, host_batch
-from repro.sketches import refresh_tree
+from repro.sketches import node_paths, refresh_tree
+from repro.telemetry import TelemetryLog, TelemetryRecord, monitor_report
 from repro.train.state import RunConfig, TrainState, init_train_state
-from repro.train.step import make_dp_train_step, make_train_step
+from repro.train.step import (
+    collective_plan, make_dp_train_step, make_train_step,
+)
 
 log = logging.getLogger("repro.train")
 
@@ -50,6 +53,8 @@ class LoopConfig:
     max_skips: int = 5
     log_every: int = 10
     steps_per_epoch: int = 0          # 0 disables the adaptive controller
+    telemetry_path: str | None = None  # JSONL TelemetryRecord export
+    #                                    (DESIGN.md §11); None disables
 
 
 def run_training(cfg, run: RunConfig, loop: LoopConfig, *,
@@ -110,6 +115,16 @@ def run_training(cfg, run: RunConfig, loop: LoopConfig, *,
     consec_skips = 0
     last_skip_total = int(state.skipped)
 
+    # telemetry (DESIGN.md §11): the compiled step already writes sketch
+    # metrics into the in-device ring buffer; the host drains it into
+    # the shared train+serve schema. Structural wire accounting comes
+    # from the collective layout, not runtime introspection.
+    tlog = TelemetryLog(loop.telemetry_path) \
+        if loop.telemetry_path else None
+    plan = collective_plan(cfg, run) if tlog is not None else None
+    sk_paths = node_paths(state.sketch) \
+        if state.sketch is not None else []
+
     for step in range(step0, loop.num_steps):
         tokens, labels = host_batch(pipe, step)
         t0 = time.perf_counter()
@@ -163,6 +178,19 @@ def run_training(cfg, run: RunConfig, loop: LoopConfig, *,
                                         sketch=sketch)
 
         history.append({"step": step, "time_s": dt, **metrics})
+        if tlog is not None:
+            nodes, flags = {}, {}
+            if state.sketch is not None and step % loop.log_every == 0:
+                # ring drain (one small device->host copy) only on log
+                # steps — the per-step record stays scalars + spans
+                nodes, flags = monitor_report(
+                    state.monitor, sk_paths,
+                    int(2 * state.sketch.rank + 1))
+            tlog.append(TelemetryRecord(
+                kind="train", step=step, scalars=metrics,
+                nodes=nodes, flags=flags, spans={"step": dt},
+                wire_bytes=plan["wire_bytes"],
+                collectives=plan["collectives"]))
         if step % loop.log_every == 0:
             log.info("step %d loss %.4f grad_norm %.3f (%.3fs)",
                      step, metrics["loss"], metrics["grad_norm"], dt)
@@ -171,6 +199,8 @@ def run_training(cfg, run: RunConfig, loop: LoopConfig, *,
 
     ckpt.wait()
     ckpt.save(loop.num_steps, persistable(state))
+    if tlog is not None:
+        tlog.close()
     return state, history
 
 

@@ -11,7 +11,9 @@ from repro.configs.base import ArchConfig
 from repro.core.monitor import monitor_record, tree_metrics
 from repro.models.transformer import forward, sketch_groups
 from repro.optim.adamw import adamw_update
-from repro.optim.compression import compress_grads, init_error_feedback
+from repro.optim.compression import (
+    compress_grads, compressed_bytes, init_error_feedback,
+)
 from repro.optim.sketched_sgd import compress_grads_countsketch
 from repro.optim.schedule import warmup_cosine
 from repro.parallel.sharding import constrain
@@ -323,6 +325,61 @@ def make_train_step(cfg: ArchConfig, run: RunConfig):
         return new_state, metrics
 
     return train_step
+
+
+def collective_plan(cfg: ArchConfig, run: RunConfig,
+                    num_params: int | None = None) -> dict:
+    """Structural per-step DP accounting for telemetry (DESIGN.md §11):
+    how many all-reduces one train step issues across the DP axis under
+    this run's collective layout, and how many bytes one worker puts on
+    the wire. Pure bookkeeping from the configs — mirrors the layout
+    selection in `make_train_step` (the HLO collective counts themselves
+    are asserted by tests/test_distributed.py); never traced.
+    """
+    run = finalize_run(cfg, run)
+    ax = run.dp_axis_name
+    if ax is None:
+        return {"layout": "single_program", "collectives": 0,
+                "wire_bytes": 0}
+    groups = sketch_groups(cfg) if run.sketch.enabled else {}
+    consumed = bool(groups) and "res" not in groups
+    overlap = run.dp_collective == "overlap" and consumed
+    fused = not overlap and run.dp_collective in ("fused", "overlap")
+    cs = run.compression is not None and \
+        run.compression.mode == "countsketch"
+    cs_p2 = 1 if cs and run.compression.cs_p2 > 0 else 0
+
+    if num_params is None:
+        from repro.models.transformer import abstract_params
+        params = abstract_params(cfg)
+        num_params = sum(l.size for l in jax.tree.leaves(params))
+        num_leaves = len(jax.tree.leaves(params))
+    else:
+        num_leaves = 1
+
+    # sketch increments that cross the wire: 3 (L, w, k_max) f32 leaves
+    # per node — identical payload in all three sketching layouts
+    sketch_bytes = sum(3 * cfg.num_layers * w * run.sketch.k_max * 4
+                       for w in groups.values())
+    grad_bytes = compressed_bytes(num_params, run.compression) if cs \
+        else num_params * 4
+
+    if fused:
+        # ONE flat psum: increments + grad wire + 3 scalars + counter
+        return {"layout": "fused", "collectives": 1 + cs_p2,
+                "wire_bytes": sketch_bytes + grad_bytes + 16}
+    if overlap:
+        # early sketch psum + late wire psum (+ optional p2 round)
+        return {"layout": "overlap", "collectives": 2 + cs_p2,
+                "wire_bytes": sketch_bytes + grad_bytes + 16}
+    # per_node reference layout: 3 psums (x/y/z) per node per layer
+    # inside the forward, 3 scalar pmeans, and the grad wire — one
+    # table psum under countsketch, else a dense pmean per param leaf
+    n_node_layers = len(groups) * cfg.num_layers
+    grad_colls = (1 + cs_p2) if cs else num_leaves
+    return {"layout": "per_node",
+            "collectives": 3 * n_node_layers + 3 + grad_colls,
+            "wire_bytes": sketch_bytes + grad_bytes + 12}
 
 
 def make_eval_step(cfg: ArchConfig, run: RunConfig):

@@ -1,0 +1,184 @@
+"""Serving engine (DESIGN.md §11): decode-vs-full-forward parity, slot
+refill without recompiles, and the live-monitoring guarantees — bitwise
+token parity monitor-on vs monitor-off, and warmup semantics that keep
+a fresh engine / refilled slot from emitting spurious pathology flags."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.core.monitor import (
+    PathologyThresholds, detect_pathologies, init_monitor_state,
+)
+from repro.models.transformer import forward, init_params
+from repro.serve import ServeEngine, detect_slot_pathologies
+from repro.serve.engine import ServeMonitorState
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return reduced(get_arch("tinyllama-1.1b"))
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_params(jax.random.PRNGKey(0), cfg)
+
+
+@pytest.fixture(scope="module")
+def prompts(cfg):
+    return jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                              cfg.vocab_size)
+
+
+def test_decode_matches_full_forward(cfg, params, prompts):
+    """Greedy tokens from the cached prefill/decode path must match
+    running the full quadratic forward from scratch at every step, and
+    the decode logits must agree numerically with the full forward's
+    last position."""
+    eng = ServeEngine(cfg=cfg, params=params, max_context=32)
+    T = 5
+    out = eng.generate(prompts, T)
+
+    seq = prompts
+    for t in range(T):
+        full = forward(params, seq, cfg=cfg, mode="eval")
+        ref_tok = jnp.argmax(full["logits"][:, -1], axis=-1)
+        assert (out[:, t] == ref_tok).all(), f"token mismatch at t={t}"
+        seq = jnp.concatenate([seq, out[:, t:t + 1]], axis=1)
+
+    # numeric parity of the final decode logits vs the full forward
+    full = forward(params, seq[:, :-1], cfg=cfg, mode="eval")
+    assert jnp.allclose(eng.last_logits[:, -1], full["logits"][:, -1],
+                        atol=1e-4, rtol=1e-4)
+
+
+def test_refill_no_recompile_and_shape_stability(cfg, params, prompts):
+    """Continuous batching: refilling ANY slot with a same-length
+    prompt reuses one compiled program (the slot index is traced), and
+    the refilled slot generates exactly what a fresh engine would."""
+    eng = ServeEngine(cfg=cfg, params=params, max_context=32)
+    eng.start(prompts)
+    eng.decode_step()
+
+    new_prompt = jnp.asarray([3, 1, 4, 1, 5, 9, 2, 6], jnp.int32)
+    eng.refill(0, new_prompt)
+    eng.refill(1, new_prompt + 1)
+    assert eng._refill._cache_size() == 1, \
+        "per-slot recompile: slot index must stay traced"
+    assert eng._decode._cache_size() == 1
+
+    # the refilled slot's continuation equals a fresh engine's
+    eng2 = ServeEngine(cfg=cfg, params=params, max_context=32)
+    ref = eng2.generate(jnp.stack([new_prompt, new_prompt + 1]), 4)
+    got = [eng._slots["tok"]]
+    for _ in range(3):
+        got.append(eng.decode_step())
+    got = jnp.stack(got, axis=1)
+    assert (got == ref).all()
+
+
+def test_monitor_bitwise_token_parity(cfg, params, prompts):
+    """ISSUE 6 acceptance criterion: the monitor nodes have no
+    consumer, so enabling live monitoring changes NOT ONE generated
+    token — bitwise, not allclose."""
+    off = ServeEngine(cfg=cfg, params=params, max_context=32)
+    on = ServeEngine(cfg=cfg, params=params, max_context=32,
+                     monitor=True)
+    toks_off = off.generate(prompts, 6)
+    toks_on = on.generate(prompts, 6)
+    assert (toks_off == toks_on).all()
+
+    # and the monitor actually observed the run
+    mon = on._slots["mon"]
+    assert int(mon.ring.count) == 6          # prefill + 5 decodes
+    assert int(mon.tree.step) == 6
+    assert (mon.slot_steps == 6).all()
+
+
+def test_monitor_telemetry_record(cfg, params, prompts):
+    on = ServeEngine(cfg=cfg, params=params, max_context=32,
+                     monitor=True)
+    on.generate(prompts, 5)
+    rec = on.telemetry_record()
+    assert rec.kind == "serve"
+    assert set(rec.nodes) == {f"res/{i}" for i in range(cfg.num_layers)}
+    assert rec.scalars["decode_steps"] == 4.0
+    assert rec.spans["prefill"] > 0 and rec.spans["decode"] > 0
+
+    # monitor-off engines still emit scalars/spans through the same
+    # schema — one record shape for every serving run
+    off = ServeEngine(cfg=cfg, params=params, max_context=32)
+    off.generate(prompts, 3)
+    rec_off = off.telemetry_record()
+    assert rec_off.kind == "serve" and rec_off.nodes == {}
+
+
+class TestWarmupSemantics:
+    """Regression tests for the serving-warmup fix: neither a fresh
+    engine nor a freshly refilled slot may emit spurious flags."""
+
+    def test_empty_ring_never_flags(self):
+        """An engine polled before its first prefill/decode has an
+        all-zero ring; mean_norm == 0 must NOT read as 'vanishing'."""
+        state = init_monitor_state(window=8, num_layers=3)
+        flags = detect_pathologies(state, k_active=9)
+        for name, mask in flags.items():
+            assert not bool(mask.any()), f"spurious {name} on empty ring"
+
+    def test_first_reading_can_flag_pointwise(self):
+        """The count>=1 gate must not suppress REAL point-in-time
+        pathologies: one genuinely-vanishing reading flags."""
+        state = init_monitor_state(window=8, num_layers=1)
+        from repro.core.monitor import monitor_record
+        state = monitor_record(state, jnp.full((1, 3), 1e-9))
+        flags = detect_pathologies(state, k_active=9)
+        assert bool(flags["vanishing"].all())
+        assert not bool(flags["stagnating"].any())   # still warming up
+
+    def test_fresh_slots_never_flag(self):
+        """slot_steps == 0 (never filled) gates the per-slot flags even
+        for an all-zero energy EMA."""
+        mon = ServeMonitorState(
+            tree=None,
+            ring=init_monitor_state(4, 1),
+            slot_ema=jnp.zeros((3,), jnp.float32),
+            slot_steps=jnp.zeros((3,), jnp.int32))
+        flags = detect_slot_pathologies(mon)
+        assert not bool(flags["slot_vanishing"].any())
+        assert not bool(flags["slot_exploding"].any())
+
+    def test_warmed_slot_flags_and_refill_resets(self):
+        th = PathologyThresholds()
+        mon = ServeMonitorState(
+            tree=None, ring=init_monitor_state(4, 1),
+            slot_ema=jnp.asarray([0.0, 5.0], jnp.float32),
+            slot_steps=jnp.asarray([th.min_fill, th.min_fill],
+                                   jnp.int32))
+        flags = detect_slot_pathologies(mon, th)
+        assert bool(flags["slot_vanishing"][0])      # dead slot flags
+        assert not bool(flags["slot_vanishing"][1])  # healthy one not
+        # a refill resets the slot counter -> flag must clear
+        refilled = dataclasses.replace(
+            mon, slot_steps=mon.slot_steps.at[0].set(1))
+        assert not bool(
+            detect_slot_pathologies(refilled, th)["slot_vanishing"][0])
+
+    def test_refilled_slot_no_spurious_flags_end_to_end(self, cfg,
+                                                       params, prompts):
+        """Through the real engine: refill a slot, poll immediately —
+        no slot flag may fire before the slot's own warmup."""
+        eng = ServeEngine(cfg=cfg, params=params, max_context=32,
+                          monitor=True)
+        eng.generate(prompts, 6)
+        eng.refill(0, jnp.asarray([9, 8, 7, 6, 5, 4, 3, 2], jnp.int32))
+        mon = eng._slots["mon"]
+        assert int(mon.slot_steps[0]) == 1
+        flags = detect_slot_pathologies(mon)
+        assert not bool(flags["slot_vanishing"][0])
+        assert not bool(flags["slot_exploding"][0])
+        rec = eng.telemetry_record()
+        for name, paths in rec.flags.items():
+            assert "slot/0" not in paths, (name, paths)

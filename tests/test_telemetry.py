@@ -1,0 +1,229 @@
+"""Telemetry subsystem (DESIGN.md §11): schema round-trip, jit-safety
+of the exporter, ring-buffer drain helpers, and the train-loop
+integration — one schema serving train AND serve."""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.monitor import (
+    METRIC_NAMES, init_monitor_state, monitor_record,
+)
+from repro.telemetry import (
+    SCHEMA_VERSION, TelemetryLog, TelemetryRecord, flag_paths,
+    latest_reading, monitor_report, node_metrics, read_jsonl,
+    record_from_json, record_to_json, record_to_line, run_metadata,
+    span,
+)
+
+
+def _sample_record():
+    return TelemetryRecord(
+        kind="train", step=7,
+        scalars={"loss": 0.1, "tiny": 1e-30, "big": 1.7e18},
+        nodes={"res/0": {"grad_norm_proxy": 3.25, "stable_rank": 1.5,
+                         "y_norm": 0.0078125}},
+        flags={"vanishing": ["res/0"], "slot_exploding": ["slot/3"]},
+        spans={"step": 0.0123456789},
+        wire_bytes=1024, collectives=2)
+
+
+class TestSchema:
+    def test_round_trip_bit_exact(self):
+        rec = _sample_record()
+        assert record_from_json(record_to_json(rec)) == rec
+        # through the actual serialized line too (json float repr
+        # round-trips IEEE doubles)
+        assert record_from_json(json.loads(record_to_line(rec))) == rec
+
+    def test_line_is_schema_tagged_and_stable(self):
+        line = record_to_line(_sample_record())
+        obj = json.loads(line)
+        assert obj["schema"] == SCHEMA_VERSION
+        assert line == record_to_line(_sample_record())
+
+    def test_unknown_schema_rejected(self):
+        obj = record_to_json(_sample_record())
+        obj["schema"] = SCHEMA_VERSION + 1
+        with pytest.raises(ValueError, match="schema"):
+            record_from_json(obj)
+
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError, match="kind"):
+            TelemetryRecord(kind="banana", step=0)
+
+    def test_run_metadata_keys(self):
+        meta = run_metadata()
+        for key in ("git_sha", "jax_version", "backend", "device_kind",
+                    "num_devices", "timestamp_utc"):
+            assert key in meta, key
+        assert meta["jax_version"] == jax.__version__
+
+
+class TestLog:
+    def test_jsonl_write_and_read(self, tmp_path):
+        path = str(tmp_path / "t.jsonl")
+        with TelemetryLog(path) as log:
+            assert log.append(_sample_record())
+            assert log.append(dataclasses.replace(
+                _sample_record(), kind="serve", step=8))
+            assert log.records_written == 2
+        header, recs = read_jsonl(path)
+        assert header["telemetry_header"] == SCHEMA_VERSION
+        assert "git_sha" in header
+        assert [r.kind for r in recs] == ["train", "serve"]
+        assert recs[0] == _sample_record()
+
+    def test_append_noop_inside_jit(self, tmp_path):
+        """A record built from traced values must neither crash the
+        trace nor touch the filesystem — the hot path stays jit-pure."""
+        path = str(tmp_path / "traced.jsonl")
+        log = TelemetryLog(path)
+        results = []
+
+        @jax.jit
+        def step(x):
+            rec = TelemetryRecord(kind="train", step=0,
+                                  scalars={"loss": x})
+            results.append(log.append(rec))
+            return x * 2.0
+
+        out = step(jnp.asarray(3.0))
+        assert float(out) == 6.0
+        assert results == [False]
+        assert not os.path.exists(path)
+        assert log.records_written == 0
+
+    def test_no_io_before_first_append(self, tmp_path):
+        path = str(tmp_path / "lazy.jsonl")
+        TelemetryLog(path)
+        assert not os.path.exists(path)
+
+
+class TestCollector:
+    def test_latest_reading_empty_and_wrap(self):
+        state = init_monitor_state(window=3, num_layers=2)
+        assert latest_reading(state) is None
+        for i in range(5):   # wraps the 3-slot ring
+            state = monitor_record(
+                state, jnp.full((2, 3), float(i), jnp.float32))
+        reading = latest_reading(state)
+        assert reading.shape == (2, 3)
+        assert float(reading[0, 0]) == 4.0
+
+    def test_node_metrics_shapes(self):
+        reading = jnp.arange(6, dtype=jnp.float32).reshape(2, 3)
+        nodes = node_metrics(reading, ["res/0", "res/1"])
+        assert set(nodes) == {"res/0", "res/1"}
+        assert set(nodes["res/0"]) == set(METRIC_NAMES)
+        assert nodes["res/1"]["grad_norm_proxy"] == 3.0
+        with pytest.raises(ValueError, match="out of sync"):
+            node_metrics(reading, ["res/0"])
+
+    def test_flag_paths_drops_empty(self):
+        flags = {"vanishing": jnp.asarray([True, False]),
+                 "exploding": jnp.asarray([False, False])}
+        out = flag_paths(flags, ["res/0", "res/1"])
+        assert out == {"vanishing": ["res/0"]}
+
+    def test_monitor_report_empty_ring(self):
+        state = init_monitor_state(window=4, num_layers=2)
+        assert monitor_report(state, ["res/0", "res/1"], 9) == ({}, {})
+
+    def test_span_blocks_and_accumulates(self):
+        spans = {}
+        with span(spans, "work") as block:
+            y = block(jnp.ones((8,)) * 2)
+        assert float(y[0]) == 2.0
+        assert spans["work"] > 0
+        first = spans["work"]
+        with span(spans, "work"):
+            pass
+        assert spans["work"] >= first
+
+
+class TestCollectivePlan:
+    def _run(self, **kw):
+        from repro.models.transformer import SketchSettings
+        from repro.train.state import RunConfig
+        sk = SketchSettings(enabled=True, k_max=9)
+        return RunConfig(global_batch=4, seq_len=16, sketch=sk,
+                         dp_workers=2, **kw)
+
+    def test_layouts(self):
+        from repro.configs import get_arch, reduced
+        from repro.train.step import collective_plan
+        cfg = reduced(get_arch("tinyllama-1.1b"))
+
+        plan = collective_plan(cfg, self._run())
+        assert plan == {"layout": "single_program", "collectives": 0,
+                        "wire_bytes": 0}
+
+        fused = collective_plan(cfg, self._run(
+            dp_axis_name="data", dp_collective="fused"))
+        assert fused["layout"] == "fused" and fused["collectives"] == 1
+
+        over = collective_plan(cfg, self._run(
+            dp_axis_name="data", dp_collective="overlap"))
+        assert over["layout"] == "overlap" and over["collectives"] == 2
+        assert over["wire_bytes"] == fused["wire_bytes"]
+
+        per = collective_plan(cfg, self._run(
+            dp_axis_name="data", dp_collective="per_node"))
+        # 3 psums per node-layer (2 nodes x 2 layers) + 3 scalar pmeans
+        # + a dense pmean per param leaf
+        assert per["layout"] == "per_node"
+        assert per["collectives"] > fused["collectives"]
+
+    def test_monitor_tree_degrades_overlap_to_fused(self):
+        import dataclasses as dc
+        from repro.configs import get_arch, reduced
+        from repro.train.step import collective_plan
+        cfg = dc.replace(reduced(get_arch("tinyllama-1.1b")),
+                         sketch_mode="monitor")
+        plan = collective_plan(cfg, self._run(
+            dp_axis_name="data", dp_collective="overlap"))
+        # "res" trees have no consumer: overlap's second collective
+        # buys nothing, the step keeps the fused single psum
+        assert plan["layout"] == "fused" and plan["collectives"] == 1
+
+
+class TestTrainLoopTelemetry:
+    def test_end_to_end_jsonl(self, tmp_path):
+        """A short sketched training run exports parseable records:
+        scalars+spans every step, node metrics + structural collective
+        accounting on log_every steps — the train half of the shared
+        schema."""
+        from repro.configs import get_arch, reduced
+        from repro.models.transformer import SketchSettings
+        from repro.train.loop import LoopConfig, run_training
+        from repro.train.state import RunConfig
+
+        cfg = reduced(get_arch("tinyllama-1.1b"))
+        run = RunConfig(global_batch=2, seq_len=16, total_steps=4,
+                        warmup_steps=1,
+                        sketch=SketchSettings(enabled=True, k_max=9))
+        path = str(tmp_path / "train.jsonl")
+        loop = LoopConfig(num_steps=3, ckpt_every=100, log_every=2,
+                          ckpt_dir=str(tmp_path / "ck"),
+                          telemetry_path=path)
+        run_training(cfg, run, loop, seed=0)
+
+        header, recs = read_jsonl(path)
+        assert header["telemetry_header"] == SCHEMA_VERSION
+        assert len(recs) == 3
+        assert all(r.kind == "train" for r in recs)
+        assert [r.step for r in recs] == [0, 1, 2]
+        for r in recs:
+            assert "loss" in r.scalars and "grad_norm" in r.scalars
+            assert r.spans["step"] > 0
+            assert r.collectives == 0     # single-program run
+        logged = recs[2]                  # log_every=2 -> ring drained
+        assert set(logged.nodes) == {"block0/ffn_h", "block0/ffn_in",
+                                     "block1/ffn_h", "block1/ffn_in"}
+        for m in logged.nodes.values():
+            assert set(m) == set(METRIC_NAMES)
+        assert recs[1].nodes == {}        # off-log steps stay light
