@@ -37,6 +37,16 @@ Sections:
                  bytes <= 2.5% of dense at loss gap <= 0.05 vs the
                  dense-wire overlap run, with exactly TWO all-reduces
                  per compiled step and the sketch psum scheduled first.
+  9. mesh_gate   ISSUE 7 acceptance, structural half: per-axis
+                 collective counts of the ZeRO-style reduce-scatter
+                 sketch merge on the (pod=2, data=2, model=2) mesh —
+                 RS + AG + wire AR on the flattened dp supergroup,
+                 ZERO step-issued model-axis collectives — plus the
+                 per-worker sketch-state bytes the shard buys. The W=8
+                 differential tier proves the same numbers against
+                 compiled HLO; this section pins them in the committed
+                 baseline so a layout regression also shows up as a
+                 bench diff.
 
 Machine-readable output (ISSUE 5 CI): --json PATH writes every gated
 metric (wire ratios, loss gaps, collective counts per section) as
@@ -529,6 +539,69 @@ def bench_overlap_gate():
     return [tuple(r.split(",")[1:]) for r in rows]
 
 
+def bench_mesh_gate():
+    """ISSUE 7 acceptance, structural half. No training and no
+    subprocess — `collective_plan` is the same trace-free accounting the
+    W=8 differential tier asserts against compiled HLO, and the memory
+    side reuses the closed-form that `bench_memory_complexity` proves
+    equal to a live shard. Gated metrics: dp-supergroup collective
+    count (3: RS + AG + wire AR), model-axis step-issued collectives
+    (0), the rs wire overhead over the fused single-psum layout (the
+    sketch payload crosses the wire twice), and the W=8 per-worker
+    sketch-state ratio."""
+    import jax
+
+    from repro.configs import get_arch, reduced
+    from repro.models.transformer import SketchSettings
+    from repro.sketches import (
+        tree_memory_bytes, tree_memory_bytes_per_worker,
+    )
+    from repro.train.state import RunConfig, init_train_state
+    from repro.train.step import collective_plan
+
+    cfg = reduced(get_arch("tinyllama-1.1b"))
+    sk = SketchSettings(enabled=True, k_max=9)
+    mesh_shape = {"pod": 2, "data": 2, "model": 2}
+    rs = RunConfig(seq_len=16, global_batch=8, sketch=sk, dp_workers=4,
+                   dp_axis_name=("pod", "data"), dp_collective="overlap",
+                   dp_merge="reduce_scatter")
+    fused = RunConfig(seq_len=16, global_batch=8, sketch=sk,
+                      dp_workers=4, dp_axis_name="data",
+                      dp_collective="fused")
+    plan = collective_plan(cfg, rs, mesh_shape=mesh_shape)
+    fplan = collective_plan(cfg, fused)
+    assert plan["layout"] == "rs_overlap", plan
+    assert plan["by_kind"] == {"all_reduce": 1, "reduce_scatter": 1,
+                               "all_gather": 1}, plan
+    assert plan["per_axis"] == {"pod+data": 3, "model": 0}, plan
+    overhead = plan["wire_bytes"] / fplan["wire_bytes"]
+
+    run = RunConfig(seq_len=16, global_batch=4, sketch=sk)
+    tree = init_train_state(jax.random.PRNGKey(0), cfg, run).sketch
+    full = tree_memory_bytes(tree)
+    ratios = {w: tree_memory_bytes_per_worker(tree, dp_shards=w) / full
+              for w in (1, 2, 4, 8)}
+    assert ratios[1] == 1.0 and ratios[8] < ratios[4] < ratios[2], ratios
+    assert ratios[8] <= 0.30, ratios   # 1/8 tile + replicated psi/proj
+
+    rows = [
+        ("rs_dp_collectives", plan["per_axis"]["pod+data"],
+         "RS+AG+AR on the flattened (pod,data) supergroup"),
+        ("rs_model_axis_collectives", plan["per_axis"]["model"],
+         "zero step-issued TP collectives"),
+        ("rs_wire_overhead_vs_fused", f"{overhead:.4f}",
+         f"{plan['wire_bytes']}B vs {fplan['wire_bytes']}B; sketch "
+         "crosses the wire twice (RS down + AG back)"),
+        ("per_worker_mem_ratio_w8", f"{ratios[8]:.4f}",
+         f"{tree_memory_bytes_per_worker(tree, dp_shards=8)}B of "
+         f"{full}B replicated"),
+        ("mesh_gate", "PASS",
+         "rs merge: 3 dp-supergroup collectives, 0 model-axis; W=8 "
+         "worker holds <=30% of the replicated sketch state"),
+    ]
+    return [(n, str(v), note) for n, v, note in rows]
+
+
 def _rows_value(rows, name):
     for row in rows:
         if row[0] == name:
@@ -549,6 +622,10 @@ RELATIVE_GATES = (
     "int8_collectives_per_step",
     "overlap_int8_wire_ratio",
     "overlap_collectives_per_step",
+    "mesh_rs_dp_collectives",
+    "mesh_rs_model_axis_collectives",
+    "mesh_rs_wire_overhead",
+    "mesh_per_worker_mem_ratio_w8",
 )
 REGRESSION_TOL = 0.10
 
@@ -677,6 +754,18 @@ def main(argv=None):
         ov_rows, "overlap_int8_loss_gap")
     metrics["overlap_collectives_per_step"] = _rows_value(
         ov_rows, "overlap_collectives_per_step")
+
+    mesh_rows = bench_mesh_gate()
+    for row in mesh_rows:
+        print(",".join(("mesh",) + row))
+    metrics["mesh_rs_dp_collectives"] = _rows_value(
+        mesh_rows, "rs_dp_collectives")
+    metrics["mesh_rs_model_axis_collectives"] = _rows_value(
+        mesh_rows, "rs_model_axis_collectives")
+    metrics["mesh_rs_wire_overhead"] = _rows_value(
+        mesh_rows, "rs_wire_overhead_vs_fused")
+    metrics["mesh_per_worker_mem_ratio_w8"] = _rows_value(
+        mesh_rows, "per_worker_mem_ratio_w8")
 
     if args.json:
         write_bench_json(args.json, metrics)

@@ -63,6 +63,39 @@ def lm_table(seq_len: int = 4096, global_batch: int = 256,
     return rows
 
 
+def per_worker_table(dp_shards=(1, 2, 4, 8)):
+    """DESIGN.md §12: under dp_merge="reduce_scatter" each worker owns a
+    1/W tile of the packed triple buffer; psi + the shared projections
+    replicate. Closed-form (`tree_memory_bytes_per_worker`) vs the live
+    bytes of an actual shard."""
+    import jax
+
+    from repro.configs import get_arch, reduced
+    from repro.models.transformer import SketchSettings
+    from repro.sketches import (
+        shard_tree, sharded_tree_memory_bytes, tree_memory_bytes,
+        tree_memory_bytes_per_worker, tree_wire_spec,
+    )
+    from repro.train.state import RunConfig, init_train_state
+
+    cfg = reduced(get_arch("tinyllama-1.1b"))
+    run = RunConfig(seq_len=16, global_batch=4,
+                    sketch=SketchSettings(enabled=True, k_max=9))
+    tree = init_train_state(jax.random.PRNGKey(0), cfg, run).sketch
+    full = tree_memory_bytes(tree)
+    total = tree_wire_spec(tree).total       # packed triple elements
+    rows = []
+    for w in dp_shards:
+        live = sharded_tree_memory_bytes(shard_tree(tree, w, 0))
+        closed = tree_memory_bytes_per_worker(tree, dp_shards=w)
+        rows.append({"dp_shards": w, "replicated_bytes": full,
+                     "flat_bytes": -(-total // w) * 4,
+                     "tail_bytes": closed - -(-total // w) * 4,
+                     "per_worker_bytes": closed, "live_bytes": live,
+                     "ratio": closed / full})
+    return rows
+
+
 def gate():
     """Nightly CI gate (ISSUE 3): the sketch state must stay an order of
     magnitude below what it replaces, in every regime, INCLUDING the
@@ -105,6 +138,17 @@ def gate():
     assert abs(live - closed) <= 0.01 * closed, (
         f"live NodeTree bytes {live} drifted from the closed-form "
         f"accounting {closed}")
+    # per-worker sharding (DESIGN.md §12): the closed-form must equal
+    # the live bytes of an actual shard exactly, and the sharded triple
+    # buffer must be exactly a ceil(1/W) tile of the replicated one —
+    # the replicated psi/proj tail is the only part that does not divide
+    for r in per_worker_table():
+        assert r["live_bytes"] == r["per_worker_bytes"], (
+            f"per-worker closed-form drifted from the live shard: {r}")
+        w = r["dp_shards"]
+        triples = r["replicated_bytes"] - r["tail_bytes"]
+        assert r["flat_bytes"] == -(-(triples // 4) // w) * 4, (
+            f"sharded triple buffer is not a 1/W tile: {r}")
     print("gate,pass")
 
 
@@ -124,6 +168,13 @@ def main():
     for r in lm_table():
         print(f"{r['arch']},{r['removed_gib_dev']:.2f},"
               f"{r['sketch_mib_dev']:.1f}")
+    print("## per-worker sketch state under dp_merge=reduce_scatter "
+          "(reduced tinyllama tree)")
+    print("dp_shards,replicated_bytes,per_worker_bytes,live_bytes,ratio")
+    for r in per_worker_table():
+        print(f"{r['dp_shards']},{r['replicated_bytes']},"
+              f"{r['per_worker_bytes']},{r['live_bytes']},"
+              f"{r['ratio']:.3f}")
     gate()
 
 

@@ -14,6 +14,18 @@ Guarantees:
     (sketch state as per-group dicts, two fewer leaves) restore through
     `repro.sketches.compat.restore_legacy_state`; new checkpoints tag
     metadata with `sketch_layout` so the provenance is inspectable.
+
+Per-worker residual persistence (DESIGN.md §12): DP runs carry state
+that is INTENTIONALLY distinct per worker — the countsketch
+error-feedback accumulators, and under ``dp_merge="reduce_scatter"``
+the worker's sketch shard. `gather_per_worker` stacks every worker's
+device-local copy onto a leading (W, ...) axis so checkpoints keep the
+full decomposition (no pmean merge destroys it at save time);
+`scatter_per_worker` hands each worker its row back on restore. The
+caller tags metadata with ``residual_layout="per_worker_v1"`` +
+``dp_workers`` so restore can tell stacked from legacy-merged
+checkpoints (`Checkpointer.metadata` reads it without touching the
+arrays); train/loop.py owns the W-change and legacy migrations.
 """
 from __future__ import annotations
 
@@ -25,6 +37,42 @@ import time
 
 import jax
 import numpy as np
+
+RESIDUAL_LAYOUT = "per_worker_v1"
+
+
+def gather_per_worker(tree, mesh, axis_name):
+    """Stack every DP worker's device-local copy of `tree`'s leaves on
+    a NEW leading (W, ...) axis. The per-worker buffers live under a
+    replicated spec (check_rep=False), so a plain host copy would
+    silently keep worker 0's buffer and drop the rest — this makes the
+    decomposition explicit before it leaves the devices."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    fn = shard_map(
+        lambda t: jax.tree.map(lambda x: x[None], t),
+        mesh=mesh, in_specs=P(), out_specs=P(axis_name),
+        check_rep=False)
+    return jax.jit(fn)(tree)
+
+
+def scatter_per_worker(stacked, mesh, axis_name):
+    """Inverse of `gather_per_worker`: each worker takes its own row of
+    the replicated (W, ...) stacked leaves — exact restore of the
+    per-worker decomposition (no mass redistribution)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def _take(t):
+        i = jax.lax.axis_index(axis_name)
+        return jax.tree.map(
+            lambda x: jax.lax.dynamic_index_in_dim(x, i, 0,
+                                                   keepdims=False), t)
+
+    fn = shard_map(_take, mesh=mesh, in_specs=P(), out_specs=P(),
+                   check_rep=False)
+    return jax.jit(fn)(stacked)
 
 
 class Checkpointer:
@@ -75,9 +123,9 @@ class Checkpointer:
         np.savez(os.path.join(tmp, "arrays.npz"),
                  **{f"leaf_{i}": a for i, a in enumerate(host_leaves)})
         meta = dict(metadata)
+        meta.setdefault("sketch_layout", "nodetree-v1")
         meta.update({"step": step, "time": time.time(),
                      "num_leaves": len(host_leaves),
-                     "sketch_layout": "nodetree-v1",
                      "treedef": treedef_str})
         with open(os.path.join(tmp, "metadata.json"), "w") as f:
             json.dump(meta, f)
@@ -102,6 +150,19 @@ class Checkpointer:
             shutil.rmtree(self._step_dir(s), ignore_errors=True)
 
     # -- restore ------------------------------------------------------
+
+    def metadata(self, step: int | None = None) -> dict:
+        """The metadata dict of a checkpoint WITHOUT loading its arrays
+        — restore callers read `residual_layout`/`dp_workers` here
+        first to build the right template (a per_worker_v1 checkpoint's
+        stacked leaves have different shapes than live state)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.directory}")
+        with open(os.path.join(self._step_dir(step),
+                               "metadata.json")) as f:
+            return json.load(f)
 
     def restore(self, template, step: int | None = None,
                 shardings=None):

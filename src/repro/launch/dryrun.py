@@ -42,6 +42,49 @@ from repro.train.step import make_train_step
 OUT_DIR = "artifacts/dryrun"
 
 
+def sketch_sharding_report(state, state_shardings, rules,
+                           *, min_bytes: int = 1 << 20) -> dict:
+    """Resolved sketch-triple shardings, asserted non-replicated.
+
+    Walks the NodeTree with its resolved NamedShardings and FAILS the
+    dry run when any (..., d, k) triple leaf above `min_bytes` is left
+    replicated on its width dim — an OOM-sized replicated sketch must
+    never pass a dry run silently (DESIGN.md §12). Returns a per-leaf
+    report {node/leaf: {shape, spec, shards, bytes_per_device}} that
+    lands in the cell JSON so §Perf can audit the resolution."""
+    sk = getattr(state, "sketch", None)
+    if sk is None or not hasattr(sk, "nodes"):
+        return {}
+    sh = state_shardings.sketch
+    report, bad = {}, []
+    for name in sorted(sk.nodes):
+        for leaf_name in ("x", "y", "z"):
+            leaf = getattr(sk.nodes[name], leaf_name)
+            spec = getattr(sh.nodes[name], leaf_name).spec
+            d_ax = spec[-2] if len(spec) >= 2 else None
+            members = d_ax if isinstance(d_ax, tuple) else \
+                ((d_ax,) if d_ax is not None else ())
+            shards = 1
+            for a in members:
+                shards *= rules.mesh.shape[a]
+            nbytes = leaf.dtype.itemsize
+            for s in leaf.shape:
+                nbytes *= s
+            report[f"{name}/{leaf_name}"] = {
+                "shape": list(leaf.shape), "spec": str(spec),
+                "shards": shards,
+                "bytes_per_device": nbytes // shards,
+            }
+            if nbytes >= min_bytes and shards == 1:
+                bad.append(f"{name}/{leaf_name} {tuple(leaf.shape)} "
+                           f"spec={spec}")
+    if bad:
+        raise AssertionError(
+            "replicated sketch state above "
+            f"{min_bytes} bytes: " + "; ".join(bad))
+    return report
+
+
 def batch_shardings(specs: dict, rules) -> dict:
     mesh, dp = rules.mesh, rules.dp
     out = {}
@@ -201,6 +244,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         with use_rules(rules), mesh:
             fn, args, shardings, donate = build_cell(
                 cfg, shape, rules, sketched=sketched, variant=variant)
+            if shape.kind == "train":
+                rec["sketch_sharding"] = sketch_sharding_report(
+                    args[0], shardings[0], rules)
             t0 = time.time()
             lowered = jax.jit(
                 fn, in_shardings=shardings, donate_argnums=donate,

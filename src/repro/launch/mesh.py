@@ -25,7 +25,14 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 4,
     return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 
+def dp_axes_for_mesh(mesh) -> tuple[str, ...]:
+    """The data-parallel (super)axis of our standard meshes: pod+data
+    when a pod axis exists, else data — the tuple feeds
+    ``RunConfig.dp_axis_name`` and ``ShardingRules.dp_axes`` alike."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
 def rules_for_mesh(mesh, *, strategy: str = "megatron", **kw):
     from repro.parallel.sharding import ShardingRules
-    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
-    return ShardingRules(mesh=mesh, dp_axes=dp, strategy=strategy, **kw)
+    return ShardingRules(mesh=mesh, dp_axes=dp_axes_for_mesh(mesh),
+                         strategy=strategy, **kw)

@@ -59,6 +59,19 @@ def main():
     ap.add_argument("--dp", type=int, default=0, metavar="W",
                     help="W-way data-parallel shard_map step (needs W "
                          "devices; batch must divide by W)")
+    ap.add_argument("--dp-pods", type=int, default=0, metavar="P",
+                    help="split the --dp workers over a (P, W/P) pod x "
+                         "data mesh: dp collectives take the flattened "
+                         "('pod','data') supergroup (needs P | W)")
+    ap.add_argument("--dp-merge", default="psum",
+                    choices=["psum", "reduce_scatter"],
+                    help="DP sketch-state merge: 'psum' = every worker "
+                         "holds the full merged NodeTree; "
+                         "'reduce_scatter' = ZeRO-style — each worker "
+                         "owns 1/W of the merged triple buffer, one "
+                         "all-gather rebuilds it for its consumers, "
+                         "and checkpoints keep per-worker shards "
+                         "(DESIGN.md 12)")
     ap.add_argument("--compress", default="none",
                     choices=["none", "topk", "countsketch"],
                     help="DP gradient compression mode")
@@ -104,15 +117,23 @@ def main():
         compression = CompressionConfig(mode=args.compress,
                                         cs_p2=args.cs_p2,
                                         wire_dtype=args.wire_dtype)
+    if args.dp_pods:
+        if not args.dp or args.dp % args.dp_pods:
+            raise SystemExit(
+                f"--dp-pods {args.dp_pods} must divide --dp {args.dp}")
+    dp_axis = None
+    if args.dp:
+        dp_axis = ("pod", "data") if args.dp_pods else "data"
     run = RunConfig(
         seq_len=seq, global_batch=batch,
         optimizer=AdamWConfig(lr=args.lr),
         warmup_steps=min(20, args.steps // 5 + 1), total_steps=args.steps,
         sketch=SketchSettings(enabled=not args.no_sketch, k_max=17),
         compression=compression,
-        dp_axis_name="data" if args.dp else None,
+        dp_axis_name=dp_axis,
         dp_workers=args.dp if args.dp else 1,
         dp_collective=args.dp_collective,
+        dp_merge=args.dp_merge,
     )
     loop = LoopConfig(num_steps=args.steps, ckpt_every=args.ckpt_every,
                       ckpt_dir=args.ckpt_dir, log_every=10)
@@ -126,7 +147,12 @@ def main():
                 f"--dp {args.dp} needs {args.dp} devices, have "
                 f"{len(jax.devices())} (set XLA_FLAGS="
                 f"--xla_force_host_platform_device_count={args.dp})")
-        mesh = Mesh(np.array(jax.devices()[:args.dp]), ("data",))
+        devs = np.array(jax.devices()[:args.dp])
+        if args.dp_pods:
+            mesh = Mesh(devs.reshape(args.dp_pods, -1),
+                        ("pod", "data"))
+        else:
+            mesh = Mesh(devs, ("data",))
         from repro.train.loop import run_training
         state, hist = run_training(cfg, run, loop, dp_mesh=mesh)
     elif args.debug_mesh or args.multi_pod or len(jax.devices()) > 1:

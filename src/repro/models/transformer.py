@@ -130,6 +130,10 @@ class SketchSettings:
 def lm_node_specs(cfg: ArchConfig) -> dict[str, NodeSpec]:
     """The NodeTree registry for an LM arch — one NodeSpec per sketched
     node group, stacked over the layer axis."""
+    # logical_axis=None resolves through DEFAULT_NODE_AXES by group name
+    # (ffn_in/res -> "embed", ffn_h -> "mlp", attn_o -> "heads"), so each
+    # group's (d, k) triple shards its width exactly as the consumer
+    # weight does (DESIGN.md §12).
     return {g: NodeSpec(width=w, layers=cfg.num_layers)
             for g, w in sketch_groups(cfg).items()}
 

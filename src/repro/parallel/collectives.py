@@ -19,9 +19,16 @@ single flat f32 buffer, all-reduced once, and unpacked at precomputed
 static offsets — element-wise bitwise identical to issuing one psum per
 leaf, with one collective's latency instead of dozens.
 
-Every helper here reports (name, bytes) to the trace-time accounting
-hook (`collective_trace`), which the bench/tests use to assert the
-per-step collective count and wire-byte budget without parsing HLO.
+reduce_scatter_flat_segments / all_gather_flat: the ZeRO-style variant
+(DESIGN.md §12) — each worker keeps only its tile of the merged sketch
+buffer; a single all-gather reconstitutes the full triple where a
+consumer genuinely needs it.
+
+Every helper here reports (name, bytes, kind) to the trace-time
+accounting hook (`collective_trace`) — kind distinguishes all_reduce /
+reduce_scatter / all_gather, which the bench/tests use to assert the
+per-step per-kind collective count and wire-byte budget without
+parsing HLO.
 """
 from __future__ import annotations
 
@@ -53,14 +60,35 @@ def collective_trace():
         _TRACE_LOG.pop()
 
 
-def _record(name: str, nbytes: int) -> None:
+def _record(name: str, nbytes: int, kind: str = "all_reduce") -> None:
     for log in _TRACE_LOG:
-        log.append({"name": name, "bytes": int(nbytes)})
+        log.append({"name": name, "bytes": int(nbytes), "kind": kind})
 
 
-def traced_psum(x: Array, axis_name: str, *, name: str) -> Array:
+def traced_psum(x: Array, axis_name, *, name: str) -> Array:
     _record(name, x.size * jnp.dtype(x.dtype).itemsize)
     return jax.lax.psum(x, axis_name)
+
+
+def traced_reduce_scatter(x: Array, axis_name, *, name: str) -> Array:
+    """Reduce-scatter over `axis_name` (a mesh axis name or a tuple of
+    them — the tuple forms one flattened "superaxis" group, major-to-
+    minor, matching `lax.axis_index` on the same tuple). ``tiled=True``
+    slices dim 0 evenly, so each worker receives its contiguous
+    1/W tile of exactly the psum result — bitwise, since both lower to
+    the same ring reduction order (asserted by the W=8 tier)."""
+    _record(name, x.size * jnp.dtype(x.dtype).itemsize,
+            kind="reduce_scatter")
+    return jax.lax.psum_scatter(x, axis_name, scatter_dimension=0,
+                                tiled=True)
+
+
+def traced_all_gather(x: Array, axis_name, *, name: str) -> Array:
+    """All-gather worker tiles back into the full dim-0 buffer
+    (inverse of `traced_reduce_scatter`'s tiling)."""
+    _record(name, x.size * jnp.dtype(x.dtype).itemsize,
+            kind="all_gather")
+    return jax.lax.all_gather(x, axis_name, axis=0, tiled=True)
 
 
 def psum_csvec(cs, axis_name: str):
@@ -106,6 +134,47 @@ def psum_flat_segments(tree, axis_name: str, *, spec=None,
     if barrier:
         merged = jax.lax.optimization_barrier(merged)
     return unpack_segments(spec, merged)
+
+
+def reduce_scatter_flat_segments(tree, axis_name, *, shards: int,
+                                 spec=None,
+                                 name: str = "flat_segments_rs",
+                                 barrier: bool = False) -> Array:
+    """Reduce-scatter a pytree's packed buffer across `axis_name`:
+    returns THIS worker's (padded_total/shards,) f32 tile of what
+    `psum_flat_segments` would have merged — the ZeRO-style sketch
+    merge (DESIGN.md §12). The buffer is zero-padded to a multiple of
+    `shards` so the scatter tiles evenly; padding sums to zero and is
+    masked out by the shard-apply. Same optimization-barrier contract
+    as `psum_flat_segments`."""
+    from repro.sketches.wire import pack_segments, segment_spec
+
+    if spec is None:
+        spec = segment_spec(tree)
+    flat = pack_segments(tree)
+    pad = -(-spec.total // shards) * shards - spec.total
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    if barrier:
+        flat = jax.lax.optimization_barrier(flat)
+    shard = traced_reduce_scatter(flat, axis_name, name=name)
+    if barrier:
+        shard = jax.lax.optimization_barrier(shard)
+    return shard
+
+
+def all_gather_flat(shard: Array, axis_name, *,
+                    name: str = "flat_segments_ag",
+                    barrier: bool = False) -> Array:
+    """Gather every worker's flat tile back into the full padded buffer
+    (consumers that need the whole merged triple — monitor metrics,
+    unsharded checkpoint export)."""
+    if barrier:
+        shard = jax.lax.optimization_barrier(shard)
+    full = traced_all_gather(shard, axis_name, name=name)
+    if barrier:
+        full = jax.lax.optimization_barrier(full)
+    return full
 
 
 def merge_csvecs(sketches: list):

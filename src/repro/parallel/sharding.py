@@ -232,8 +232,88 @@ def _param_axis_to_mesh(rules: ShardingRules, name: str | None):
     return table[name]
 
 
+def _path_names(path: tuple) -> list[str]:
+    """All string components of a pytree path (DictKey `.key` AND
+    GetAttrKey `.name` — dataclass fields like ``sketch``/``nodes``
+    only show up through the latter)."""
+    names = []
+    for part in path:
+        key = getattr(part, "key", None)
+        if not isinstance(key, str):
+            key = getattr(part, "name", None)
+        if isinstance(key, str):
+            names.append(key)
+    return names
+
+
+def _sketch_path_info(path: tuple):
+    """(node_name, leaf_name) when `path` addresses NodeTree sketch
+    state, else None. Triples/psi live at ...nodes/<name>/{x,y,z,psi};
+    the shared projections at ...proj/{upsilon,omega,phi}."""
+    names = _path_names(path)
+    if not names:
+        return None
+    leaf = names[-1]
+    if leaf in ("x", "y", "z", "psi") and "nodes" in names:
+        i = len(names) - 1 - names[::-1].index("nodes")   # last "nodes"
+        if i == len(names) - 3:       # .../nodes/<node_name>/<leaf>
+            return (names[i + 1], leaf)
+        return None
+    if leaf in ("upsilon", "omega", "phi") and "proj" in names:
+        return (None, leaf)
+    return None
+
+
+def spec_for_sketch(rules: ShardingRules, node_name: str | None,
+                    leaf_name: str, leaf) -> P:
+    """PartitionSpec for one sketch leaf (DESIGN.md §12).
+
+    A node's (…, d, k) triple shards its WIDTH dim exactly as the
+    consumer weight shards that same feature dim: the node's logical
+    axis ("embed" | "mlp" | "heads", from the DEFAULT_NODE_AXES
+    registry — ShapeDtypeStructs can't carry the SketchNode annotation)
+    resolves through `_param_axis_to_mesh`, then the ZeRO dp axes are
+    appended so replicated sketch state never scales with d. Members
+    are dropped back-to-front when d doesn't divide (TP alignment with
+    the weight survives longest). psi is k-sized — replicated. The
+    shared (T, k) projections shard token rows over dp."""
+    shape = leaf.shape
+    ndim = leaf.ndim if hasattr(leaf, "ndim") else len(shape)
+    if leaf_name == "psi":
+        return P()
+    if leaf_name in ("upsilon", "omega", "phi"):
+        if ndim != 2 or shape[0] % rules.dp_size != 0:
+            return P()
+        return P(rules.dp, None)
+    from repro.sketches.node import DEFAULT_NODE_AXES
+    logical = DEFAULT_NODE_AXES.get(node_name)
+    ax = _param_axis_to_mesh(rules, logical)
+    members = list(ax) if isinstance(ax, tuple) else \
+        ([ax] if ax is not None else [])
+    if rules.zero3:
+        members += [a for a in rules.dp_axes if a not in members]
+    d = shape[-2] if ndim >= 2 else shape[-1]
+
+    def _prod(ms):
+        n = 1
+        for a in ms:
+            n *= rules.mesh.shape[a]
+        return n
+
+    while members and d % _prod(members) != 0:
+        members.pop()
+    d_ax = tuple(members) if len(members) > 1 else \
+        (members[0] if members else None)
+    if ndim < 2:
+        return P(d_ax)
+    return P(*([None] * (ndim - 2) + [d_ax, None]))
+
+
 def spec_for_param(rules: ShardingRules, path: tuple, leaf) -> P:
     """PartitionSpec for one param leaf, from its pytree path + shape."""
+    sketch = _sketch_path_info(path)
+    if sketch is not None:
+        return spec_for_sketch(rules, sketch[0], sketch[1], leaf)
     # last DictKey string in the path identifies the weight
     name = None
     for part in reversed(path):

@@ -11,11 +11,16 @@ from repro.sketches.update import (
     corange_triple_update, ema_triple_update, mask_columns,
 )
 from repro.sketches.node import (
-    SketchNode, init_paper_node, zero_node_sketches,
+    DEFAULT_NODE_AXES, SketchNode, init_paper_node, register_node_axis,
+    zero_node_sketches,
 )
 from repro.sketches.tree import (
     NodeSpec, NodeTree, init_node_tree, node_paths, refresh_tree,
-    tree_memory_bytes, zero_sketches,
+    tree_memory_bytes, tree_memory_bytes_per_worker, zero_sketches,
+)
+from repro.sketches.shard import (
+    ShardedNodeTree, apply_shard_increments, refresh_sharded_tree,
+    shard_tree, sharded_tree_memory_bytes, template_tree, unshard_tree,
 )
 from repro.sketches.linear import sketched_matmul
 from repro.sketches.compat import (
@@ -27,13 +32,16 @@ from repro.sketches.wire import (
 )
 
 __all__ = [
-    "active_mask", "adopt_legacy", "corange_apply_increment",
-    "corange_triple_increment", "corange_triple_update",
-    "ema_triple_update", "init_node_tree", "init_paper_node",
-    "legacy_layout", "mask_columns", "NodeSpec", "NodeTree",
-    "node_paths", "pack_segments", "partition_segments", "refresh_tree",
-    "restore_legacy_state", "segment_spec", "SketchNode",
-    "sketched_matmul", "tree_increment_leaves", "tree_memory_bytes",
-    "tree_wire_spec", "unpack_segments", "zero_node_sketches",
-    "zero_sketches",
+    "active_mask", "adopt_legacy", "apply_shard_increments",
+    "corange_apply_increment", "corange_triple_increment",
+    "corange_triple_update", "DEFAULT_NODE_AXES", "ema_triple_update",
+    "init_node_tree", "init_paper_node", "legacy_layout",
+    "mask_columns", "NodeSpec", "NodeTree", "node_paths",
+    "pack_segments", "partition_segments", "refresh_sharded_tree",
+    "refresh_tree", "register_node_axis", "restore_legacy_state",
+    "segment_spec", "shard_tree", "ShardedNodeTree",
+    "sharded_tree_memory_bytes", "SketchNode", "sketched_matmul",
+    "template_tree", "tree_increment_leaves", "tree_memory_bytes",
+    "tree_memory_bytes_per_worker", "tree_wire_spec", "unpack_segments",
+    "unshard_tree", "zero_node_sketches", "zero_sketches",
 ]

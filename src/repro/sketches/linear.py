@@ -13,6 +13,16 @@ A~ from the EMA sketches (core/reconstruct.py) and computes
 
 `factored=True` (beyond-paper, DESIGN.md §7) exploits A~ = L R^T:
     grad_W = R @ (L^T @ delta)   — O(T k (d+f)) instead of O(T d f).
+
+Mesh behavior (DESIGN.md §12): the EMA increment feeding x_s/y_s/z_s is
+d-ROW-LOCAL (row i of ``a^T @ ups`` reads only feature i of the
+activations), so TP/sequence-parallel shards contribute per-shard
+increments and the cross-worker token sum rides the one wire collective.
+The backward's reconstruction is NOT row-local — its QR spans all d
+rows — so when the stored triple is TP-sharded, GSPMD gathers the k-thin
+(d, k) operands right here (O(d·k) bytes, k/d of a full activation
+gather); `launch/dryrun.py` asserts the resolved sketch shardings so the
+gather stays k-thin on real configs.
 """
 from __future__ import annotations
 

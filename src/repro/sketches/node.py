@@ -22,6 +22,27 @@ Array = jax.Array
 
 KINDS = ("paper", "corange")
 
+# Default node name -> LOGICAL width axis of the (…, d, k) triple: the
+# same logical axis the node's consumer weight carries on that dim, so
+# `parallel.sharding.spec_for_sketch` shards a node's sketch exactly as
+# its layer's weight (DESIGN.md §12). "embed" maps to the ZeRO (dp)
+# dim; "mlp"/"heads" map to the tensor-parallel axis. Extend via
+# `register_node_axis` when registering new NodeSpecs.
+DEFAULT_NODE_AXES: dict[str, str | None] = {
+    "ffn_in": "embed",     # d_model inputs (sequence-parallel fed)
+    "ffn_h": "mlp",        # FFN hidden width — TP-sharded like w_down
+    "attn_o": "heads",     # flattened heads*head_dim — TP like wo
+    "res": "embed",        # residual-stream monitor nodes
+    "hidden": "embed",     # MLP-trainer hidden nodes
+}
+
+
+def register_node_axis(name: str, logical_axis: str | None) -> None:
+    """Register the logical width axis of a new sketch-node name (used
+    by the path-based `param_shardings` resolution, which cannot see
+    the SketchNode's own annotation through ShapeDtypeStructs)."""
+    DEFAULT_NODE_AXES[name] = logical_axis
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
@@ -41,6 +62,11 @@ class SketchNode:
     psi: Array
     kind: str = dataclasses.field(
         metadata=dict(static=True), default="paper")
+    # logical mesh axis of the width (d) dim — "embed" (ZeRO/dp),
+    # "mlp"/"heads" (TP), or None (replicated). Resolved to mesh axes by
+    # `parallel.sharding.spec_for_sketch`; purely metadata here.
+    logical_axis: str | None = dataclasses.field(
+        metadata=dict(static=True), default=None)
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -64,7 +90,8 @@ class SketchNode:
 
 def init_paper_node(psi_key: Array, width: int, k_max: int,
                     layers: int | None = None,
-                    dtype=jnp.float32) -> SketchNode:
+                    dtype=jnp.float32,
+                    logical_axis: str | None = None) -> SketchNode:
     """Zero triple + fresh psi for a paper-kind node.
 
     x/y/z are allocated as THREE distinct buffers on purpose: aliasing
@@ -79,6 +106,7 @@ def init_paper_node(psi_key: Array, width: int, k_max: int,
         z=jnp.zeros(shape, dtype),
         psi=jax.random.normal(psi_key, lead + (k_max,), dtype),
         kind="paper",
+        logical_axis=logical_axis,
     )
 
 

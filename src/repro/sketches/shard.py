@@ -1,0 +1,226 @@
+"""ShardedNodeTree — ZeRO-style per-worker shard of a NodeTree
+(DESIGN.md §12).
+
+Under the reduce-scatter DP merge (``RunConfig.dp_merge=
+"reduce_scatter"``) no worker holds the full merged sketch triples.
+Instead each worker owns one contiguous 1/W slice of the PACKED x/y/z
+wire buffer — the exact flat-segment layout ``tree_wire_spec`` memoizes
+for the fused psum (DESIGN.md §9), zero-padded to a multiple of the
+shard count so the reduce-scatter tiles evenly. Everything small stays
+replicated: per-node psi, the shared projections, and the
+rank/key/epoch/step lineage.
+
+Exactness (asserted bitwise by the W=8 tier in
+tests/test_distributed.py): a reduce-scatter computes the same
+rank-order summation as an all-reduce and hands each worker its tile of
+the result, so this worker's shard of ``psum_scatter(pack(incs))`` is
+bit-identical to the corresponding slice of ``psum(pack(incs))`` — and
+the EMA apply on the flat shard (``mask * (beta * flat + inc_shard)``)
+is element-for-element the ``ema_apply_increment`` formula, because
+masked state stays masked under the recurrence and the flat layout
+never reorders any element's summation.
+
+The flat shard lives in the wire dtype (f32), so bitwise parity with
+the replicated reference holds for f32 trees (the default); lower-
+precision trees would round at pack time exactly as they already do on
+the fused wire.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.sketches.node import SketchNode
+from repro.sketches.tree import NodeTree
+from repro.sketches.update import active_mask
+from repro.sketches.wire import (
+    WIRE_DTYPE, SegmentSpec, pack_segments, tree_increment_leaves,
+    tree_wire_spec, unpack_segments,
+)
+
+Array = jax.Array
+
+
+def padded_total(spec: SegmentSpec, shards: int) -> int:
+    """spec.total rounded up to a multiple of the shard count."""
+    return -(-spec.total // shards) * shards
+
+
+def shard_len(spec: SegmentSpec, shards: int) -> int:
+    """Per-worker flat-shard length."""
+    return padded_total(spec, shards) // shards
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ShardedNodeTree:
+    """One worker's slice of a NodeTree's sketch triples + the
+    replicated meta. Drop-in for ``TrainState.sketch`` under the
+    reduce-scatter DP step (train/step.py)."""
+
+    flat: Array      # (shard_len,) f32 — this worker's slice of the
+    #                  packed (and padded) x/y/z wire buffer
+    psi: dict[str, Array]         # per-node psi, replicated
+    proj: Any                     # shared projections, replicated
+    rank: Array                   # () int32
+    key: Array                    # PRNG lineage (see NodeTree)
+    epoch: Array                  # () int32
+    step: Array                   # () int32
+    shards: int = dataclasses.field(metadata=dict(static=True))
+    # layout of the FULL packed triple buffer (all workers identical)
+    spec: SegmentSpec = dataclasses.field(metadata=dict(static=True))
+    # ((name, kind, logical_axis), ...) sorted by node name — everything
+    # needed to rebuild SketchNodes from unpacked leaves
+    node_meta: tuple = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def k_active(self) -> Array:
+        return 2 * self.rank + 1
+
+
+def _node_meta(tree: NodeTree) -> tuple:
+    return tuple(
+        (name, tree.nodes[name].kind,
+         getattr(tree.nodes[name], "logical_axis", None))
+        for name in sorted(tree.nodes))
+
+
+def _pack_padded(leaves, spec: SegmentSpec, shards: int) -> Array:
+    flat = pack_segments(leaves)
+    pad = padded_total(spec, shards) - spec.total
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat
+
+
+def shard_tree(tree: NodeTree, shards: int, index) -> ShardedNodeTree:
+    """This worker's ShardedNodeTree view of a full (replicated)
+    NodeTree. ``index`` is the worker's position on the DP (super)axis —
+    ``jax.lax.axis_index(ax)`` under shard_map, or a Python int in
+    host-side tests/elastic resharding."""
+    spec = tree_wire_spec(tree)
+    flat = _pack_padded(tree_increment_leaves(tree), spec, shards)
+    n = shard_len(spec, shards)
+    index = jnp.asarray(index, jnp.int32)
+    shard = jax.lax.dynamic_slice(flat, (index * n,), (n,))
+    return ShardedNodeTree(
+        flat=shard,
+        psi={name: tree.nodes[name].psi for name in tree.nodes},
+        proj=tree.proj,
+        rank=tree.rank, key=tree.key, epoch=tree.epoch, step=tree.step,
+        shards=shards, spec=spec, node_meta=_node_meta(tree))
+
+
+def unshard_tree(ssk: ShardedNodeTree, full_flat: Array) -> NodeTree:
+    """Rebuild the full NodeTree from a gathered ``(padded_total,)``
+    flat buffer (the all-gather of every worker's shard)."""
+    leaves = unpack_segments(ssk.spec, full_flat[:ssk.spec.total])
+    nodes = {}
+    for name, kind, logical_axis in ssk.node_meta:
+        tri = leaves[name]
+        nodes[name] = SketchNode(
+            x=tri["x"], y=tri["y"], z=tri["z"], psi=ssk.psi[name],
+            kind=kind, logical_axis=logical_axis)
+    return NodeTree(nodes=nodes, proj=ssk.proj, rank=ssk.rank,
+                    key=ssk.key, epoch=ssk.epoch, step=ssk.step)
+
+
+def template_tree(ssk: ShardedNodeTree) -> NodeTree:
+    """A NodeTree with ZERO triples but this tree's real psi/proj/rank —
+    exactly what increment emission needs (``ema_triple_increment``
+    reads x/y/z only for dtype; DESIGN.md §12): the rs step's forward
+    sweeps consume this instead of gathering state it won't read."""
+    total = padded_total(ssk.spec, ssk.shards)
+    return unshard_tree(ssk, jnp.zeros((total,), WIRE_DTYPE))
+
+
+def shard_column_mask(ssk: ShardedNodeTree, k_active, index) -> Array:
+    """This worker's slice of the packed active-column mask: 1.0 where
+    the flat element's trailing-k column is < k_active, 0.0 on inactive
+    columns AND on the padding tail (padding therefore stays exactly
+    zero under the recurrence)."""
+    parts = [
+        jnp.broadcast_to(active_mask(k_active, shape[-1], WIRE_DTYPE),
+                         shape).reshape(-1)
+        for shape in ssk.spec.shapes
+    ]
+    pad = padded_total(ssk.spec, ssk.shards) - ssk.spec.total
+    if pad:
+        parts.append(jnp.zeros((pad,), WIRE_DTYPE))
+    mask = jnp.concatenate(parts)
+    n = shard_len(ssk.spec, ssk.shards)
+    index = jnp.asarray(index, jnp.int32)
+    return jax.lax.dynamic_slice(mask, (index * n,), (n,))
+
+
+def apply_shard_increments(ssk: ShardedNodeTree, inc_tree: NodeTree,
+                           inc_shard: Array, beta: float,
+                           index) -> ShardedNodeTree:
+    """EMA apply on this worker's flat shard:
+    ``mask * (beta * flat + inc_shard)`` — the element-exact flat form
+    of ``ema_apply_increment`` (DESIGN.md §12). ``inc_tree`` is the
+    forward's local-increment tree, whose counters (step advanced by
+    the sweep) and meta carry over, mirroring
+    ``train.step._apply_merged_increments``."""
+    mask = shard_column_mask(ssk, inc_tree.k_active, index)
+    new_flat = (beta * ssk.flat + inc_shard) * mask
+    return dataclasses.replace(
+        ssk, flat=new_flat,
+        psi={name: inc_tree.nodes[name].psi for name in inc_tree.nodes},
+        proj=inc_tree.proj, rank=inc_tree.rank, key=inc_tree.key,
+        epoch=inc_tree.epoch, step=inc_tree.step)
+
+
+def refresh_sharded_tree(ssk: ShardedNodeTree) -> ShardedNodeTree:
+    """Rank-change refresh of a sharded tree — value-identical to
+    sharding the result of ``tree.refresh_tree`` on the unsharded tree:
+    the same fold_in lineage re-derives proj/psi (replicated, so every
+    worker computes identical values) and the flat shard zeroes (the
+    shard of a zero tree is zero). Shape-static: no recompiles."""
+    epoch = ssk.epoch + 1
+    base = jax.random.fold_in(ssk.key, epoch)
+    k_proj, k_psi = jax.random.split(base)
+    leaves, treedef = jax.tree.flatten(ssk.proj)
+    proj = jax.tree.unflatten(treedef, [
+        jax.random.normal(jax.random.fold_in(k_proj, i), leaf.shape,
+                          leaf.dtype)
+        for i, leaf in enumerate(leaves)
+    ])
+    psi = {}
+    for i, (name, _, _) in enumerate(ssk.node_meta):
+        p = ssk.psi[name]
+        psi[name] = jax.random.normal(
+            jax.random.fold_in(k_psi, i), p.shape, p.dtype) \
+            if p.size else p
+    return dataclasses.replace(
+        ssk, flat=jnp.zeros_like(ssk.flat), psi=psi, proj=proj,
+        epoch=epoch, step=jnp.zeros_like(ssk.step))
+
+
+def reshard_stacked_flat(stacked: Array, spec: SegmentSpec,
+                         w_new: int) -> Array:
+    """Elastic W-change of checkpointed sketch shards: (W_old, n_old)
+    stacked worker rows -> (W_new, n_new). Pure relayout — concatenate
+    the rows back into the full padded buffer, drop the old padding,
+    re-pad for the new worker count, split — so every real element is
+    EXACT across the restart (the residual decomposition of sketch
+    state is positional, not mass-split)."""
+    full = stacked.reshape(-1)[:spec.total]
+    pad = padded_total(spec, w_new) - spec.total
+    if pad:
+        full = jnp.concatenate([full, jnp.zeros((pad,), full.dtype)])
+    return full.reshape(w_new, -1)
+
+
+def sharded_tree_memory_bytes(ssk: ShardedNodeTree) -> int:
+    """Live per-worker bytes of the sharded state (flat shard + the
+    replicated psi/proj) — the accounting the memory-complexity gate
+    compares against the closed form
+    ``tree.tree_memory_bytes_per_worker`` (exact equality)."""
+    return sum(
+        leaf.size * jnp.dtype(leaf.dtype).itemsize
+        for leaf in jax.tree.leaves((ssk.flat, ssk.psi, ssk.proj))
+    )

@@ -19,8 +19,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.sketches.node import SketchNode, init_paper_node, \
-    zero_node_sketches
+from repro.sketches.node import DEFAULT_NODE_AXES, SketchNode, \
+    init_paper_node, zero_node_sketches
 
 Array = jax.Array
 
@@ -32,6 +32,10 @@ class NodeSpec:
     width: int                  # feature dim d of the node
     layers: int | None = None   # leading stack dim (None = single node)
     kind: str = "paper"
+    # logical mesh axis of the width dim ("embed" | "mlp" | "heads" |
+    # None); None resolves through DEFAULT_NODE_AXES by node name at
+    # init, so standard LM registries need no explicit annotation.
+    logical_axis: str | None = None
 
 
 @jax.tree_util.register_dataclass
@@ -80,8 +84,11 @@ def init_node_tree(
         "phi": jax.random.normal(ks[2], (num_tokens, k_max), dtype),
     }
     nodes = {
-        name: init_paper_node(ks[4 + i], spec.width, k_max,
-                              layers=spec.layers, dtype=dtype)
+        name: init_paper_node(
+            ks[4 + i], spec.width, k_max, layers=spec.layers,
+            dtype=dtype,
+            logical_axis=(spec.logical_axis if spec.logical_axis
+                          is not None else DEFAULT_NODE_AXES.get(name)))
         for i, (name, spec) in enumerate(specs.items())
     }
     tree = NodeTree(
@@ -103,17 +110,25 @@ def init_node_tree(
     return tree
 
 
-def node_paths(tree: NodeTree) -> list[str]:
+def node_paths(tree) -> list[str]:
     """Flat, stable per-layer paths ("block3/ffn_in", "res/5", ...) in
     the order ``tree_metrics`` emits monitor rows (sorted by node name,
-    layer-major within a node)."""
+    layer-major within a node). Accepts a NodeTree or a
+    ``shard.ShardedNodeTree`` (whose node shapes live in its static
+    wire spec — same sorted-name order, x/y/z per node)."""
+    if not hasattr(tree, "nodes"):        # ShardedNodeTree
+        named = [(meta[0], tree.spec.shapes[3 * i])
+                 for i, meta in enumerate(tree.node_meta)]
+    else:
+        named = [(name, tree.nodes[name].x.shape)
+                 for name in sorted(tree.nodes)]
     out = []
-    for name in sorted(tree.nodes):
-        node = tree.nodes[name]
-        if not node.stack_dims:
+    for name, shape in named:
+        stack = shape[:-2]
+        if not stack:
             out.append(name)
             continue
-        for layer in range(node.stack_dims[0]):
+        for layer in range(stack[0]):
             out.append(f"block{layer}/{name}" if name != "res"
                        else f"res/{layer}")
     return out
@@ -167,3 +182,24 @@ def tree_memory_bytes(tree: NodeTree) -> int:
         leaf.size * jnp.dtype(leaf.dtype).itemsize
         for leaf in jax.tree.leaves((tree.nodes, tree.proj))
     )
+
+
+def tree_memory_bytes_per_worker(tree: NodeTree,
+                                 dp_shards: int = 1) -> int:
+    """Closed-form PER-WORKER bytes under the reduce-scatter DP merge
+    (DESIGN.md §12): each worker holds a 1/dp_shards slice of the packed
+    x/y/z wire buffer (f32, zero-padded to tile evenly) plus the
+    replicated psi + projections. Exactly equals the live accounting
+    ``shard.sharded_tree_memory_bytes`` on the sharded state — the
+    memory-complexity gate asserts the equality. dp_shards=1 is the
+    replicated layout in wire dtype (== ``tree_memory_bytes`` for the
+    default f32 trees, which pack without rounding)."""
+    from repro.sketches.wire import WIRE_DTYPE, tree_wire_spec
+    spec = tree_wire_spec(tree)
+    padded = -(-spec.total // dp_shards) * dp_shards
+    flat_bytes = (padded // dp_shards) * jnp.dtype(WIRE_DTYPE).itemsize
+    rep_bytes = sum(
+        leaf.size * jnp.dtype(leaf.dtype).itemsize
+        for leaf in jax.tree.leaves(
+            ({n: tree.nodes[n].psi for n in tree.nodes}, tree.proj)))
+    return flat_bytes + rep_bytes

@@ -66,7 +66,10 @@ def ema_triple_update(
     #                               `a` (= A^[l-1]) while Y/Z observe
     #                               a_out (= A^[l]); node-indexed callers
     #                               leave it None (all three observe `a`)
-    axis_name: str | None = None,  # DP-exact: psum increments across axis
+    axis_name: str | tuple[str, ...] | None = None,  # DP-exact: psum
+    #                               increments across this mesh axis (a
+    #                               tuple psums over the flattened
+    #                               multi-axis dp group, e.g. pod+data)
     use_kernel: bool | None = None,  # None -> kernels.ops.pallas_enabled()
 ) -> tuple[Array, Array, Array]:
     """One EMA sketch update; returns masked (x, y, z) in x_s.dtype."""

@@ -49,6 +49,12 @@ class TelemetryRecord:
     spans: dict = dataclasses.field(default_factory=dict)
     wire_bytes: int = 0                        # DP bytes/step/worker
     collectives: int = 0                       # DP collectives/step
+    # {mesh_axis: size} of the run's device mesh ({} single-program)
+    mesh: dict = dataclasses.field(default_factory=dict)
+    # {axis_label: collectives/step} — reduce-scatter / all-reduce /
+    # all-gather tallied into the axis they cross ("pod+data" labels
+    # the flattened dp supergroup); from train.step.collective_plan
+    per_axis_collectives: dict = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
         if self.kind not in RECORD_KINDS:
@@ -69,6 +75,8 @@ def record_to_json(rec: TelemetryRecord) -> dict:
         "spans": dict(rec.spans),
         "wire_bytes": rec.wire_bytes,
         "collectives": rec.collectives,
+        "mesh": dict(rec.mesh),
+        "per_axis_collectives": dict(rec.per_axis_collectives),
     }
 
 
@@ -88,6 +96,8 @@ def record_from_json(obj: dict) -> TelemetryRecord:
         spans=dict(obj.get("spans", {})),
         wire_bytes=obj.get("wire_bytes", 0),
         collectives=obj.get("collectives", 0),
+        mesh=dict(obj.get("mesh", {})),
+        per_axis_collectives=dict(obj.get("per_axis_collectives", {})),
     )
 
 

@@ -22,10 +22,13 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.checkpoint.checkpointer import Checkpointer
+from repro.checkpoint.checkpointer import (
+    RESIDUAL_LAYOUT, Checkpointer, gather_per_worker, scatter_per_worker,
+)
 from repro.core.adaptive import adaptive_step
 from repro.data.pipeline import PipelineConfig, host_batch
 from repro.sketches import node_paths, refresh_tree
+from repro.sketches.shard import refresh_sharded_tree
 from repro.telemetry import TelemetryLog, TelemetryRecord, monitor_report
 from repro.train.state import RunConfig, TrainState, init_train_state
 from repro.train.step import (
@@ -40,6 +43,15 @@ log = logging.getLogger("repro.train")
 # the train step ever recompiles on a rank change (DESIGN.md §1; the
 # compilation-count test in tests/test_sketches.py asserts it).
 refresh_sketch_tree = jax.jit(refresh_tree)
+# same contract for the reduce-scatter layout's ShardedNodeTree
+refresh_sharded_sketch_tree = jax.jit(refresh_sharded_tree)
+
+
+def _refresh_sketch(sketch):
+    """Shape-static projection refresh for either sketch layout."""
+    if hasattr(sketch, "nodes"):
+        return refresh_sketch_tree(sketch)
+    return refresh_sharded_sketch_tree(sketch)
 
 
 @dataclasses.dataclass
@@ -71,44 +83,124 @@ def run_training(cfg, run: RunConfig, loop: LoopConfig, *,
     ckpt = Checkpointer(loop.ckpt_dir, keep=loop.ckpt_keep)
     state = init_train_state(jax.random.PRNGKey(seed), cfg, run)
 
-    start = ckpt.latest_step()
-    if start is not None:
-        state, meta = ckpt.restore(state)
-        log.info("restored checkpoint at step %s", meta["step"])
-    step0 = int(state.step)
-
     persistable = lambda s: s
+    restore_state = ckpt.restore
+    save_meta: dict = {}
     if dp_mesh is not None:
         # donation is incompatible with the replicated-in spec here:
         # keep it simple, the DP step's state is small on debug meshes
         train_step = jax.jit(make_dp_train_step(cfg, run, dp_mesh))
+        ax = run.dp_axis_name
+        members = ax if isinstance(ax, tuple) else (ax,)
+        workers = 1
+        for a in members:
+            workers *= dp_mesh.shape[a]
         log.info("data-parallel shard_map step: %d-way %r axis",
-                 dp_mesh.shape[run.dp_axis_name], run.dp_axis_name)
-        if run.compression is not None \
-                and run.compression.mode == "countsketch":
-            # the countsketch error-feedback accumulators are
-            # INTENTIONALLY per-worker (device-local buffers under the
-            # replicated spec); a host-side checkpoint would silently
-            # keep worker 0's copy and drop the other residuals. Merge
-            # them before persisting: pmean preserves the worker-SUM
-            # the merged sketch consumes, so restore is mass-exact.
-            from jax.experimental.shard_map import shard_map
-            from jax.sharding import PartitionSpec as P
+                 workers, ax)
+        cs_mode = run.compression is not None \
+            and run.compression.mode == "countsketch"
+        rs_mode = run.dp_merge == "reduce_scatter" \
+            and state.sketch is not None
+        if cs_mode or rs_mode:
+            # the countsketch error-feedback accumulators (each
+            # worker's unsent residual) and the rs sketch shards are
+            # INTENTIONALLY per-worker: device-local buffers under the
+            # replicated spec. A host-side checkpoint would silently
+            # keep worker 0's copy and drop the rest, and the PR 2-era
+            # pmean merge destroyed the decomposition at every save —
+            # instead stack every worker's copy on a leading (W, ...)
+            # axis and restore it exactly (DESIGN.md §12).
+            save_meta = {"residual_layout": RESIDUAL_LAYOUT,
+                         "dp_workers": workers}
+            if rs_mode:
+                save_meta["sketch_layout"] = "sharded-v1"
 
-            ax = run.dp_axis_name
-            _merge_err = jax.jit(shard_map(
-                lambda e: jax.tree.map(
-                    lambda x: jax.lax.pmean(x, ax), e),
-                mesh=dp_mesh, in_specs=P(), out_specs=P(),
-                check_rep=False))
+            def _split(s):
+                pw = {}
+                if cs_mode:
+                    pw["err"] = s.opt["err"]
+                if rs_mode:
+                    pw["flat"] = s.sketch.flat
+                return pw
+
+            def _join(s, pw):
+                if "err" in pw:
+                    opt = dict(s.opt)
+                    opt["err"] = pw["err"]
+                    s = dataclasses.replace(s, opt=opt)
+                if "flat" in pw:
+                    s = dataclasses.replace(
+                        s, sketch=dataclasses.replace(
+                            s.sketch, flat=pw["flat"]))
+                return s
 
             def persistable(s):
-                opt = dict(s.opt)
-                opt["err"] = _merge_err(s.opt["err"])
-                return dataclasses.replace(s, opt=opt)
+                return _join(
+                    s, gather_per_worker(_split(s), dp_mesh, ax))
+
+            def restore_state(s):
+                from repro.sketches.shard import (
+                    reshard_stacked_flat, shard_tree, template_tree,
+                )
+
+                meta0 = ckpt.metadata()
+                layout = meta0.get("residual_layout")
+                # merged-sketch (pre-§12 or psum-run) checkpoint under
+                # an rs run: restore the replicated NodeTree and shard
+                # it onto this worker count
+                legacy_sketch = rs_mode and \
+                    meta0.get("sketch_layout") != "sharded-v1"
+                template = s
+                if legacy_sketch:
+                    template = dataclasses.replace(
+                        s, sketch=template_tree(s.sketch))
+                loaded, meta = ckpt.restore(template)
+                pw = {}
+                if legacy_sketch:
+                    tiles = [shard_tree(loaded.sketch, workers, i)
+                             for i in range(workers)]
+                    ssk = dataclasses.replace(
+                        tiles[0],
+                        flat=jnp.stack([t.flat for t in tiles]))
+                    loaded = dataclasses.replace(loaded, sketch=ssk)
+                    pw["flat"] = ssk.flat
+                    log.info("sharded merged-sketch checkpoint over "
+                             "%d workers", workers)
+                if layout == RESIDUAL_LAYOUT:
+                    w_old = int(meta0.get("dp_workers", workers))
+                    pw.update(_split(loaded))
+                    if w_old != workers:
+                        # elastic restart: sketch shards re-tile
+                        # EXACTLY (positional relayout); err residuals
+                        # mass-split total/W_new
+                        if "flat" in pw and not legacy_sketch:
+                            pw["flat"] = reshard_stacked_flat(
+                                pw["flat"].reshape(w_old, -1),
+                                state.sketch.spec, workers)
+                        if "err" in pw:
+                            pw["err"] = jax.tree.map(
+                                lambda x: jnp.broadcast_to(
+                                    x.sum(0) / workers,
+                                    (workers,) + x.shape[1:]),
+                                pw["err"])
+                        log.info("elastic residual reshard %d -> %d "
+                                 "workers", w_old, workers)
+                elif layout is not None:
+                    raise ValueError(
+                        f"unknown residual_layout {layout!r}")
+                if pw:
+                    loaded = _join(
+                        loaded, scatter_per_worker(pw, dp_mesh, ax))
+                return loaded, meta
     else:
         train_step = jax.jit(make_train_step(cfg, run),
                              donate_argnums=(0,) if donate else ())
+
+    start = ckpt.latest_step()
+    if start is not None:
+        state, meta = restore_state(state)
+        log.info("restored checkpoint at step %s", meta["step"])
+    step0 = int(state.step)
     history = []
     ema_t = None
     stragglers = 0
@@ -121,7 +213,10 @@ def run_training(cfg, run: RunConfig, loop: LoopConfig, *,
     # from the collective layout, not runtime introspection.
     tlog = TelemetryLog(loop.telemetry_path) \
         if loop.telemetry_path else None
-    plan = collective_plan(cfg, run) if tlog is not None else None
+    plan = collective_plan(
+        cfg, run,
+        mesh_shape=dict(dp_mesh.shape) if dp_mesh is not None else None
+    ) if tlog is not None else None
     sk_paths = node_paths(state.sketch) \
         if state.sketch is not None else []
 
@@ -142,7 +237,8 @@ def run_training(cfg, run: RunConfig, loop: LoopConfig, *,
                         step, dt, ema_t)
             if stragglers >= loop.straggler_budget:
                 log.error("straggler budget exhausted; checkpoint+abort")
-                ckpt.save(step + 1, persistable(state))
+                ckpt.save(step + 1, persistable(state),
+                          metadata=save_meta)
                 sys.exit(75)
         else:
             stragglers = 0
@@ -155,7 +251,7 @@ def run_training(cfg, run: RunConfig, loop: LoopConfig, *,
         last_skip_total = new_skip_total
         if consec_skips >= loop.max_skips and ckpt.latest_step() is not None:
             log.error("%d consecutive skipped steps; rewinding", consec_skips)
-            state, _ = ckpt.restore(state)
+            state, _ = restore_state(state)
             consec_skips = 0
             continue
 
@@ -170,7 +266,7 @@ def run_training(cfg, run: RunConfig, loop: LoopConfig, *,
             if bool(changed):
                 # paper Alg. 1 "reinitialize matrices": zero sketches +
                 # fold_in fresh projections, shape-static (no recompile)
-                sketch = refresh_sketch_tree(sketch)
+                sketch = _refresh_sketch(sketch)
                 log.info("rank change -> %d at step %d "
                          "(projection refresh, epoch %d)",
                          int(new_rank), step, int(sketch.epoch))
@@ -190,15 +286,18 @@ def run_training(cfg, run: RunConfig, loop: LoopConfig, *,
                 kind="train", step=step, scalars=metrics,
                 nodes=nodes, flags=flags, spans={"step": dt},
                 wire_bytes=plan["wire_bytes"],
-                collectives=plan["collectives"]))
+                collectives=plan["collectives"],
+                mesh=plan["mesh"],
+                per_axis_collectives=plan["per_axis"]))
         if step % loop.log_every == 0:
             log.info("step %d loss %.4f grad_norm %.3f (%.3fs)",
                      step, metrics["loss"], metrics["grad_norm"], dt)
         if (step + 1) % loop.ckpt_every == 0:
-            ckpt.save_async(step + 1, persistable(state))
+            ckpt.save_async(step + 1, persistable(state),
+                            metadata=save_meta)
 
     ckpt.wait()
-    ckpt.save(loop.num_steps, persistable(state))
+    ckpt.save(loop.num_steps, persistable(state), metadata=save_meta)
     if tlog is not None:
         tlog.close()
     return state, history

@@ -38,7 +38,10 @@ class RunConfig:
     # sketch table across it instead of the dense gradient. None (the
     # default) is the single-program case — jit's implicit collectives
     # handle the dense path, and countsketch runs its W=1 special case.
-    dp_axis_name: str | None = None
+    # A TUPLE of axis names forms one flattened dp supergroup (e.g.
+    # ("pod", "data") on the production 3D mesh) — every dp collective
+    # and `lax.axis_index` take the tuple directly.
+    dp_axis_name: str | tuple[str, ...] | None = None
     # Worker count on that axis. Sizes per-worker state at init: the
     # EMA activation-sketch projections are (T_local, k) with T_local =
     # global_batch / dp_workers * seq_len, since each worker's forward
@@ -67,6 +70,19 @@ class RunConfig:
     #               backprop consumer (monitor mode / sketching off)
     #               keep the fused single-collective fast path.
     dp_collective: str = "fused"
+    # How the sketch-increment merge materializes across dp (DESIGN.md
+    # §12):
+    #   "psum"            every worker holds the full merged NodeTree
+    #                     (the pre-mesh layout).
+    #   "reduce_scatter"  ZeRO-style: TrainState.sketch is a
+    #                     ShardedNodeTree — each worker owns 1/W of the
+    #                     packed merged triple; one reduce-scatter
+    #                     replaces the increment psum and one all-gather
+    #                     reconstitutes the full triple for its genuine
+    #                     consumers (sketched backward / monitor
+    #                     metrics). Exact: RS hands each worker its
+    #                     bitwise tile of the psum result.
+    dp_merge: str = "psum"
 
     def __post_init__(self):
         if self.dp_workers < 1:
@@ -76,6 +92,16 @@ class RunConfig:
             raise ValueError(
                 f"dp_collective must be 'fused', 'per_node' or "
                 f"'overlap', got {self.dp_collective!r}")
+        if self.dp_merge not in ("psum", "reduce_scatter"):
+            raise ValueError(
+                f"dp_merge must be 'psum' or 'reduce_scatter', got "
+                f"{self.dp_merge!r}")
+        if self.dp_merge == "reduce_scatter" and \
+                self.dp_collective == "per_node":
+            raise ValueError(
+                "dp_merge='reduce_scatter' needs the flat-segment "
+                "layouts (fused/overlap); per_node merges inside the "
+                "forward and cannot scatter")
         if self.dp_workers > 1 and self.global_batch % self.dp_workers:
             raise ValueError(
                 f"global_batch={self.global_batch} not divisible by "
@@ -123,6 +149,12 @@ def init_train_state(key, cfg, run: RunConfig) -> TrainState:
         opt["err"] = init_error_feedback(params, run.compression)
     n_tokens = run.global_batch // run.dp_workers * run.seq_len
     sketch = init_lm_sketch_state(ks, cfg, run.sketch, n_tokens)
+    if sketch is not None and run.dp_merge == "reduce_scatter":
+        # ZeRO-style layout from step 0: every worker's shard of the
+        # all-zero init triple is zero, so index 0 IS each worker's
+        # correct initial state (psi/proj stay replicated)
+        from repro.sketches.shard import shard_tree
+        sketch = shard_tree(sketch, run.dp_workers, 0)
     n_groups = max(1, len(sketch_groups(cfg)))
     monitor = init_monitor_state(run.monitor_window,
                                  n_groups * cfg.num_layers)

@@ -142,6 +142,21 @@ def make_train_step(cfg: ArchConfig, run: RunConfig):
         and consumed
     fused = ax is not None and not overlap and \
         run.dp_collective in ("fused", "overlap")
+    # ZeRO-style sketch merge (DESIGN.md §12): TrainState.sketch is a
+    # ShardedNodeTree; the increment psum becomes a reduce-scatter and
+    # one all-gather reconstitutes the merged triple for its genuine
+    # consumers (phase-2 backward / monitor metrics).
+    rs = run.dp_merge == "reduce_scatter" and bool(groups)
+    if rs and ax is None:
+        raise ValueError(
+            "dp_merge='reduce_scatter' needs run.dp_axis_name: the "
+            "single-program path has no worker shards to scatter over")
+    if rs and consumed and not overlap:
+        raise ValueError(
+            "dp_merge='reduce_scatter' with a sketched-backprop "
+            "(consumed) tree requires dp_collective='overlap': the "
+            "fused layout consumes the previous step's merged triple, "
+            "which no worker holds under the scattered layout")
     if fused and run.sketch.enabled and not run.sketch.dp_defer:
         # fused mode moves the sketch merge out of the forward: the
         # forward must emit LOCAL increments (dp_defer), never per-node
@@ -176,7 +191,68 @@ def make_train_step(cfg: ArchConfig, run: RunConfig):
             return loss, (out["sketch_state"], ce, out["aux"])
 
         new_err = None
-        if overlap:
+        merged_tree = None
+        if rs:
+            # ---- REDUCE-SCATTER MERGE (DESIGN.md §12) ---------------
+            # Exactly 3 dp collectives regardless of fused/overlap:
+            #   RS  the packed local increments -> this worker's tile
+            #       of the merged buffer (bitwise the psum's tile);
+            #   AG  the new shards -> the full CURRENT-step merged
+            #       triple for its consumers (phase-2 backward under
+            #       overlap, monitor metrics always);
+            #   AR  the late gradient wire + scalar metrics.
+            # The EMA apply runs on the 1/W flat shard — per-worker
+            # sketch memory is the ZeRO win the memory bench gates.
+            from repro.parallel.collectives import (
+                all_gather_flat, reduce_scatter_flat_segments,
+            )
+            from repro.sketches.shard import (
+                apply_shard_increments, template_tree, unshard_tree,
+            )
+            from repro.sketches.wire import tree_increment_leaves
+
+            ssk = state.sketch
+            widx = jax.lax.axis_index(ax)
+            if overlap:
+                # phase 1: increment-emission sweep (template has zero
+                # triples + the real psi/proj — all the emission reads)
+                inc_out = forward(
+                    state.params, tokens, cfg=cfg, mode="train",
+                    sketch_state=template_tree(ssk), settings=defer_st,
+                    patch_embeds=batch.get("patch_embeds"))
+                inc_tree = inc_out["sketch_state"]
+            else:
+                (loss, (inc_tree, ce, aux)), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(state.params,
+                                           template_tree(ssk))
+            inc_shard = reduce_scatter_flat_segments(
+                tree_increment_leaves(inc_tree), ax, shards=ssk.shards,
+                spec=ssk.spec, name="rs_sketch", barrier=overlap)
+            new_sketch = apply_shard_increments(
+                ssk, inc_tree, inc_shard, run.sketch.beta, widx)
+            merged_tree = unshard_tree(
+                new_sketch,
+                all_gather_flat(new_sketch.flat, ax, name="rs_gather",
+                                barrier=overlap))
+            if overlap:
+                # phase 2: backward consumes THIS step's merged triple
+                # (premerged, current-step DP-exact — same as overlap)
+                def rs_loss_fn(params, sketch):
+                    out = forward(
+                        params, tokens, cfg=cfg, mode="train",
+                        sketch_state=sketch, settings=premerged_st,
+                        patch_embeds=batch.get("patch_embeds"))
+                    ce = cross_entropy(out["logits"], labels,
+                                       run.z_weight)
+                    loss = ce + run.aux_weight * out["aux"]
+                    return loss, (ce, out["aux"])
+
+                (loss, (ce, aux)), grads = jax.value_and_grad(
+                    rs_loss_fn, has_aux=True)(state.params, merged_tree)
+            loss, ce, aux, grads, new_err, _ = _psum_wire_segments(
+                run, ax, state.opt.get("err"), grads, loss, ce, aux,
+                name="rs_grad")
+        elif overlap:
             # ---- TWO-PHASE OVERLAP SCHEDULE (DESIGN.md §10) ---------
             # Phase 1: a forward sweep emits every node's LOCAL EMA
             # increments, and the sketch flat psum is issued IMMEDIATELY
@@ -300,16 +376,24 @@ def make_train_step(cfg: ArchConfig, run: RunConfig):
             new_opt["err"] = new_err
 
         good = jnp.isfinite(loss) & jnp.isfinite(om["grad_norm"])
+        pick = lambda n, o: jax.tree.map(
+            lambda a, b: jnp.where(good, a, b), n, o)
         if run.nan_guard:
-            pick = lambda n, o: jax.tree.map(
-                lambda a, b: jnp.where(good, a, b), n, o)
             new_params = pick(new_params, state.params)
             new_opt = pick(new_opt, state.opt)
             if new_sketch is not None:
                 new_sketch = pick(new_sketch, state.sketch)
 
         monitor = state.monitor
-        if new_sketch is not None:
+        if merged_tree is not None:
+            # rs: metrics come from the gathered CURRENT-step merge —
+            # bitwise the replicated layouts' recorded tree on kept
+            # steps. On a NaN-skipped step the merge reflects the
+            # discarded update, so the ring skips the record instead of
+            # re-recording the kept tree (keeps NaN metrics out).
+            rec = monitor_record(monitor, tree_metrics(merged_tree))
+            monitor = pick(rec, monitor) if run.nan_guard else rec
+        elif new_sketch is not None:
             monitor = monitor_record(monitor, tree_metrics(new_sketch))
 
         new_state = TrainState(
@@ -328,23 +412,47 @@ def make_train_step(cfg: ArchConfig, run: RunConfig):
 
 
 def collective_plan(cfg: ArchConfig, run: RunConfig,
-                    num_params: int | None = None) -> dict:
+                    num_params: int | None = None,
+                    mesh_shape: dict | None = None) -> dict:
     """Structural per-step DP accounting for telemetry (DESIGN.md §11):
-    how many all-reduces one train step issues across the DP axis under
+    how many collectives one train step issues across the DP axis under
     this run's collective layout, and how many bytes one worker puts on
     the wire. Pure bookkeeping from the configs — mirrors the layout
     selection in `make_train_step` (the HLO collective counts themselves
     are asserted by tests/test_distributed.py); never traced.
+
+    Every plan carries the mesh-aware fields (DESIGN.md §12):
+    ``mesh`` (axis -> size, from `mesh_shape`), ``by_kind`` (all_reduce
+    / reduce_scatter / all_gather tallied separately — the rs layouts
+    split the old single all-reduce count), and ``per_axis`` (collective
+    count per mesh axis; the dp superaxis is labeled "a+b". Non-dp axes
+    carry 0 — TP traffic is GSPMD-implicit, not step-issued).
     """
     run = finalize_run(cfg, run)
     ax = run.dp_axis_name
+    label = "+".join(ax) if isinstance(ax, tuple) else ax
+    mesh = dict(mesh_shape) if mesh_shape else {}
+
+    def _plan(layout, wire_bytes, *, ar=0, rs=0, ag=0):
+        per_axis = {} if ax is None else {label: ar + rs + ag}
+        dp_members = set(ax if isinstance(ax, tuple) else (ax,)) \
+            if ax is not None else set()
+        for a in mesh:
+            if a not in dp_members and a != label:
+                per_axis[a] = 0
+        return {"layout": layout, "collectives": ar + rs + ag,
+                "wire_bytes": wire_bytes, "mesh": mesh,
+                "by_kind": {"all_reduce": ar, "reduce_scatter": rs,
+                            "all_gather": ag},
+                "per_axis": per_axis}
+
     if ax is None:
-        return {"layout": "single_program", "collectives": 0,
-                "wire_bytes": 0}
+        return _plan("single_program", 0)
     groups = sketch_groups(cfg) if run.sketch.enabled else {}
     consumed = bool(groups) and "res" not in groups
     overlap = run.dp_collective == "overlap" and consumed
     fused = not overlap and run.dp_collective in ("fused", "overlap")
+    rs = run.dp_merge == "reduce_scatter" and bool(groups)
     cs = run.compression is not None and \
         run.compression.mode == "countsketch"
     cs_p2 = 1 if cs and run.compression.cs_p2 > 0 else 0
@@ -364,22 +472,30 @@ def collective_plan(cfg: ArchConfig, run: RunConfig,
     grad_bytes = compressed_bytes(num_params, run.compression) if cs \
         else num_params * 4
 
+    if rs:
+        # RS(increments) + AG(new shards) + late wire AR (+ p2 round):
+        # the sketch payload crosses twice (scatter down, gather back),
+        # zero-padded so the W-way scatter tiles evenly
+        w = run.dp_workers
+        padded = -(-(sketch_bytes // 4) // w) * w * 4
+        return _plan("rs_overlap" if overlap else "rs_fused",
+                     2 * padded + grad_bytes + 16,
+                     ar=1 + cs_p2, rs=1, ag=1)
     if fused:
         # ONE flat psum: increments + grad wire + 3 scalars + counter
-        return {"layout": "fused", "collectives": 1 + cs_p2,
-                "wire_bytes": sketch_bytes + grad_bytes + 16}
+        return _plan("fused", sketch_bytes + grad_bytes + 16,
+                     ar=1 + cs_p2)
     if overlap:
         # early sketch psum + late wire psum (+ optional p2 round)
-        return {"layout": "overlap", "collectives": 2 + cs_p2,
-                "wire_bytes": sketch_bytes + grad_bytes + 16}
+        return _plan("overlap", sketch_bytes + grad_bytes + 16,
+                     ar=2 + cs_p2)
     # per_node reference layout: 3 psums (x/y/z) per node per layer
     # inside the forward, 3 scalar pmeans, and the grad wire — one
     # table psum under countsketch, else a dense pmean per param leaf
     n_node_layers = len(groups) * cfg.num_layers
     grad_colls = (1 + cs_p2) if cs else num_leaves
-    return {"layout": "per_node",
-            "collectives": 3 * n_node_layers + 3 + grad_colls,
-            "wire_bytes": sketch_bytes + grad_bytes + 12}
+    return _plan("per_node", sketch_bytes + grad_bytes + 12,
+                 ar=3 * n_node_layers + 3 + grad_colls)
 
 
 def make_eval_step(cfg: ArchConfig, run: RunConfig):
@@ -420,14 +536,22 @@ def make_dp_train_step(cfg: ArchConfig, run: RunConfig, mesh):
         all-reduces per step. Monitor-mode trees (no consumer) keep
         the fused single-collective fast path.
 
-    Params/optimizer moments/sketches stay identical on every replica
-    (the update is computed from merged quantities only); the
-    countsketch error-feedback accumulators — which under the int8 wire
-    also carry each worker's quantization residual — are INTENTIONALLY
-    per-worker (SketchedSGD keeps each worker's unsent residual local —
-    they live as device-local buffers under the replicated out-spec,
-    and train/loop.py pmean-merges them mass-exactly before any
-    checkpoint leaves the devices)."""
+    `run.dp_axis_name` may be a TUPLE of mesh axes — the dp supergroup
+    of a TP×DP×pod mesh (e.g. ("pod", "data") on the production 3D
+    mesh): the batch splits over the flattened group and every dp
+    collective takes the tuple directly. Under
+    `run.dp_merge="reduce_scatter"` (DESIGN.md §12) the step further
+    keeps only this worker's shard of the merged sketch state — see
+    the rs branch in `make_train_step`.
+
+    Params/optimizer moments stay identical on every replica (the
+    update is computed from merged quantities only); the countsketch
+    error-feedback accumulators — which under the int8 wire also carry
+    each worker's quantization residual — and the rs sketch shards are
+    INTENTIONALLY per-worker (device-local buffers under the
+    replicated out-spec; train/loop.py checkpoints them per worker via
+    `checkpoint.checkpointer.gather_per_worker` so the decomposition
+    survives restarts)."""
     import dataclasses
 
     from jax.experimental.shard_map import shard_map
@@ -442,11 +566,15 @@ def make_dp_train_step(cfg: ArchConfig, run: RunConfig, mesh):
             run, sketch=dataclasses.replace(run.sketch, dp_axis=ax))
     # (fused mode needs no settings surgery here: make_train_step flips
     # the forward to deferred-increment emission itself)
-    if ax is None or ax not in mesh.axis_names:
+    members = ax if isinstance(ax, tuple) else \
+        (ax,) if ax is not None else ()
+    if not members or any(a not in mesh.axis_names for a in members):
         raise ValueError(
-            f"make_dp_train_step needs run.dp_axis_name naming a mesh "
-            f"axis; got {ax!r} for mesh axes {mesh.axis_names}")
-    workers = mesh.shape[ax]
+            f"make_dp_train_step needs run.dp_axis_name naming mesh "
+            f"axes; got {ax!r} for mesh axes {mesh.axis_names}")
+    workers = 1
+    for a in members:
+        workers *= mesh.shape[a]
     if run.global_batch % workers:
         raise ValueError(
             f"global_batch={run.global_batch} not divisible by the "

@@ -979,18 +979,21 @@ def test_dp_differential_monitor_lm_w4():
 
 
 @pytest.mark.slow
-def test_int8_error_feedback_survives_checkpoint_merge_w4():
+def test_int8_error_feedback_survives_checkpoint_per_worker_w4():
     """Checkpoint round-trip of the per-worker error-feedback residuals
-    under wire_dtype=int8 (they now carry quantization error too): the
-    loop's pmean-merge must preserve the worker SUM mass-exactly
-    (W * mean == sum, bitwise for power-of-two W), and a Checkpointer
-    save/restore of the merged state must be bitwise."""
+    under wire_dtype=int8 (they carry quantization error too): the
+    per_worker_v1 layout stacks every worker's buffer on a leading
+    (W, ...) axis — NO pmean merge destroys the decomposition at save
+    time (the PR 2 elastic-restart gap, closed by DESIGN.md §12) — and
+    a Checkpointer save/restore + scatter hands each worker its exact
+    row back, bitwise."""
     out = _run("""
         import dataclasses, tempfile
         import jax, jax.numpy as jnp, numpy as np
-        from jax.experimental.shard_map import shard_map
         from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-        from repro.checkpoint.checkpointer import Checkpointer
+        from repro.checkpoint.checkpointer import (
+            RESIDUAL_LAYOUT, Checkpointer, gather_per_worker,
+            scatter_per_worker)
         from repro.configs import get_arch, reduced
         from repro.data.synthetic import lm_batch
         from repro.models.transformer import SketchSettings
@@ -1019,34 +1022,390 @@ def test_int8_error_feedback_survives_checkpoint_merge_w4():
                                 cfg.vocab_size)
             state, _ = step(state, {"tokens": tok, "labels": lab})
 
-        # per-worker residuals -> the loop's pmean merge
         err = state.opt["err"]
-        gather = jax.jit(shard_map(
-            lambda e: jax.tree.map(lambda x: x[None], e),
-            mesh=mesh, in_specs=P(), out_specs=P("data"),
-            check_rep=False))
-        per_worker = gather(err)          # leaves (W, dim)
-        merge = jax.jit(shard_map(
-            lambda e: jax.tree.map(lambda x: jax.lax.pmean(x, "data"),
-                                   e),
-            mesh=mesh, in_specs=P(), out_specs=P(), check_rep=False))
-        merged = merge(err)
-        for pw, m in zip(jax.tree.leaves(per_worker),
-                         jax.tree.leaves(merged)):
-            assert np.array_equal(np.asarray(pw).sum(0),
-                                  np.asarray(m) * W), \\
-                "pmean merge lost error-feedback mass"
+        stacked = gather_per_worker(err, mesh, "data")
+        rows = [np.asarray(l) for l in jax.tree.leaves(stacked)]
+        assert all(r.shape[0] == W for r in rows)
+        # the residuals genuinely diverged per worker — the stacking is
+        # load-bearing, not a W-fold copy
+        assert any(len({r[w].tobytes() for w in range(W)}) > 1
+                   for r in rows), "residuals identical across workers"
 
-        # checkpoint round-trip of the merged state is bitwise
-        opt = dict(state.opt); opt["err"] = merged
-        persist = dataclasses.replace(state, opt=opt)
+        # save stacked, restore, scatter: every worker gets its exact
+        # buffer back (regather and compare bitwise)
         with tempfile.TemporaryDirectory() as d:
             ck = Checkpointer(d, keep=1)
-            ck.save(3, persist)
-            restored, meta = ck.restore(persist)
-        for a, b in zip(jax.tree.leaves(persist),
-                        jax.tree.leaves(restored)):
-            assert np.array_equal(np.asarray(a), np.asarray(b))
+            ck.save(3, stacked,
+                    metadata={"residual_layout": RESIDUAL_LAYOUT,
+                              "dp_workers": W})
+            meta = ck.metadata()
+            assert meta["residual_layout"] == RESIDUAL_LAYOUT
+            assert meta["dp_workers"] == W
+            restored, _ = ck.restore(
+                jax.tree.map(np.asarray, stacked))
+        back = scatter_per_worker(
+            jax.tree.map(jnp.asarray, restored), mesh, "data")
+        again = gather_per_worker(back, mesh, "data")
+        for a, b in zip(jax.tree.leaves(stacked),
+                        jax.tree.leaves(again)):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), \\
+                "per-worker residual round-trip not bitwise"
         print("OK")
     """, devices=4)
     assert "OK" in out
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 7 differential tier: mesh-sharded sketch state — W=4 dp workers
+# on a (pod=2, data=2, model=2) mesh with the ZeRO-style reduce-scatter
+# merge vs the replicated per-node reference on a 1D ("data",) mesh
+# ---------------------------------------------------------------------------
+
+
+RS_LM_CODE = """
+    import re
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import Mesh
+    from repro.configs import get_arch, reduced
+    from repro.data.synthetic import lm_batch
+    from repro.models.transformer import SketchSettings
+    from repro.sketches import unshard_tree
+    from repro.train.state import RunConfig, init_train_state
+    from repro.train.step import collective_plan, make_dp_train_step
+
+    STEPS = __STEPS__
+    cfg = reduced(get_arch("tinyllama-1.1b"))      # sketch_mode=backprop
+    mesh8 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    mesh4 = Mesh(np.array(jax.devices()[:4]), ("data",))
+
+    def mk(dp_axis, collective, merge):
+        return RunConfig(seq_len=16, global_batch=8,
+                         sketch=SketchSettings(enabled=True, k_max=9),
+                         dp_axis_name=dp_axis, dp_workers=4,
+                         dp_collective=collective, dp_merge=merge,
+                         total_steps=STEPS + 1, warmup_steps=1)
+
+    run_ref = mk("data", "per_node", "psum")
+    run_rs = mk(("pod", "data"), "overlap", "reduce_scatter")
+    st_ref = init_train_state(jax.random.PRNGKey(0), cfg, run_ref)
+    st_rs = init_train_state(jax.random.PRNGKey(0), cfg, run_rs)
+    step_ref = jax.jit(make_dp_train_step(cfg, run_ref, mesh4))
+    step_rs = jax.jit(make_dp_train_step(cfg, run_rs, mesh8))
+    for s in range(STEPS):
+        tok, lab = lm_batch(jax.random.fold_in(jax.random.PRNGKey(2), s),
+                            8, 16, cfg.vocab_size)
+        b = {"tokens": tok, "labels": lab}
+        st_ref, m_ref = step_ref(st_ref, b)
+        st_rs, m_rs = step_rs(st_rs, b)
+        for k in ("loss", "grad_norm"):
+            assert np.array_equal(np.asarray(m_ref[k]),
+                                  np.asarray(m_rs[k])), (s, k)
+
+    # replicated halves of the state: bitwise across the two meshes
+    for lref, lrs in zip(jax.tree.leaves((st_ref.params, st_ref.opt,
+                                          st_ref.monitor)),
+                         jax.tree.leaves((st_rs.params, st_rs.opt,
+                                          st_rs.monitor))):
+        assert np.array_equal(np.asarray(lref), np.asarray(lrs)), \\
+            "rs step diverged from the replicated reference"
+
+    # worker shards reassemble to the reference's replicated NodeTree;
+    # dp worker of device (p, d, m) is p*2 + d, the model-axis pair of
+    # every dp worker holds an IDENTICAL shard
+    by_dev = {s.device.id: np.asarray(s.data)
+              for s in st_rs.sketch.flat.addressable_shards}
+    ids = np.vectorize(lambda dv: dv.id)(mesh8.devices)  # (pod,data,model)
+    for p in range(2):
+        for d in range(2):
+            assert np.array_equal(by_dev[ids[p, d, 0]],
+                                  by_dev[ids[p, d, 1]]), (p, d)
+    full = np.concatenate([by_dev[ids[p, d, 0]]
+                           for p in range(2) for d in range(2)])
+    rebuilt = unshard_tree(st_rs.sketch, jnp.asarray(full))
+    for name in st_ref.sketch.nodes:
+        for leaf in ("x", "y", "z", "psi"):
+            assert np.array_equal(
+                np.asarray(getattr(st_ref.sketch.nodes[name], leaf)),
+                np.asarray(getattr(rebuilt.nodes[name], leaf))), \\
+                (name, leaf)
+    print("rs bitwise OK")
+"""
+
+
+RS_HLO_CHECK = """
+    # per-axis HLO collective counts: exactly ONE reduce-scatter + ONE
+    # all-gather + ONE all-reduce, every one on the flattened
+    # (pod, data) supergroup — replica groups {0,2,4,6},{1,3,5,7} are
+    # the dp workers at fixed model coordinate — and ZERO model-axis
+    # collectives (TP traffic is GSPMD-implicit, none is step-issued
+    # on this replicated-weights debug config)
+    txt = jax.jit(make_dp_train_step(cfg, run_rs, mesh8)).lower(
+        init_train_state(jax.random.PRNGKey(0), cfg, run_rs),
+        b).compile().as_text()
+    found = re.findall(
+        r"= \\S+ (all-reduce|all-gather|reduce-scatter|all-to-all|"
+        r"collective-permute)\\(.*?replica_groups=(\\{(?:\\{[0-9,]*\\},?)*\\})",
+        txt)
+    kinds = sorted(k for k, _ in found)
+    assert kinds == ["all-gather", "all-reduce", "reduce-scatter"], kinds
+    dp_groups = "{{0,2,4,6},{1,3,5,7}}"
+    for k, g in found:
+        assert g == dp_groups, (k, g)
+
+    # the structural plan agrees with the compiled HLO
+    plan = collective_plan(cfg, run_rs, mesh_shape=dict(mesh8.shape))
+    assert plan["layout"] == "rs_overlap"
+    assert plan["by_kind"] == {"all_reduce": 1, "reduce_scatter": 1,
+                               "all_gather": 1}
+    assert plan["per_axis"] == {"pod+data": 3, "model": 0}
+    print("rs HLO per-axis OK")
+"""
+
+
+RS_TAIL = """
+    print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_rs_merge_step_bitwise_vs_replicated_w8():
+    """ISSUE 7 acceptance, e2e half: the sketched-backprop LM under
+    dp_merge="reduce_scatter" on the (2,2,2) pod x data x model mesh —
+    each dp worker owning 1/4 of the merged triple buffer — is BITWISE
+    equal to the replicated per-node reference on a 1D mesh over 3 full
+    steps (loss, grad_norm, params, optimizer, monitor ring), the
+    worker shards reassemble to the reference NodeTree exactly, and the
+    compiled HLO carries exactly RS + AG + AR on the dp supergroup with
+    zero model-axis collectives."""
+    out = _run(RS_LM_CODE.replace("__STEPS__", "3")
+               + RS_HLO_CHECK + RS_TAIL, devices=8)
+    assert "OK" in out
+
+
+@pytest.mark.dp_differential
+def test_dp_differential_rs_merge_w8():
+    """Per-PR reduced differential (CI job `differential-w4`): 2 steps
+    of the reduce-scatter merge on the (2,2,2) mesh vs the replicated
+    1D reference — state bitwise, shards reassemble exactly."""
+    out = _run(RS_LM_CODE.replace("__STEPS__", "2") + RS_TAIL,
+               devices=8)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_tuple_axis_ema_psum_matches_1d_w8():
+    """Subsystem guarantee under the rs tentpole: `ema_triple_update`
+    with a TUPLE axis_name — psum over the flattened ("pod","data")
+    supergroup of the (2,2,2) mesh — is BITWISE the 1D ("data",) psum
+    at the same worker count (CPU psum reduces in dp-rank order on
+    both)."""
+    out = _run("""
+        import functools
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.sketches import ema_triple_update
+
+        mesh8 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        mesh4 = Mesh(np.array(jax.devices()[:4]), ("data",))
+        W, Tl, d, k = 4, 16, 24, 9
+        ks = jax.random.split(jax.random.PRNGKey(0), 6)
+        a = jax.random.normal(ks[0], (W * Tl, d))
+        ups, omg, phi = (jax.random.normal(ks[i], (Tl, k))
+                         for i in (1, 2, 3))
+        psi = jax.random.normal(ks[4], (k,))
+        x0 = 0.1 * jax.random.normal(ks[5], (d, k))
+        upd = functools.partial(
+            ema_triple_update, upsilon=ups, omega=omg, phi=phi, psi=psi,
+            beta=0.9, k_active=jnp.asarray(7))
+
+        ref = jax.jit(shard_map(
+            lambda sh: upd(x0, x0, x0, a=sh, axis_name="data"),
+            mesh=mesh4, in_specs=P("data"), out_specs=P(),
+            check_rep=False))(a)
+        got = jax.jit(shard_map(
+            lambda sh: upd(x0, x0, x0, a=sh,
+                           axis_name=("pod", "data")),
+            mesh=mesh8, in_specs=P(("pod", "data")), out_specs=P(),
+            check_rep=False))(a)
+        for g, r in zip(got, ref):
+            assert np.array_equal(np.asarray(g), np.asarray(r)), \\
+                "tuple-axis psum is not bitwise the 1D psum"
+        print("OK")
+    """, devices=8)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_rs_loop_checkpoint_resume_preserves_worker_shards_w8():
+    """ISSUE 7 acceptance, persistence half: run_training under the rs
+    merge + countsketch wire saves per-worker sketch shards AND
+    error-feedback residuals natively (per_worker_v1 + sharded-v1
+    metadata tags); a mid-run kill + fresh run_training call resumes
+    from the step-2 checkpoint and lands BITWISE on the uninterrupted
+    4-step trajectory — including every worker's distinct buffers."""
+    out = _run("""
+        import os, tempfile
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.checkpoint.checkpointer import (
+            RESIDUAL_LAYOUT, Checkpointer, gather_per_worker)
+        from repro.configs import get_arch, reduced
+        from repro.models.transformer import SketchSettings
+        from repro.optim.compression import CompressionConfig
+        from repro.train.loop import LoopConfig, run_training
+        from repro.train.state import RunConfig
+
+        cfg = reduced(get_arch("tinyllama-1.1b"))
+        mesh8 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+
+        def mk_run():
+            return RunConfig(
+                seq_len=16, global_batch=8,
+                sketch=SketchSettings(enabled=True, k_max=9),
+                dp_axis_name=("pod", "data"), dp_workers=4,
+                dp_collective="overlap", dp_merge="reduce_scatter",
+                compression=CompressionConfig(
+                    mode="countsketch", cs_rows=5, cs_cols=512,
+                    cs_k=256, cs_momentum=0.0),
+                total_steps=4, warmup_steps=1)
+
+        def per_worker(state):
+            pw = {"flat": state.sketch.flat, "err": state.opt["err"]}
+            return jax.tree.map(
+                np.asarray,
+                gather_per_worker(pw, mesh8, ("pod", "data")))
+
+        def mk_loop(d, n):
+            return LoopConfig(num_steps=n, ckpt_every=2, log_every=10,
+                              ckpt_dir=d)
+
+        with tempfile.TemporaryDirectory() as d:
+            straight, resumed = (os.path.join(d, n) for n in "ab")
+            sa, ha = run_training(cfg, mk_run(), mk_loop(straight, 4),
+                                  dp_mesh=mesh8)
+            # interrupted twin: stop after 2 steps...
+            run_training(cfg, mk_run(), mk_loop(resumed, 2),
+                         dp_mesh=mesh8)
+            meta = Checkpointer(resumed).metadata()
+            assert meta["residual_layout"] == RESIDUAL_LAYOUT
+            assert meta["dp_workers"] == 4
+            assert meta["sketch_layout"] == "sharded-v1"
+            # ...then a FRESH call restores at step 2 and finishes
+            sb, hb = run_training(cfg, mk_run(), mk_loop(resumed, 4),
+                                  dp_mesh=mesh8)
+
+        assert [h["loss"] for h in ha[2:]] == [h["loss"] for h in hb]
+        for a, b in zip(jax.tree.leaves((sa.params, sa.monitor)),
+                        jax.tree.leaves((sb.params, sb.monitor))):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), \\
+                "resume diverged from the uninterrupted run"
+        pa, pb = per_worker(sa), per_worker(sb)
+        for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
+            assert np.array_equal(a, b), \\
+                "per-worker buffers not preserved across restart"
+        # the stacked err rows genuinely differ across workers — the
+        # per-worker layout is load-bearing
+        assert any(len({np.asarray(l)[w].tobytes() for w in range(4)}) > 1
+                   for l in jax.tree.leaves(pb["err"])), \\
+            "residuals identical across workers"
+        print("OK")
+    """, devices=8)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_sketch_tp_specs_and_dryrun_report_w8():
+    """Sketch-state sharding resolution on the (2,2,2) debug mesh: a
+    node's (..., d, k) triple shards d over its consumer's TP axis plus
+    the ZeRO dp axes, psi stays replicated, the shared (T, k)
+    projections shard rows over dp; and the dry-run report certifies
+    gemma3-27b / mixtral-8x22b end up with every >=1 MiB triple leaf
+    sharded (an OOM-sized replicated sketch fails the dry run)."""
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.configs import SHAPES, get_arch
+        from repro.launch.dryrun import (
+            make_run_config, sketch_sharding_report)
+        from repro.launch.mesh import make_debug_mesh, rules_for_mesh
+        from repro.parallel.sharding import (
+            param_shardings, spec_for_sketch, use_rules)
+        from repro.train.state import abstract_train_state
+
+        mesh = make_debug_mesh(2, 2, multi_pod=True)
+        rules = rules_for_mesh(mesh)
+        f32 = jnp.float32
+        trip = jax.ShapeDtypeStruct((4, 128, 9), f32)
+        assert spec_for_sketch(rules, "ffn_h", "x", trip) == \\
+            P(None, ("model", "pod", "data"), None)
+        assert spec_for_sketch(rules, "ffn_in", "y", trip) == \\
+            P(None, ("pod", "data"), None)
+        assert spec_for_sketch(rules, "res", "z", trip) == \\
+            P(None, ("pod", "data"), None)
+        # non-divisible width: members drop back-to-front (TP alignment
+        # survives longest), fully indivisible -> replicated
+        odd = jax.ShapeDtypeStruct((4, 6, 9), f32)
+        assert spec_for_sketch(rules, "ffn_h", "x", odd) == \\
+            P(None, "model", None)
+        prime = jax.ShapeDtypeStruct((4, 7, 9), f32)
+        assert spec_for_sketch(rules, "ffn_h", "x", prime) == \\
+            P(None, None, None)
+        psi = jax.ShapeDtypeStruct((4, 9), f32)
+        assert spec_for_sketch(rules, "ffn_h", "psi", psi) == P()
+        proj = jax.ShapeDtypeStruct((16, 9), f32)
+        assert spec_for_sketch(rules, None, "upsilon", proj) == \\
+            P(("pod", "data"), None)
+
+        # dry-run certification for the two production targets
+        for arch in ("gemma3-27b", "mixtral-8x22b"):
+            cfg = get_arch(arch)
+            run = make_run_config(cfg, SHAPES["train_4k"])
+            state = abstract_train_state(cfg, run)
+            with use_rules(rules):
+                sh = param_shardings(rules, state)
+            rep = sketch_sharding_report(state, sh, rules)
+            assert rep, arch
+            for key, r in rep.items():
+                # mlp/heads-axis nodes take TP x dp (8 ways on this
+                # mesh); embed-axis nodes take the ZeRO dp axes (4)
+                want = 8 if key.split("/")[0] in ("ffn_h", "attn_o") \
+                    else 4
+                assert r["shards"] == want, (arch, key, r)
+            print(arch, "sharded:", len(rep), "triple leaves")
+        print("OK")
+    """, devices=8)
+    assert "OK" in out
+
+
+def test_per_worker_sketch_memory_matches_closed_form():
+    """tree_memory_bytes_per_worker (closed-form, used by the memory
+    bench) equals the live accounting of an actual shard: the packed
+    triple buffer is exactly ceil(total/W) f32 elements per worker,
+    psi + projections replicate."""
+    import jax
+
+    from repro.configs import get_arch, reduced
+    from repro.models.transformer import SketchSettings
+    from repro.sketches import (
+        shard_tree, sharded_tree_memory_bytes, tree_memory_bytes,
+        tree_memory_bytes_per_worker, tree_wire_spec,
+    )
+    from repro.train.state import RunConfig, init_train_state
+
+    cfg = reduced(get_arch("tinyllama-1.1b"))
+    run = RunConfig(seq_len=16, global_batch=4,
+                    sketch=SketchSettings(enabled=True, k_max=9))
+    tree = init_train_state(jax.random.PRNGKey(0), cfg, run).sketch
+    total = tree_wire_spec(tree).total
+    full = tree_memory_bytes(tree)
+    rep = tree_memory_bytes_per_worker(tree, dp_shards=1) - total * 4
+    for w in (1, 2, 4):
+        ssk = shard_tree(tree, w, 0)
+        live = sharded_tree_memory_bytes(ssk)
+        closed = tree_memory_bytes_per_worker(tree, dp_shards=w)
+        assert live == closed, (w, live, closed)
+        # the triple buffer is exactly a 1/W tile (ceil for padding)
+        assert ssk.flat.size == -(-total // w), w
+        # and the per-worker total never exceeds the replicated
+        # footprint's triple share plus the replicated psi/proj
+        assert live <= -(-full // w) + rep, (w, live, full, rep)

@@ -28,7 +28,9 @@ def _sample_record():
                          "y_norm": 0.0078125}},
         flags={"vanishing": ["res/0"], "slot_exploding": ["slot/3"]},
         spans={"step": 0.0123456789},
-        wire_bytes=1024, collectives=2)
+        wire_bytes=1024, collectives=2,
+        mesh={"pod": 2, "data": 2, "model": 2},
+        per_axis_collectives={"pod+data": 3, "model": 0})
 
 
 class TestSchema:
@@ -160,16 +162,22 @@ class TestCollectivePlan:
 
         plan = collective_plan(cfg, self._run())
         assert plan == {"layout": "single_program", "collectives": 0,
-                        "wire_bytes": 0}
+                        "wire_bytes": 0, "mesh": {},
+                        "by_kind": {"all_reduce": 0, "reduce_scatter": 0,
+                                    "all_gather": 0},
+                        "per_axis": {}}
 
         fused = collective_plan(cfg, self._run(
             dp_axis_name="data", dp_collective="fused"))
         assert fused["layout"] == "fused" and fused["collectives"] == 1
+        assert fused["by_kind"] == {"all_reduce": 1, "reduce_scatter": 0,
+                                    "all_gather": 0}
 
         over = collective_plan(cfg, self._run(
             dp_axis_name="data", dp_collective="overlap"))
         assert over["layout"] == "overlap" and over["collectives"] == 2
         assert over["wire_bytes"] == fused["wire_bytes"]
+        assert over["per_axis"] == {"data": 2}
 
         per = collective_plan(cfg, self._run(
             dp_axis_name="data", dp_collective="per_node"))
@@ -177,6 +185,30 @@ class TestCollectivePlan:
         # + a dense pmean per param leaf
         assert per["layout"] == "per_node"
         assert per["collectives"] > fused["collectives"]
+
+    def test_reduce_scatter_layout_per_axis(self):
+        """The rs merge plans exactly RS + AG + wire AR on the flattened
+        dp supergroup and zero step-issued collectives on the model
+        axis; the sketch payload crosses the wire twice (DESIGN.md
+        §12)."""
+        from repro.configs import get_arch, reduced
+        from repro.train.step import collective_plan
+        cfg = reduced(get_arch("tinyllama-1.1b"))
+
+        fused = collective_plan(cfg, self._run(
+            dp_axis_name="data", dp_collective="fused"))
+        rsp = collective_plan(
+            cfg, self._run(dp_axis_name=("pod", "data"),
+                           dp_collective="overlap",
+                           dp_merge="reduce_scatter"),
+            mesh_shape={"pod": 2, "data": 1, "model": 2})
+        assert rsp["layout"] == "rs_overlap"
+        assert rsp["collectives"] == 3
+        assert rsp["by_kind"] == {"all_reduce": 1, "reduce_scatter": 1,
+                                  "all_gather": 1}
+        assert rsp["per_axis"] == {"pod+data": 3, "model": 0}
+        assert rsp["mesh"] == {"pod": 2, "data": 1, "model": 2}
+        assert rsp["wire_bytes"] > fused["wire_bytes"]
 
     def test_monitor_tree_degrades_overlap_to_fused(self):
         import dataclasses as dc
@@ -221,6 +253,7 @@ class TestTrainLoopTelemetry:
             assert "loss" in r.scalars and "grad_norm" in r.scalars
             assert r.spans["step"] > 0
             assert r.collectives == 0     # single-program run
+            assert r.mesh == {} and r.per_axis_collectives == {}
         logged = recs[2]                  # log_every=2 -> ring drained
         assert set(logged.nodes) == {"block0/ffn_h", "block0/ffn_in",
                                      "block1/ffn_h", "block1/ffn_in"}
