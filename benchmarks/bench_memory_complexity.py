@@ -39,10 +39,16 @@ def monitoring_table():
     return rows
 
 
+PSPARSE_PROJ_BYTES = 3 * 4 * 4      # (3, 4) uint32 hash coefficients
+
+
 def lm_table(seq_len: int = 4096, global_batch: int = 256,
              k: int = 33, chips: int = 256):
     """Activation residuals (bf16) removed from the backward closure per
-    device by sketched FFN matmuls, vs the sketch state held."""
+    device by sketched FFN matmuls, vs the sketch state held. The
+    projection term is reported per proj_kind (DESIGN.md §13): dense
+    gaussian holds three (T, k) matrices; psparse holds 48 bytes of hash
+    coefficients per tree, replicated on every device."""
     rows = []
     T = seq_len * global_batch
     for arch in ARCHS:
@@ -55,19 +61,24 @@ def lm_table(seq_len: int = 4096, global_batch: int = 256,
         else:
             widths = [cfg.d_model, cfg.d_ff]
         removed = sum(T * w * 2 for w in widths) * L / chips
-        sk = sum(3 * L * w * k * 4 for w in widths) / chips \
-            + 3 * T * k * 4 / chips
+        triples = sum(3 * L * w * k * 4 for w in widths) / chips
+        proj_dense = 3 * T * k * 4 / chips
         rows.append({"arch": arch,
                      "removed_gib_dev": removed / 2 ** 30,
-                     "sketch_mib_dev": sk / 2 ** 20})
+                     "sketch_mib_dev": (triples + proj_dense) / 2 ** 20,
+                     "proj_dense_mib_dev": proj_dense / 2 ** 20,
+                     "proj_psparse_bytes": PSPARSE_PROJ_BYTES,
+                     "sketch_psparse_mib_dev":
+                         (triples + PSPARSE_PROJ_BYTES) / 2 ** 20})
     return rows
 
 
-def per_worker_table(dp_shards=(1, 2, 4, 8)):
+def per_worker_table(dp_shards=(1, 2, 4, 8), proj_kind="gaussian"):
     """DESIGN.md §12: under dp_merge="reduce_scatter" each worker owns a
     1/W tile of the packed triple buffer; psi + the shared projections
     replicate. Closed-form (`tree_memory_bytes_per_worker`) vs the live
-    bytes of an actual shard."""
+    bytes of an actual shard. With proj_kind="psparse" the replicated
+    projection tail collapses to the 48-byte coefficient array."""
     import jax
 
     from repro.configs import get_arch, reduced
@@ -80,7 +91,8 @@ def per_worker_table(dp_shards=(1, 2, 4, 8)):
 
     cfg = reduced(get_arch("tinyllama-1.1b"))
     run = RunConfig(seq_len=16, global_batch=4,
-                    sketch=SketchSettings(enabled=True, k_max=9))
+                    sketch=SketchSettings(enabled=True, k_max=9,
+                                          proj_kind=proj_kind))
     tree = init_train_state(jax.random.PRNGKey(0), cfg, run).sketch
     full = tree_memory_bytes(tree)
     total = tree_wire_spec(tree).total       # packed triple elements
@@ -138,17 +150,49 @@ def gate():
     assert abs(live - closed) <= 0.01 * closed, (
         f"live NodeTree bytes {live} drifted from the closed-form "
         f"accounting {closed}")
+    # psparse projection term (DESIGN.md §13): closed form must equal
+    # the live bytes EXACTLY — the whole point of seeds-only projections
+    # is that the term is a known constant, so no tolerance is allowed
+    import jax.numpy as jnp
+    scfg_ps = SketchConfig(rank=4, max_rank=4, batch_size=128,
+                           proj_kind="psparse", proj_density=0.1)
+    sk_ps = init_mlp_sketch(jax.random.PRNGKey(0), cfg, scfg_ps,
+                            "monitor")
+    proj_live = sum(l.size * jnp.dtype(l.dtype).itemsize
+                    for l in jax.tree.leaves(sk_ps.proj))
+    assert proj_live == PSPARSE_PROJ_BYTES, (
+        f"live psparse projection bytes {proj_live} != closed-form "
+        f"constant {PSPARSE_PROJ_BYTES}")
+    closed_ps = sketch_memory_bytes(scfg_ps, cfg.num_hidden_layers,
+                                    cfg.d_hidden)
+    live_ps = tree_memory_bytes(sk_ps)
+    assert live - live_ps == closed - closed_ps, (
+        f"psparse projection savings drifted: live drop "
+        f"{live - live_ps} != closed-form drop {closed - closed_ps}")
+    for r in lm_table():
+        assert r["proj_psparse_bytes"] == PSPARSE_PROJ_BYTES
     # per-worker sharding (DESIGN.md §12): the closed-form must equal
     # the live bytes of an actual shard exactly, and the sharded triple
     # buffer must be exactly a ceil(1/W) tile of the replicated one —
-    # the replicated psi/proj tail is the only part that does not divide
-    for r in per_worker_table():
-        assert r["live_bytes"] == r["per_worker_bytes"], (
-            f"per-worker closed-form drifted from the live shard: {r}")
-        w = r["dp_shards"]
-        triples = r["replicated_bytes"] - r["tail_bytes"]
-        assert r["flat_bytes"] == -(-(triples // 4) // w) * 4, (
-            f"sharded triple buffer is not a 1/W tile: {r}")
+    # the replicated psi/proj tail is the only part that does not
+    # divide. Under psparse the same equality must hold with the
+    # projection tail collapsed to the coefficient constant.
+    tail_drops = set()
+    for r, rp in zip(per_worker_table(),
+                     per_worker_table(proj_kind="psparse")):
+        for row, kind in ((r, "gaussian"), (rp, "psparse")):
+            assert row["live_bytes"] == row["per_worker_bytes"], (
+                f"per-worker closed-form drifted from the live shard "
+                f"({kind}): {row}")
+            w = row["dp_shards"]
+            triples = row["replicated_bytes"] - row["tail_bytes"]
+            assert row["flat_bytes"] == -(-(triples // 4) // w) * 4, (
+                f"sharded triple buffer is not a 1/W tile ({kind}): "
+                f"{row}")
+        tail_drops.add(r["tail_bytes"] - rp["tail_bytes"])
+    assert len(tail_drops) == 1 and tail_drops.pop() > 0, (
+        "psparse replicated-tail saving must be a positive constant "
+        "independent of dp_shards")
     print("gate,pass")
 
 
@@ -164,17 +208,24 @@ def main():
         print(f"{r['T']},{r['traditional_mb']:.0f},{r['sketch_mb']:.2f},"
               f"{r['reduction_pct']:.2f}")
     print("## LM-scale (train_4k, per device, 256 chips)")
-    print("arch,removed_gib_dev,sketch_mib_dev")
+    print("arch,removed_gib_dev,sketch_mib_dev,proj_dense_mib_dev,"
+          "proj_psparse_bytes,sketch_psparse_mib_dev")
     for r in lm_table():
         print(f"{r['arch']},{r['removed_gib_dev']:.2f},"
-              f"{r['sketch_mib_dev']:.1f}")
-    print("## per-worker sketch state under dp_merge=reduce_scatter "
-          "(reduced tinyllama tree)")
-    print("dp_shards,replicated_bytes,per_worker_bytes,live_bytes,ratio")
-    for r in per_worker_table():
-        print(f"{r['dp_shards']},{r['replicated_bytes']},"
-              f"{r['per_worker_bytes']},{r['live_bytes']},"
-              f"{r['ratio']:.3f}")
+              f"{r['sketch_mib_dev']:.1f},"
+              f"{r['proj_dense_mib_dev']:.1f},"
+              f"{r['proj_psparse_bytes']},"
+              f"{r['sketch_psparse_mib_dev']:.1f}")
+    for kind in ("gaussian", "psparse"):
+        print(f"## per-worker sketch state under "
+              f"dp_merge=reduce_scatter (reduced tinyllama tree, "
+              f"proj_kind={kind})")
+        print("dp_shards,replicated_bytes,per_worker_bytes,live_bytes,"
+              "tail_bytes,ratio")
+        for r in per_worker_table(proj_kind=kind):
+            print(f"{r['dp_shards']},{r['replicated_bytes']},"
+                  f"{r['per_worker_bytes']},{r['live_bytes']},"
+                  f"{r['tail_bytes']},{r['ratio']:.3f}")
     gate()
 
 

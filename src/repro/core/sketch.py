@@ -50,6 +50,14 @@ class SketchConfig:
     # 'fast' = ridge-regularized normal-equation solves (TPU-friendly).
     recon_mode: str = "faithful"
     ridge: float = 1e-4             # RELATIVE ridge for 'fast' solves
+    # projection family (DESIGN.md §13): "gaussian" = dense (Nb, k_max)
+    # matrices; "psparse" = seeds-only p-sparsified projections
+    proj_kind: str = "gaussian"
+    proj_density: float = 0.1       # psparse nonzero fraction p
+
+    def __post_init__(self):
+        from repro.sketches.psparse import validate_proj_kind
+        validate_proj_kind(self.proj_kind)
 
     @property
     def k0(self) -> int:
@@ -231,8 +239,18 @@ def refresh_projections(state: SketchState, cfg: SketchConfig) -> SketchState:
 
 
 def sketch_memory_bytes(cfg: SketchConfig, num_layers: int, width: int) -> int:
-    """Actual bytes held by the sketch state (for memory benchmarks)."""
+    """Actual bytes held by the sketch state (for memory benchmarks).
+
+    The projection term is the proj_kind split the memory-complexity
+    gate asserts exactly (DESIGN.md §13): dense gaussian stores three
+    (Nb, k_max) matrices; psparse stores a (3, 4) uint32 coefficient
+    array — O(1) bytes, independent of Nb and k_max. psi (per-layer,
+    k-sized) is identical in both."""
     itemsize = jnp.dtype(cfg.dtype).itemsize
     sketches = 3 * num_layers * width * cfg.k_max * itemsize
-    proj = (3 * cfg.batch_size + num_layers) * cfg.k_max * itemsize
-    return sketches + proj
+    psi = num_layers * cfg.k_max * itemsize
+    if cfg.proj_kind == "psparse":
+        proj = 3 * 4 * 4                      # (3, 4) uint32 seeds
+    else:
+        proj = 3 * cfg.batch_size * cfg.k_max * itemsize
+    return sketches + psi + proj

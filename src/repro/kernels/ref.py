@@ -19,6 +19,18 @@ def sketch_update_ref(a, x_s, y_s, z_s, ups, omg, phi, psi, beta):
     return x_new, y_new, z_new
 
 
+def psparse_update_ref(a, x_s, y_s, z_s, params, psi, *, beta, m,
+                       t_blk=256, d_blk=256):
+    """p-sparsified EMA triple oracle — the BITWISE target for the
+    kernels.psparse_update Pallas kernel (same tile-generation hashes,
+    same raw-dot accumulation order, same barriered finalize; see that
+    module). Re-exported here so every kernel's oracle lives in one
+    place."""
+    from repro.kernels.psparse_update import psparse_update_ref as _ref
+    return _ref(a, x_s, y_s, z_s, params, psi, beta=beta, m=m,
+                t_blk=t_blk, d_blk=d_blk)
+
+
 def csvec_insert_ref(table, params, vec):
     """Count-sketch insert oracle: table (r, c); params (4, r) u32
     multiply-shift coefficients; vec (n,). Mirrors the shared hash

@@ -98,6 +98,16 @@ def main():
     ap.add_argument("--strategy", default="megatron",
                     choices=["megatron", "fsdp"])
     ap.add_argument("--no-sketch", action="store_true")
+    ap.add_argument("--proj-kind", default="gaussian",
+                    choices=["gaussian", "psparse"],
+                    help="sketch projection family: 'gaussian' = dense "
+                         "(T, k_max) matrices; 'psparse' = seeds-only "
+                         "p-sparsified projections regenerated on the "
+                         "fly (O(1) projection memory, memory-bound "
+                         "update; DESIGN.md 13)")
+    ap.add_argument("--proj-density", type=float, default=0.1,
+                    help="psparse nonzero fraction p (support rows "
+                         "m = max(k_max, round(p*T)))")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default="artifacts/ckpt_launch")
     ap.add_argument("--ckpt-every", type=int, default=50)
@@ -128,7 +138,9 @@ def main():
         seq_len=seq, global_batch=batch,
         optimizer=AdamWConfig(lr=args.lr),
         warmup_steps=min(20, args.steps // 5 + 1), total_steps=args.steps,
-        sketch=SketchSettings(enabled=not args.no_sketch, k_max=17),
+        sketch=SketchSettings(enabled=not args.no_sketch, k_max=17,
+                              proj_kind=args.proj_kind,
+                              proj_density=args.proj_density),
         compression=compression,
         dp_axis_name=dp_axis,
         dp_workers=args.dp if args.dp else 1,

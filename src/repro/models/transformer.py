@@ -32,10 +32,9 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.sketches import (
-    NodeSpec, NodeTree, ema_triple_update, init_node_tree,
-    sketched_matmul,
+    NodeSpec, NodeTree, init_node_tree, proj_triple_increment,
+    proj_triple_update, sketched_matmul,
 )
-from repro.sketches.update import ema_triple_increment
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import rglru as rglru_mod
@@ -79,6 +78,11 @@ class SketchSettings:
     ridge: float = 1e-4             # relative ridge (see reconstruct.py)
     factored: bool = True           # beyond-paper low-rank grad matmuls
     sketch_dtype: Any = jnp.float32
+    # Projection family (DESIGN.md §13): "gaussian" stores three dense
+    # (T, k_max) matrices; "psparse" stores 12 uint32 hash coefficients
+    # and regenerates the implicit p-sparsified matrices on the fly.
+    proj_kind: str = "gaussian"
+    proj_density: float = 0.1       # psparse nonzero fraction p
     # DP-exact semantics (DESIGN.md §4): name of the data-parallel mesh
     # axis to psum per-token sketch increments over INSIDE the forward.
     # None = each program sketches the tokens it sees (single-program
@@ -108,6 +112,8 @@ class SketchSettings:
     serve_monitor: bool = False
 
     def __post_init__(self):
+        from repro.sketches.psparse import validate_proj_kind
+        validate_proj_kind(self.proj_kind)
         if self.dp_defer and self.dp_axis is not None:
             raise ValueError(
                 "SketchSettings.dp_defer (fused one-psum step) and "
@@ -145,7 +151,9 @@ def init_lm_sketch_state(key, cfg: ArchConfig, st: SketchSettings,
     if not st.enabled:
         return None
     return init_node_tree(key, lm_node_specs(cfg), num_tokens, st.k_max,
-                          dtype=st.sketch_dtype)
+                          dtype=st.sketch_dtype,
+                          proj_kind=st.proj_kind,
+                          proj_density=st.proj_density)
 
 
 def _slice_sketch(state: NodeTree | None, lo: int, hi: int,
@@ -285,15 +293,13 @@ def _update_triple(node, a, proj, k_active, st: SketchSettings):
     if st.dp_premerged:
         return node, node
     if st.dp_defer:
-        ix, iy, iz = ema_triple_increment(
-            node.x, node.y, node.z, a,
-            proj["upsilon"], proj["omega"], proj["phi"], node.psi,
-            st.beta, k_active)
+        ix, iy, iz = proj_triple_increment(
+            node.x, node.y, node.z, a, proj, node.psi, st.beta,
+            k_active)
         return node, dataclasses.replace(node, x=ix, y=iy, z=iz)
-    xs, ys, zs = ema_triple_update(
-        node.x, node.y, node.z, a,
-        proj["upsilon"], proj["omega"], proj["phi"], node.psi,
-        st.beta, k_active, axis_name=st.dp_axis)
+    xs, ys, zs = proj_triple_update(
+        node.x, node.y, node.z, a, proj, node.psi, st.beta, k_active,
+        axis_name=st.dp_axis)
     updated = dataclasses.replace(node, x=xs, y=ys, z=zs)
     return updated, updated
 

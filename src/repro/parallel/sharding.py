@@ -261,6 +261,10 @@ def _sketch_path_info(path: tuple):
         return None
     if leaf in ("upsilon", "omega", "phi") and "proj" in names:
         return (None, leaf)
+    if leaf == "params" and "proj" in names:
+        # psparse trees: the only projection leaf is the (3, 4) uint32
+        # hash-coefficient array — O(1) bytes, always replicated
+        return (None, leaf)
     return None
 
 
@@ -279,7 +283,7 @@ def spec_for_sketch(rules: ShardingRules, node_name: str | None,
     shared (T, k) projections shard token rows over dp."""
     shape = leaf.shape
     ndim = leaf.ndim if hasattr(leaf, "ndim") else len(shape)
-    if leaf_name == "psi":
+    if leaf_name in ("psi", "params"):
         return P()
     if leaf_name in ("upsilon", "omega", "phi"):
         if ndim != 2 or shape[0] % rules.dp_size != 0:

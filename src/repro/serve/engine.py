@@ -197,6 +197,8 @@ class ServeEngine:
     monitor_window: int = 32
     monitor_beta: float = 0.9
     monitor_seed: int = 17
+    monitor_proj_kind: str = "gaussian"   # "psparse": seeds-only monitor
+    monitor_proj_density: float = 0.1     # projections (DESIGN.md §13)
     thresholds: PathologyThresholds = PathologyThresholds()
     telemetry_log: Any = None          # telemetry.TelemetryLog | None
 
@@ -224,19 +226,30 @@ class ServeEngine:
     def _k_max(self) -> int:
         return 2 * self.monitor_rank + 1
 
-    def _proj_for(self, n_tokens: int) -> dict:
+    def _proj_for(self, n_tokens: int):
         """(n_tokens, k_max) projection triple, derived deterministically
         from the monitor seed and cached per token count — prefill
-        (B*S0), decode (B) and refill (S0) each get a stable set."""
+        (B*S0), decode (B) and refill (S0) each get a stable set. With
+        psparse monitoring the cache entry is a seeds-only
+        ``PsparseProjections`` (12 uint32s per token count instead of
+        3 n_tokens x k_max floats)."""
         if n_tokens not in self._proj_cache:
             base = jax.random.fold_in(
                 jax.random.PRNGKey(self.monitor_seed), n_tokens)
-            ks = jax.random.split(base, 3)
-            self._proj_cache[n_tokens] = {
-                name: jax.random.normal(k, (n_tokens, self._k_max),
-                                        jnp.float32)
-                for name, k in zip(("upsilon", "omega", "phi"), ks)
-            }
+            if self.monitor_proj_kind == "psparse":
+                from repro.kernels.psparse_update import psparse_hash_params
+                from repro.sketches import PsparseProjections
+                self._proj_cache[n_tokens] = PsparseProjections(
+                    params=psparse_hash_params(base),
+                    num_tokens=n_tokens, k_max=self._k_max,
+                    density=self.monitor_proj_density)
+            else:
+                ks = jax.random.split(base, 3)
+                self._proj_cache[n_tokens] = {
+                    name: jax.random.normal(k, (n_tokens, self._k_max),
+                                            jnp.float32)
+                    for name, k in zip(("upsilon", "omega", "phi"), ks)
+                }
         return self._proj_cache[n_tokens]
 
     def _init_monitor(self, batch: int) -> ServeMonitorState:
@@ -244,7 +257,9 @@ class ServeEngine:
             jax.random.PRNGKey(self.monitor_seed),
             {"res": NodeSpec(width=self.cfg.d_model,
                              layers=self.cfg.num_layers)},
-            num_tokens=batch, k_max=self._k_max)
+            num_tokens=batch, k_max=self._k_max,
+            proj_kind=self.monitor_proj_kind,
+            proj_density=self.monitor_proj_density)
         tree = dataclasses.replace(
             tree, rank=jnp.asarray(self.monitor_rank, jnp.int32))
         return ServeMonitorState(

@@ -9,6 +9,12 @@ sketched node anywhere is a one-line ``NodeSpec`` registration.
 from repro.sketches.update import (
     active_mask, corange_apply_increment, corange_triple_increment,
     corange_triple_update, ema_triple_update, mask_columns,
+    proj_triple_increment, proj_triple_update,
+)
+from repro.sketches.psparse import (
+    PROJ_KINDS, PsparseCorangeProjections, PsparseProjections,
+    init_psparse_projections, is_psparse,
+    make_psparse_corange_projections, validate_proj_kind,
 )
 from repro.sketches.node import (
     DEFAULT_NODE_AXES, SketchNode, init_paper_node, register_node_axis,
@@ -35,9 +41,13 @@ __all__ = [
     "active_mask", "adopt_legacy", "apply_shard_increments",
     "corange_apply_increment", "corange_triple_increment",
     "corange_triple_update", "DEFAULT_NODE_AXES", "ema_triple_update",
-    "init_node_tree", "init_paper_node", "legacy_layout",
+    "init_node_tree", "init_paper_node", "init_psparse_projections",
+    "is_psparse", "legacy_layout", "make_psparse_corange_projections",
     "mask_columns", "NodeSpec", "NodeTree", "node_paths",
-    "pack_segments", "partition_segments", "refresh_sharded_tree",
+    "pack_segments", "partition_segments", "PROJ_KINDS",
+    "proj_triple_increment", "proj_triple_update",
+    "PsparseCorangeProjections", "PsparseProjections",
+    "refresh_sharded_tree", "validate_proj_kind",
     "refresh_tree", "register_node_axis", "restore_legacy_state",
     "segment_spec", "shard_tree", "ShardedNodeTree",
     "sharded_tree_memory_bytes", "SketchNode", "sketched_matmul",

@@ -39,6 +39,14 @@ LEGACY_META = ("proj", "rank", "step")
 
 def legacy_layout(tree: NodeTree) -> dict:
     """The PR 0-2 per-group dict equivalent of a NodeTree."""
+    from repro.sketches.psparse import is_psparse
+    if is_psparse(tree.proj):
+        # the materializing __getitem__ would silently write dense
+        # (T, k_max) matrices into a layout that predates psparse —
+        # legacy checkpoints are gaussian by definition
+        raise ValueError(
+            "psparse trees have no legacy checkpoint layout (the PR 0-2 "
+            "dict format stores dense projection matrices)")
     out = {
         "proj": {k: tree.proj[k] for k in ("upsilon", "omega", "phi")},
         "rank": tree.rank,
@@ -81,6 +89,20 @@ def restore_legacy_state(template, leaves):
     pytree whose NodeTree subtrees were dicts when the checkpoint was
     written). Raises ValueError if the leaf count matches neither layout.
     """
+    from repro.sketches.psparse import is_psparse
+    if any(is_psparse(t.proj) for t in
+           jax.tree.leaves(template, is_leaf=_is_tree) if _is_tree(t)):
+        # legacy (PR 0-2) checkpoints are gaussian by definition, so a
+        # leaf-count mismatch against a psparse template is never a
+        # legacy layout — the likeliest cause is a checkpoint written
+        # under a different proj_kind
+        raise ValueError(
+            "checkpoint leaves do not match the template, which uses "
+            "psparse projections — this is not a legacy layout (legacy "
+            "checkpoints store dense gaussian matrices). The checkpoint "
+            "was probably written with a different proj_kind: restore "
+            "with the matching SketchSettings, or start from a fresh "
+            "checkpoint directory.")
     legacy_template = jax.tree.map(
         lambda t: legacy_layout(t) if _is_tree(t) else t,
         template, is_leaf=_is_tree)

@@ -1,0 +1,194 @@
+"""p-sparsified projection state — seeds instead of matrices (DESIGN.md §13).
+
+A psparse tree never materializes its ``(T, k_max)`` projection leaves:
+``NodeTree.proj`` holds a single ``(3, 4)`` uint32 array of multiply-shift
+hash coefficients (one row per matrix) plus the static geometry, and the
+implicit shared-support sampled-Rademacher matrices (see
+``kernels/psparse_update``) are regenerated on demand — in-register by
+the Pallas kernel, as an m-row gather by the production jnp path, or
+densely by ``__getitem__`` for the few consumers that genuinely need a
+materialized matrix (``sketched_matmul``'s backward, the serving
+monitor's prefill swap). Projection storage is O(1) bytes regardless of
+T and k_max, refresh is a re-derivation of 12 uint32s, and every dense
+materialization is bit-identical to what the kernel computes tile by
+tile (same hash arithmetic, same one-hot contraction).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.psparse_update import (
+    psparse_dense_one, psparse_dim, psparse_hash_params, psparse_rows,
+    psparse_scale, psparse_signs,
+)
+
+Array = jax.Array
+
+PROJ_KINDS = ("gaussian", "psparse")
+
+_NAMES = ("upsilon", "omega", "phi")
+
+
+def validate_proj_kind(proj_kind: str) -> None:
+    if proj_kind not in PROJ_KINDS:
+        raise ValueError(
+            f"proj_kind must be one of {PROJ_KINDS}, got {proj_kind!r}")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PsparseProjections:
+    """Implicit {upsilon, omega, phi} of the paper layout.
+
+    ``params[i]`` = [a_row, b_row, a_sign, b_sign] (uint32) for matrix i
+    in ``("upsilon", "omega", "phi")`` order; the geometry fields are
+    static so jitted consumers specialize on shapes exactly as they do
+    for dense trees. ``proj["omega"]`` materializes the dense (T, k_max)
+    matrix — existing consumers work unchanged; the hot update path
+    never calls it (see ``sketches.update.proj_triple_increment``).
+    """
+
+    params: Array                 # (3, 4) uint32 hash coefficients
+    num_tokens: int = dataclasses.field(
+        metadata=dict(static=True), default=0)
+    k_max: int = dataclasses.field(
+        metadata=dict(static=True), default=0)
+    density: float = dataclasses.field(
+        metadata=dict(static=True), default=0.1)
+
+    @property
+    def m(self) -> int:
+        """Support rows per matrix: max(k_max, round(p*T)), <= T."""
+        return psparse_dim(self.num_tokens, self.k_max, self.density)
+
+    @property
+    def scale(self) -> float:
+        """Entry magnitude alpha = sqrt(T/m) (unit entry variance)."""
+        return psparse_scale(self.num_tokens, self.m)
+
+    def __getitem__(self, name: str) -> Array:
+        return psparse_dense_one(
+            self.params[_NAMES.index(name)], self.num_tokens,
+            self.k_max, self.m)
+
+    def rows(self, name: str) -> Array:
+        """(m,) int32 support rows of one implicit matrix."""
+        return psparse_rows(self.params[_NAMES.index(name)], self.m,
+                            self.num_tokens)
+
+    def signs(self, name: str) -> Array:
+        """(m, k_max) UNSCALED ±1 sign pattern of one implicit matrix."""
+        return psparse_signs(self.params[_NAMES.index(name)], self.m,
+                             self.k_max)
+
+
+def init_psparse_projections(key: Array, num_tokens: int, k_max: int,
+                             density: float) -> PsparseProjections:
+    return PsparseProjections(
+        params=psparse_hash_params(key),
+        num_tokens=num_tokens, k_max=k_max, density=density)
+
+
+def refresh_psparse_projections(proj, key: Array):
+    """Fresh independent projections at identical shapes: re-derive the
+    hash coefficients from the refresh key (the psparse analogue of
+    re-drawing the dense normal leaves — recompile-free by construction,
+    12 uint32s instead of 3·T·k_max floats)."""
+    return dataclasses.replace(
+        proj, params=psparse_hash_params(key, rows=proj.params.shape[0]))
+
+
+def is_psparse(proj) -> bool:
+    return isinstance(proj, (PsparseProjections,
+                             PsparseCorangeProjections))
+
+
+# ---------------------------------------------------------------------------
+# Corange (Tropp) layout: same seeds-only storage, duck-typed fields
+# ---------------------------------------------------------------------------
+
+
+def _iid_sparse(params_m, n: int, k: int, density: float,
+                transpose: bool) -> Array:
+    """A (n, k) [or (k, n) when transposed] iid p-sparsified matrix
+    [Achlioptas 2003]: entry (u, j) is ±1/sqrt(p) with probability p,
+    else 0 (unit entry variance). Keep/sign decisions come from two
+    affine u32 hashes of the packed index (u << 16) | j using the same
+    [a_keep, b_keep, a_sign, b_sign] coefficient row as the paper-layout
+    hash family. Unlike the shared-support paper construction, EVERY
+    coordinate of the contraction axis participates with probability p
+    per entry — the corange reconstruction pinv-inverts through these
+    matrices, and zeroed support rows would cost it real information."""
+    u = jnp.arange(n, dtype=jnp.uint32)
+    j = jnp.arange(k, dtype=jnp.uint32)
+    gidx = (u[:, None] << jnp.uint32(16)) | j[None, :]
+    thr = int(round(density * 2 ** 32))
+    if thr >= 2 ** 32:
+        keep = jnp.ones((n, k), jnp.float32)
+    else:
+        keep_h = params_m[0] * gidx + params_m[1]
+        keep = (keep_h < jnp.uint32(thr)).astype(jnp.float32)
+    sgn = 1.0 - 2.0 * (
+        (params_m[2] * gidx + params_m[3]) >> jnp.uint32(31)
+    ).astype(jnp.float32)
+    dense = keep * sgn * (1.0 / math.sqrt(density))
+    return dense.T if transpose else dense
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PsparseCorangeProjections:
+    """Implicit Tropp projections (core/corange.py layout), one hash-
+    coefficient row per matrix in (upsilon, omega, phi, psi) order.
+    The ``.upsilon``/``.omega``/``.phi``/``.psi`` properties materialize
+    the dense matrices on the fly, so ``corange_triple_update`` /
+    ``corange_reconstruct`` consume this object unchanged (duck typing —
+    the corange math is batch-sized, so the win here is the O(1)
+    storage and seeds-only refresh, not FLOPs). Each matrix is iid
+    p-sparsified (``_iid_sparse``) rather than shared-support: the
+    reconstruction pinv-inverts through upsilon/phi/psi, so every
+    contraction coordinate must participate.
+    """
+
+    params: Array                 # (4, 4) uint32 hash coefficients
+    d: int = dataclasses.field(metadata=dict(static=True), default=0)
+    n_b: int = dataclasses.field(metadata=dict(static=True), default=0)
+    k_max: int = dataclasses.field(metadata=dict(static=True), default=0)
+    density: float = dataclasses.field(
+        metadata=dict(static=True), default=0.1)
+
+    @property
+    def s_max(self) -> int:
+        return 2 * self.k_max + 1
+
+    @property
+    def upsilon(self) -> Array:       # (k_max, d), contracts d
+        return _iid_sparse(self.params[0], self.d, self.k_max,
+                           self.density, transpose=True)
+
+    @property
+    def omega(self) -> Array:         # (N_b, k_max), contracts N_b
+        return _iid_sparse(self.params[1], self.n_b, self.k_max,
+                           self.density, transpose=False)
+
+    @property
+    def phi(self) -> Array:           # (s_max, d), contracts d
+        return _iid_sparse(self.params[2], self.d, self.s_max,
+                           self.density, transpose=True)
+
+    @property
+    def psi(self) -> Array:           # (N_b, s_max), contracts N_b
+        return _iid_sparse(self.params[3], self.n_b, self.s_max,
+                           self.density, transpose=False)
+
+
+def make_psparse_corange_projections(
+        key: Array, d: int, n_b: int, k_max: int,
+        density: float) -> PsparseCorangeProjections:
+    return PsparseCorangeProjections(
+        params=psparse_hash_params(key, rows=4),
+        d=d, n_b=n_b, k_max=k_max, density=density)

@@ -180,15 +180,22 @@ def refresh_sharded_tree(ssk: ShardedNodeTree) -> ShardedNodeTree:
     the same fold_in lineage re-derives proj/psi (replicated, so every
     worker computes identical values) and the flat shard zeroes (the
     shard of a zero tree is zero). Shape-static: no recompiles."""
+    from repro.sketches.psparse import is_psparse, \
+        refresh_psparse_projections
     epoch = ssk.epoch + 1
     base = jax.random.fold_in(ssk.key, epoch)
     k_proj, k_psi = jax.random.split(base)
-    leaves, treedef = jax.tree.flatten(ssk.proj)
-    proj = jax.tree.unflatten(treedef, [
-        jax.random.normal(jax.random.fold_in(k_proj, i), leaf.shape,
-                          leaf.dtype)
-        for i, leaf in enumerate(leaves)
-    ])
+    if is_psparse(ssk.proj):
+        # same seeds-only lineage as tree.refresh_tree — replicated, so
+        # every worker re-derives identical hash coefficients
+        proj = refresh_psparse_projections(ssk.proj, k_proj)
+    else:
+        leaves, treedef = jax.tree.flatten(ssk.proj)
+        proj = jax.tree.unflatten(treedef, [
+            jax.random.normal(jax.random.fold_in(k_proj, i), leaf.shape,
+                              leaf.dtype)
+            for i, leaf in enumerate(leaves)
+        ])
     psi = {}
     for i, (name, _, _) in enumerate(ssk.node_meta):
         p = ssk.psi[name]

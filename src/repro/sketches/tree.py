@@ -64,13 +64,21 @@ def init_node_tree(
     num_tokens: int,
     k_max: int,
     dtype=jnp.float32,
+    proj_kind: str = "gaussian",
+    proj_density: float = 0.1,
 ) -> NodeTree:
     """Zero sketches + fresh shared projections for a paper-kind registry.
 
     RNG protocol (stable across PRs — checkpoints/baselines depend on
     it): ``split(key, 4 + N)``; upsilon/omega/phi from ks[0..2]; node i's
-    psi from ks[4 + i] in registry insertion order (ks[3] is reserved).
+    psi from ks[4 + i] in registry insertion order. ``psparse`` trees
+    derive their 12 hash coefficients from ks[3] (previously reserved) —
+    the gaussian lineage is untouched, so dense baselines and
+    checkpoints are byte-identical across this PR (DESIGN.md §13).
     """
+    from repro.sketches.psparse import init_psparse_projections, \
+        validate_proj_kind
+    validate_proj_kind(proj_kind)
     for name, spec in specs.items():
         if spec.kind != "paper":
             raise ValueError(
@@ -78,11 +86,17 @@ def init_node_tree(
                 f"{name!r} has kind {spec.kind!r} — assemble the tree "
                 f"directly (see train/paper_trainer.init_mlp_sketch)")
     ks = jax.random.split(key, 4 + len(specs))
-    proj = {
-        "upsilon": jax.random.normal(ks[0], (num_tokens, k_max), dtype),
-        "omega": jax.random.normal(ks[1], (num_tokens, k_max), dtype),
-        "phi": jax.random.normal(ks[2], (num_tokens, k_max), dtype),
-    }
+    if proj_kind == "psparse":
+        proj = init_psparse_projections(ks[3], num_tokens, k_max,
+                                        proj_density)
+    else:
+        proj = {
+            "upsilon": jax.random.normal(ks[0], (num_tokens, k_max),
+                                         dtype),
+            "omega": jax.random.normal(ks[1], (num_tokens, k_max),
+                                       dtype),
+            "phi": jax.random.normal(ks[2], (num_tokens, k_max), dtype),
+        }
     nodes = {
         name: init_paper_node(
             ks[4 + i], spec.width, k_max, layers=spec.layers,
@@ -149,15 +163,22 @@ def refresh_tree(tree: NodeTree) -> NodeTree:
     Every output shape equals the input shape, so a jitted caller never
     recompiles; only values (and the epoch/step counters) change.
     """
+    from repro.sketches.psparse import is_psparse, \
+        refresh_psparse_projections
     epoch = tree.epoch + 1
     base = jax.random.fold_in(tree.key, epoch)
     k_proj, k_psi = jax.random.split(base)
-    leaves, treedef = jax.tree.flatten(tree.proj)
-    proj = jax.tree.unflatten(treedef, [
-        jax.random.normal(jax.random.fold_in(k_proj, i), leaf.shape,
-                          leaf.dtype)
-        for i, leaf in enumerate(leaves)
-    ])
+    if is_psparse(tree.proj):
+        # seeds-only refresh: 12 fresh uint32 hash coefficients — the
+        # recompile-free property is trivial (shapes never existed)
+        proj = refresh_psparse_projections(tree.proj, k_proj)
+    else:
+        leaves, treedef = jax.tree.flatten(tree.proj)
+        proj = jax.tree.unflatten(treedef, [
+            jax.random.normal(jax.random.fold_in(k_proj, i), leaf.shape,
+                              leaf.dtype)
+            for i, leaf in enumerate(leaves)
+        ])
     nodes = {}
     for i, name in enumerate(sorted(tree.nodes)):
         node = zero_node_sketches(tree.nodes[name])

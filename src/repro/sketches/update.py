@@ -221,6 +221,126 @@ def ema_apply_increment(x_s: Array, inc: Array, beta: float,
 
 
 # ---------------------------------------------------------------------------
+# proj_kind dispatch (DESIGN.md §13): dense Gaussian vs psparse seeds
+# ---------------------------------------------------------------------------
+
+
+def proj_triple_update(
+    x_s: Array, y_s: Array, z_s: Array,
+    a: Array,
+    proj,                  # {"upsilon","omega","phi"} dense dict OR
+    #                        a PsparseProjections seeds-only pytree
+    psi: Array,
+    beta: float,
+    k_active,
+    *,
+    a_out: Array | None = None,
+    axis_name: str | tuple[str, ...] | None = None,
+    use_kernel: bool | None = None,
+) -> tuple[Array, Array, Array]:
+    """`ema_triple_update` routed by projection kind. Dense dict trees
+    take the canonical path above unchanged; psparse trees regenerate
+    the implicit projections on the fly — in-register by the psparse
+    Pallas kernel, or as an m-row gather + small contraction on the jnp
+    path — and fold increments in through `ema_apply_increment`, so the
+    increment/apply bit-compatibility contract holds for psparse BY
+    CONSTRUCTION under every DP layout (the update IS apply(psum(inc)))."""
+    from repro.sketches.psparse import PsparseProjections
+
+    if not isinstance(proj, PsparseProjections):
+        return ema_triple_update(
+            x_s, y_s, z_s, a, proj["upsilon"], proj["omega"],
+            proj["phi"], psi, beta, k_active, a_out=a_out,
+            axis_name=axis_name, use_kernel=use_kernel)
+
+    if use_kernel is None:
+        from repro.kernels.ops import pallas_enabled
+        use_kernel = pallas_enabled()
+
+    if use_kernel and a_out is None and axis_name is None:
+        from repro.kernels.ops import interpret_mode
+        from repro.kernels.psparse_update import psparse_update
+
+        f32 = jnp.float32
+        ps = mask_columns(psi.astype(f32), k_active)
+        xn, yn, zn = psparse_update(
+            jax.lax.stop_gradient(a), x_s.astype(f32), y_s.astype(f32),
+            z_s.astype(f32), proj.params, ps, beta=float(beta),
+            m=proj.m, interpret=interpret_mode())
+        dt = x_s.dtype
+        return tuple(mask_columns(o.astype(dt), k_active)
+                     for o in (xn, yn, zn))
+
+    inc_x, inc_y, inc_z = proj_triple_increment(
+        x_s, y_s, z_s, a, proj, psi, beta, k_active, a_out=a_out,
+        use_kernel=use_kernel)
+    if axis_name is not None:
+        inc_x = jax.lax.psum(inc_x, axis_name)
+        inc_y = jax.lax.psum(inc_y, axis_name)
+        inc_z = jax.lax.psum(inc_z, axis_name)
+    return (
+        ema_apply_increment(x_s, inc_x, beta, k_active),
+        ema_apply_increment(y_s, inc_y, beta, k_active),
+        ema_apply_increment(z_s, inc_z, beta, k_active),
+    )
+
+
+def proj_triple_increment(
+    x_s: Array, y_s: Array, z_s: Array,
+    a: Array,
+    proj,
+    psi: Array,
+    beta: float,
+    k_active,
+    *,
+    a_out: Array | None = None,
+    use_kernel: bool | None = None,
+) -> tuple[Array, Array, Array]:
+    """`ema_triple_increment` routed by projection kind — increments
+    keep their (d, k_max) shapes regardless of kind, so the flat-segment
+    wire packing and every DP merge layout work unchanged."""
+    from repro.sketches.psparse import PsparseProjections
+
+    if not isinstance(proj, PsparseProjections):
+        return ema_triple_increment(
+            x_s, y_s, z_s, a, proj["upsilon"], proj["omega"],
+            proj["phi"], psi, beta, k_active, a_out=a_out,
+            use_kernel=use_kernel)
+    if a_out is not None:
+        raise NotImplementedError(
+            "psparse projections have no legacy a_out form — "
+            "node-indexed callers observe a single activation")
+
+    if use_kernel is None:
+        from repro.kernels.ops import pallas_enabled
+        use_kernel = pallas_enabled()
+
+    if use_kernel:
+        # zero input sketches -> the pure (1-beta)-scaled increment,
+        # same trick as the dense kernel branch
+        from repro.kernels.ops import interpret_mode
+        from repro.kernels.psparse_update import psparse_update
+
+        f32 = jnp.float32
+        ps = mask_columns(psi.astype(f32), k_active)
+        zeros = jnp.zeros(x_s.shape, f32)
+        ix, iy, iz = psparse_update(
+            jax.lax.stop_gradient(a), zeros, zeros, zeros, proj.params,
+            ps, beta=float(beta), m=proj.m, interpret=interpret_mode())
+    else:
+        from repro.kernels.psparse_update import psparse_triple_increment
+
+        dt = x_s.dtype
+        ps = mask_columns(psi.astype(dt), k_active)
+        ix, iy, iz = psparse_triple_increment(
+            a, proj.params, ps, float(beta), proj.m, dtype=dt)
+    # column masking: inc_z is masked through psi; x/y explicitly (a
+    # masked projection column IS a masked increment column — the
+    # contraction is per-column, and 0-columns contract to exact zeros)
+    return mask_columns(ix, k_active), mask_columns(iy, k_active), iz
+
+
+# ---------------------------------------------------------------------------
 # Corange (Tropp) triple — the other sketch kind a node may carry
 # ---------------------------------------------------------------------------
 

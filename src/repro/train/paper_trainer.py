@@ -44,7 +44,7 @@ from repro.models.mlp import _act, mlp_init, mlp_node_specs
 from repro.optim.adamw import AdamWConfig, adamw_update, init_adamw, \
     sgd_update
 from repro.sketches import (
-    NodeTree, SketchNode, corange_triple_update, ema_triple_update,
+    NodeTree, SketchNode, corange_triple_update, proj_triple_update,
     refresh_tree, sketched_matmul,
 )
 
@@ -85,14 +85,27 @@ def init_mlp_sketch(key, cfg: MLPConfig, scfg: SketchConfig,
 
     RNG protocol is frozen (fixed-seed baselines depend on it):
     split(key, 6); paper proj from ks[0..2], psi from ks[3]; corange
-    projections all from ks[0].
+    projections all from ks[0]. ``scfg.proj_kind == "psparse"`` derives
+    its hash coefficients from ks[4] (previously unused) so the
+    gaussian/corange lineages — and their pinned baselines — are
+    byte-identical across this PR (DESIGN.md §13).
     """
+    from repro.sketches import (
+        init_psparse_projections, make_psparse_corange_projections,
+    )
+
     spec = mlp_node_specs(cfg)["hidden"]
     n_nodes, d = spec.layers, spec.width
     k_max = scfg.k_max
+    psparse = scfg.proj_kind == "psparse"
     ks = jax.random.split(key, 6)
     if variant == "corange":
-        proj = make_corange_projections(ks[0], d, cfg.batch_size, k_max)
+        if psparse:
+            proj = make_psparse_corange_projections(
+                ks[4], d, cfg.batch_size, k_max, scfg.proj_density)
+        else:
+            proj = make_corange_projections(ks[0], d, cfg.batch_size,
+                                            k_max)
         node = SketchNode(
             x=jnp.zeros((n_nodes, k_max, cfg.batch_size)),
             y=jnp.zeros((n_nodes, d, k_max)),
@@ -101,11 +114,18 @@ def init_mlp_sketch(key, cfg: MLPConfig, scfg: SketchConfig,
             kind="corange",
         )
     else:
-        proj = {
-            "upsilon": jax.random.normal(ks[0], (cfg.batch_size, k_max)),
-            "omega": jax.random.normal(ks[1], (cfg.batch_size, k_max)),
-            "phi": jax.random.normal(ks[2], (cfg.batch_size, k_max)),
-        }
+        if psparse:
+            proj = init_psparse_projections(
+                ks[4], cfg.batch_size, k_max, scfg.proj_density)
+        else:
+            proj = {
+                "upsilon": jax.random.normal(ks[0],
+                                             (cfg.batch_size, k_max)),
+                "omega": jax.random.normal(ks[1],
+                                           (cfg.batch_size, k_max)),
+                "phi": jax.random.normal(ks[2],
+                                         (cfg.batch_size, k_max)),
+            }
         # three distinct buffers (aliasing breaks donation — node.py)
         node = SketchNode(
             x=jnp.zeros((n_nodes, d, k_max)),
@@ -165,10 +185,9 @@ def sketched_forward(params, x, sk: NodeTree, cfg: MLPConfig,
                 xc, yc, zc = (hidden.x[node], hidden.y[node],
                               hidden.z[node])
             else:
-                xc, yc, zc = ema_triple_update(
+                xc, yc, zc = proj_triple_update(
                     hidden.x[node], hidden.y[node], hidden.z[node], h,
-                    sk.proj["upsilon"], sk.proj["omega"],
-                    sk.proj["phi"], hidden.psi[node], scfg.beta,
+                    sk.proj, hidden.psi[node], scfg.beta,
                     k_active, axis_name=dp_axis)
             if variant == "monitor":
                 z = h @ p["w"] + p["bias"]
@@ -203,7 +222,7 @@ def mlp_sketch_increments(params, x, sk: NodeTree, cfg: MLPConfig,
     order exactly, so psum-merging these increments and folding them in
     (`ema_apply_increment`) is bitwise the per-node DP path."""
     from repro.sketches.update import (
-        corange_triple_increment, ema_triple_increment,
+        corange_triple_increment, proj_triple_increment,
     )
 
     act = _act(cfg.activation)
@@ -227,10 +246,9 @@ def mlp_sketch_increments(params, x, sk: NodeTree, cfg: MLPConfig,
         ]
     else:
         incs = [
-            ema_triple_increment(
+            proj_triple_increment(
                 hidden.x[l], hidden.y[l], hidden.z[l], obs[l],
-                sk.proj["upsilon"], sk.proj["omega"], sk.proj["phi"],
-                hidden.psi[l], scfg.beta, k_active)
+                sk.proj, hidden.psi[l], scfg.beta, k_active)
             for l in range(len(obs))
         ]
     node = dataclasses.replace(

@@ -978,6 +978,131 @@ def test_dp_differential_monitor_lm_w4():
     assert "OK" in out
 
 
+@pytest.mark.dp_differential
+def test_dp_differential_psparse_w4():
+    """Per-PR reduced differential (CI job `differential-w4`), psparse
+    half (DESIGN.md §13): at W=4 both DP merge layouts of the
+    p-sparsified increments — the fused flat psum and the overlap
+    early-psum schedule — must be BITWISE identical to the per-node
+    `proj_triple_update(axis_name=...)` reference; the per-worker
+    kernel-route increment must be bitwise what the jnp oracle
+    (`psparse_update_ref` on a zero sketch) computes, and the
+    production gather fast path allclose to it."""
+    out = _run("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.configs.paper import MLPConfig
+        from repro.core.sketch import SketchConfig
+        from repro.kernels.ref import psparse_update_ref
+        from repro.parallel.collectives import psum_flat_segments
+        from repro.sketches import partition_segments, \\
+            proj_triple_increment, proj_triple_update
+        from repro.sketches.update import ema_apply_increment, \\
+            mask_columns
+        from repro.train.paper_trainer import init_mlp_sketch
+
+        mesh = Mesh(np.array(jax.devices()[:4]), ("data",))
+        W, Tl = 4, 8
+        cfg = MLPConfig(name="t", d_in=20, d_hidden=28, d_out=4,
+                        num_hidden_layers=3, activation="tanh",
+                        batch_size=Tl, learning_rate=1e-3)
+        scfg = SketchConfig(rank=3, max_rank=4, beta=0.9, batch_size=Tl,
+                            proj_kind="psparse", proj_density=0.1)
+        sk = init_mlp_sketch(jax.random.PRNGKey(0), cfg, scfg,
+                             "sketched_fixed")
+        # nonzero state so beta*x + inc is exercised, not just the inc
+        sk = dataclasses.replace(sk, nodes={
+            "hidden": dataclasses.replace(
+                sk.nodes["hidden"],
+                x=0.1 * sk.nodes["hidden"].psi[..., None, :] *
+                jnp.ones((28, 1)))})
+        node = sk.nodes["hidden"]
+        L, d, ka = cfg.num_hidden_layers, cfg.d_hidden, sk.k_active
+        acts = jax.random.normal(jax.random.PRNGKey(100), (L, W * Tl, d))
+
+        # (a) single-worker increments vs the kernel's jnp oracle on a
+        # zero sketch: kernel route bitwise, gather fast path allclose
+        a0 = acts[:, :Tl]
+        for l in range(L):
+            z = jnp.zeros_like(node.x[l])
+            ps = mask_columns(node.psi[l], ka)
+            ox, oy, oz = psparse_update_ref(
+                a0[l], z, z, z, sk.proj.params, ps, beta=scfg.beta,
+                m=sk.proj.m)
+            # the oracle leaves x/y columns >= k_active live; the
+            # increment path masks them (z is masked through psi)
+            ox, oy = mask_columns(ox, ka), mask_columns(oy, ka)
+            kx, ky, kz = proj_triple_increment(
+                node.x[l], node.y[l], node.z[l], a0[l], sk.proj,
+                node.psi[l], scfg.beta, ka, use_kernel=True)
+            for g, w in zip((kx, ky, kz), (ox, oy, oz)):
+                assert np.array_equal(np.asarray(g), np.asarray(w)), l
+            fx, fy, fz = proj_triple_increment(
+                node.x[l], node.y[l], node.z[l], a0[l], sk.proj,
+                node.psi[l], scfg.beta, ka)
+            for g, w in zip((fx, fy, fz), (ox, oy, oz)):
+                np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                           atol=1e-5)
+        print("psparse kernel-route == jnp oracle bitwise OK")
+
+        def incs(a_sh):
+            outs = [proj_triple_increment(
+                node.x[l], node.y[l], node.z[l], a_sh[l], sk.proj,
+                node.psi[l], scfg.beta, ka) for l in range(L)]
+            return {"hidden": {
+                "x": jnp.stack([o[0] for o in outs]),
+                "y": jnp.stack([o[1] for o in outs]),
+                "z": jnp.stack([o[2] for o in outs])}}
+
+        def apply_(m):
+            m = m["hidden"]
+            return {"hidden": {
+                "x": ema_apply_increment(node.x, m["x"], scfg.beta, ka),
+                "y": ema_apply_increment(node.y, m["y"], scfg.beta, ka),
+                "z": ema_apply_increment(node.z, m["z"], scfg.beta,
+                                         ka)}}
+
+        def per_node(a_sh):
+            outs = [proj_triple_update(
+                node.x[l], node.y[l], node.z[l], a_sh[l], sk.proj,
+                node.psi[l], scfg.beta, ka, axis_name="data")
+                for l in range(L)]
+            return {"hidden": {
+                "x": jnp.stack([o[0] for o in outs]),
+                "y": jnp.stack([o[1] for o in outs]),
+                "z": jnp.stack([o[2] for o in outs])}}
+
+        def fused(a_sh):
+            return apply_(psum_flat_segments(incs(a_sh), "data"))
+
+        def overlap(a_sh):
+            early, late = partition_segments(
+                {"sketch": incs(a_sh),
+                 "n": jnp.ones((), jnp.float32)})
+            assert set(early) == {"sketch"} and set(late) == {"n"}
+            return apply_(psum_flat_segments(
+                early["sketch"], "data", name="overlap_sketch",
+                barrier=True))
+
+        sh = lambda f: jax.jit(shard_map(
+            lambda a: f(a.reshape(L, Tl, d)),
+            mesh=mesh, in_specs=P(None, "data"), out_specs=P(),
+            check_rep=False))
+        want = sh(per_node)(acts)
+        for name, f in (("fused", fused), ("overlap", overlap)):
+            got = sh(f)(acts)
+            for g, w in zip(jax.tree.leaves(got),
+                            jax.tree.leaves(want)):
+                assert np.array_equal(np.asarray(g), np.asarray(w)), \\
+                    name
+            print("psparse", name, "bitwise vs per_node OK")
+        print("OK")
+    """, devices=4)
+    assert "OK" in out
+
+
 @pytest.mark.slow
 def test_int8_error_feedback_survives_checkpoint_per_worker_w4():
     """Checkpoint round-trip of the per-worker error-feedback residuals

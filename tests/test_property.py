@@ -140,3 +140,94 @@ def test_reconstruction_rank_monotone_on_fixed_stream(seed, r):
         rec = corange_reconstruct(xc, yc, zc, proj, ka).dense()
         errs.append(float(jnp.linalg.norm(rec - m.T)))
     assert errs[1] <= errs[0] + 1e-3
+
+
+# ---------------------------------------------------------------------------
+# p-sparsified projections (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.5, 0.99),
+       st.sampled_from([0.05, 0.1, 0.2]))
+@settings(**SETTINGS)
+def test_psparse_deterministic_across_jit(seed, beta, density):
+    """Same seed => the implicit projection is one well-defined matrix:
+    the dense materialization is bit-identical inside and outside jit,
+    and the Pallas kernel (interpret) reproduces `psparse_update_ref`
+    bitwise on the triple update it implies."""
+    from repro.kernels.psparse_update import psparse_update
+    from repro.kernels.ref import psparse_update_ref
+    from repro.sketches import init_psparse_projections
+
+    key = jax.random.PRNGKey(seed)
+    T, d, k = 24, 16, 9
+    proj = init_psparse_projections(key, T, k, density)
+    dense = proj["omega"]
+    dense_jit = jax.jit(lambda p: p["omega"])(proj)
+    np.testing.assert_array_equal(np.asarray(dense),
+                                  np.asarray(dense_jit))
+
+    a = jax.random.normal(jax.random.fold_in(key, 1), (T, d))
+    s = 0.1 * jax.random.normal(jax.random.fold_in(key, 2), (d, k))
+    psi = jax.random.normal(jax.random.fold_in(key, 3), (k,))
+    got = psparse_update(a, s, s, s, proj.params, psi,
+                         beta=beta, m=proj.m, interpret=True)
+    want = psparse_update_ref(a, s, s, s, proj.params, psi,
+                              beta=beta, m=proj.m)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([0.05, 0.1, 0.2]))
+@settings(**SETTINGS)
+def test_psparse_column_norm_concentration(seed, density):
+    """Unit-entry-variance normalization at density p. Paper layout
+    (shared support, m rows of magnitude sqrt(T/m)): every column norm
+    is EXACTLY ||col||^2 = m * (T/m) = T. Corange layout (iid
+    Achlioptas entries, +-1/sqrt(p) kept w.p. p): the matrix-averaged
+    squared norm concentrates on its length-n contraction axis."""
+    from repro.sketches import init_psparse_projections
+    from repro.sketches.psparse import _iid_sparse
+
+    key = jax.random.PRNGKey(seed)
+    T, k = 64, 13
+    proj = init_psparse_projections(key, T, k, density)
+    for name in ("upsilon", "omega", "phi"):
+        norms = np.sum(np.asarray(proj[name]) ** 2, axis=0)
+        np.testing.assert_allclose(norms, T, rtol=1e-6)
+
+    from repro.kernels.psparse_update import psparse_hash_params
+    n, kc = 256, 33
+    mat = np.asarray(_iid_sparse(psparse_hash_params(key, rows=1)[0],
+                                 n, kc, density, transpose=False))
+    mean_sq = (mat ** 2).sum() / (n * kc)   # per-entry second moment
+    assert 0.8 < mean_sq < 1.2, mean_sq
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_psparse_refresh_folds_fresh_projection(seed):
+    """`refresh_tree` on a psparse tree derives a fresh INDEPENDENT
+    implicit projection (new hash coefficients => new matrix), stays
+    deterministic (refreshing twice from the same state agrees
+    bitwise), and zeroes the sketches at unchanged shapes."""
+    from repro.sketches import NodeSpec, init_node_tree, refresh_tree
+
+    key = jax.random.PRNGKey(seed)
+    tree = init_node_tree(key, {"h": NodeSpec(width=12, layers=2)},
+                          num_tokens=16, k_max=7, proj_kind="psparse",
+                          proj_density=0.1)
+    r1 = refresh_tree(tree)
+    r2 = refresh_tree(tree)
+    np.testing.assert_array_equal(np.asarray(r1.proj.params),
+                                  np.asarray(r2.proj.params))
+    assert not np.array_equal(np.asarray(tree.proj.params),
+                              np.asarray(r1.proj.params))
+    assert not np.array_equal(np.asarray(tree.proj["omega"]),
+                              np.asarray(r1.proj["omega"]))
+    r3 = refresh_tree(r1)   # successive epochs stay fresh
+    assert not np.array_equal(np.asarray(r1.proj.params),
+                              np.asarray(r3.proj.params))
+    assert r1.proj.params.shape == tree.proj.params.shape
+    assert float(np.abs(np.asarray(r1.nodes["h"].x)).max()) == 0.0
+    assert int(r1.epoch) == int(tree.epoch) + 1
