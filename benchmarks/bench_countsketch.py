@@ -37,7 +37,16 @@ Sections:
                  bytes <= 2.5% of dense at loss gap <= 0.05 vs the
                  dense-wire overlap run, with exactly TWO all-reduces
                  per compiled step and the sketch psum scheduled first.
-  9. mesh_gate   ISSUE 7 acceptance, structural half: per-axis
+  9. int8_e2e    ISSUE 9 acceptance: int8 END-TO-END on the DP wire —
+                 sketch increment segments (per-row scales, residual in
+                 the per-worker sketch_err ledger) AND the count-sketch
+                 table AND the overlapped p2 exact-value round. Gate:
+                 TOTAL per-step wire <= 1% of the dense gradient psum
+                 at a loss gap <= 0.05 vs the f32 wire, with zero
+                 serial third collective (the fused HLO holds exactly
+                 two all-reduces: the flat wire + the p2 round hidden
+                 behind the zero-grad dense optimizer pass).
+ 10. mesh_gate   ISSUE 7 acceptance, structural half: per-axis
                  collective counts of the ZeRO-style reduce-scatter
                  sketch merge on the (pod=2, data=2, model=2) mesh —
                  RS + AG + wire AR on the flattened dp supergroup,
@@ -539,6 +548,112 @@ def bench_overlap_gate():
     return [tuple(r.split(",")[1:]) for r in rows]
 
 
+def bench_int8_e2e_gate():
+    """ISSUE 9 acceptance: EVERY non-counter cross-worker byte int8 and
+    no serial third collective. The reduced archs are too narrow for
+    the 1% gate to be meaningful (the per-row f32 scales dominate a
+    k_max-wide row; increments scale linearly in d_model while dense
+    grads scale quadratically), so this section widens the reduced
+    tinyllama to d_model=256 — still CPU-trainable — where the ratio
+    measures the regime the wire format was built for. Gate: total
+    per-step wire (int8 increments + int8 table + f32 p2 values)
+    <= 1% of the dense gradient psum, loss gap <= 0.05 vs the f32
+    wire over the run, exactly TWO all-reduces in the fused HLO with
+    cs_p2 > 0 (flat wire + the p2 round overlapped with the zero-grad
+    dense optimizer pass — the serial layout's third collective is
+    gone, not hidden in extra traffic)."""
+    rows = _run_sub(f"""
+        import dataclasses, re
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.configs import get_arch, reduced
+        from repro.data.synthetic import lm_batch
+        from repro.models.transformer import SketchSettings
+        from repro.optim.compression import (
+            CompressionConfig, compressed_bytes)
+        from repro.optim.sketched_sgd import flat_dim
+        from repro.sketches import tree_wire_spec
+        from repro.sketches.wire import int8_segment_bytes
+        from repro.train.state import RunConfig, init_train_state
+        from repro.train.step import collective_plan, make_dp_train_step
+
+        STEPS, LAST = 8, 3
+        mesh = Mesh(np.array(jax.devices()), ("data",))
+        cfg = dataclasses.replace(
+            reduced(get_arch("tinyllama-1.1b")), d_model=256, d_ff=512,
+            num_heads=4, head_dim=64, vocab_size=512)
+        ccfg = lambda wd: CompressionConfig(
+            mode="countsketch", cs_rows=5, cs_cols=1024, cs_k=512,
+            cs_momentum=0.0, cs_p2=2, wire_dtype=wd)
+        mk = lambda wd: RunConfig(
+            seq_len=16, global_batch=8, warmup_steps=3,
+            total_steps=STEPS, dp_axis_name="data", dp_workers=4,
+            dp_collective="fused", compression=ccfg(wd),
+            sketch_wire_dtype=wd, p2_overlap=True,
+            sketch=SketchSettings(enabled=True, k_max=5, beta=0.9,
+                                  recon_mode="fast"))
+        key = jax.random.PRNGKey(0)
+        finals = {{}}
+        for wd in ("fp32", "int8"):
+            run = mk(wd)
+            state = init_train_state(key, cfg, run)
+            state = jax.device_put(state, NamedSharding(mesh, P()))
+            step = jax.jit(make_dp_train_step(cfg, run, mesh))
+            losses = []
+            for s in range(STEPS):
+                tok, lab = lm_batch(jax.random.fold_in(key, s), 8, 16,
+                                    cfg.vocab_size)
+                state, m = step(state, {{"tokens": tok,
+                                         "labels": lab}})
+                losses.append(float(m["loss"]))
+            assert all(np.isfinite(losses))
+            finals[wd] = sum(losses[-LAST:]) / LAST
+            d = flat_dim(state.params)
+            spec = tree_wire_spec(state.sketch)
+
+        # total int8 wire: increment segments + table + p2 values —
+        # the same closed forms the trace-time accounting hook uses
+        run = mk("int8")
+        dense_b = d * 4
+        e2e_b = int8_segment_bytes(spec) + compressed_bytes(
+            d, run.compression)
+        ratio = e2e_b / dense_b
+        gap = abs(finals["int8"] - finals["fp32"])
+
+        # zero serial third collective: cs_p2 > 0 yet the fused HLO
+        # holds exactly TWO all-reduces, with the plan recording the
+        # p2/optimizer overlap (bitwise vs serial is the differential
+        # tier's assert)
+        state = init_train_state(key, cfg, run)
+        tok, lab = lm_batch(key, 8, 16, cfg.vocab_size)
+        txt = jax.jit(make_dp_train_step(cfg, run, mesh)).lower(
+            jax.device_put(state, NamedSharding(mesh, P())),
+            {{"tokens": tok, "labels": lab}}).compile().as_text()
+        colls = re.findall(
+            r"= \\S+ (all-reduce|all-gather|reduce-scatter|"
+            r"all-to-all|collective-permute)", txt)
+        plan = collective_plan(cfg, run, mesh_shape=dict(mesh.shape))
+
+        print(f"ROW,final_loss_fp32_e2e_w4,{{finals['fp32']:.4f}},"
+              f"{{STEPS}} steps d_model=256")
+        print(f"ROW,final_loss_int8_e2e_w4,{{finals['int8']:.4f}},"
+              f"{{STEPS}} steps d_model=256")
+        print(f"ROW,int8_e2e_wire_ratio,{{ratio:.4f}},{{e2e_b}}B vs "
+              f"{{dense_b}}B per step per worker")
+        print(f"ROW,int8_e2e_loss_gap,{{gap:.4f}},tolerance=0.05")
+        print(f"ROW,int8_e2e_collectives_per_step,{{len(colls)}},"
+              f"{{colls}} with cs_p2=2 overlapped")
+        assert ratio <= 0.01, (e2e_b, dense_b)
+        assert gap <= 0.05, finals
+        assert len(colls) == 2 and set(colls) == {{"all-reduce"}}, colls
+        assert plan["p2_overlap"] is True and \\
+            plan["sketch_wire_dtype"] == "int8", plan
+        print("ROW,int8_e2e_gate,PASS,total wire<=1% dense at loss "
+              "gap<=0.05; p2 overlapped — no serial third collective")
+    """, timeout=1200)
+    return [tuple(r.split(",")[1:]) for r in rows]
+
+
 def bench_mesh_gate():
     """ISSUE 7 acceptance, structural half. No training and no
     subprocess — `collective_plan` is the same trace-free accounting the
@@ -622,6 +737,8 @@ RELATIVE_GATES = (
     "int8_collectives_per_step",
     "overlap_int8_wire_ratio",
     "overlap_collectives_per_step",
+    "int8_e2e_wire_ratio",
+    "int8_e2e_collectives_per_step",
     "mesh_rs_dp_collectives",
     "mesh_rs_model_axis_collectives",
     "mesh_rs_wire_overhead",
@@ -634,11 +751,15 @@ def check_baseline(metrics: dict, baseline_path: str,
                    gates: tuple = RELATIVE_GATES,
                    tol: float = REGRESSION_TOL) -> list[str]:
     """Compare the relative-gated metrics against the committed
-    baseline: >tol above baseline fails. Returns the failure list
-    (empty == pass). Metrics absent from an older baseline are skipped
-    (the next baseline refresh picks them up); metrics absent from the
-    CURRENT run fail — a section silently dropping a gate is itself a
-    regression.
+    baseline, ASYMMETRICALLY (ISSUE 9): >tol above baseline FAILS;
+    >tol BELOW baseline only WARNS that the committed baseline is
+    stale and should be refreshed — an improvement (a new wire format
+    shrinking a ratio, a layout dropping a collective) must land
+    without hand-editing BENCH_countsketch.json. Returns the failure
+    list (empty == pass). Metrics absent from an older baseline are
+    skipped (the next baseline refresh picks them up); metrics absent
+    from the CURRENT run fail — a section silently dropping a gate is
+    itself a regression.
 
     Shared across the BENCH_* suite (bench_serve.py gates its monitor
     overhead ratio through the same machinery with its own gate
@@ -655,13 +776,19 @@ def check_baseline(metrics: dict, baseline_path: str,
             continue
         now, ref = metrics[key], base[key]
         limit = ref * (1.0 + tol)
-        status = "PASS" if now <= limit else "FAIL"
-        print(f"baseline,{key},{status},{now:.4f} vs baseline "
-              f"{ref:.4f} (limit {limit:.4f})")
         if now > limit:
+            print(f"baseline,{key},FAIL,{now:.4f} vs baseline "
+                  f"{ref:.4f} (limit {limit:.4f})")
             failures.append(
                 f"{key}: {now:.4f} regressed >{tol:.0%} vs "
                 f"baseline {ref:.4f}")
+        elif now < ref * (1.0 - tol):
+            print(f"baseline,{key},WARN-better,{now:.4f} improved "
+                  f">{tol:.0%} on baseline {ref:.4f} — refresh the "
+                  f"committed BENCH json to lock in the gain")
+        else:
+            print(f"baseline,{key},PASS,{now:.4f} vs baseline "
+                  f"{ref:.4f} (limit {limit:.4f})")
     return failures
 
 
@@ -754,6 +881,16 @@ def main(argv=None):
         ov_rows, "overlap_int8_loss_gap")
     metrics["overlap_collectives_per_step"] = _rows_value(
         ov_rows, "overlap_collectives_per_step")
+
+    e2e_rows = bench_int8_e2e_gate()
+    for row in e2e_rows:
+        print(",".join(("int8_e2e",) + row))
+    metrics["int8_e2e_wire_ratio"] = _rows_value(
+        e2e_rows, "int8_e2e_wire_ratio")
+    metrics["int8_e2e_loss_gap"] = _rows_value(
+        e2e_rows, "int8_e2e_loss_gap")
+    metrics["int8_e2e_collectives_per_step"] = _rows_value(
+        e2e_rows, "int8_e2e_collectives_per_step")
 
     mesh_rows = bench_mesh_gate()
     for row in mesh_rows:

@@ -207,6 +207,26 @@ def table_bytes(cs: CSVec) -> int:
 QMAX = 127.0          # symmetric int8 grid: {-127..127}, no zero point
 
 
+def quantize_rows(x: Array) -> tuple[Array, Array]:
+    """Symmetric per-row (last-axis) int8 quantization of an arbitrary
+    (..., k) array — the one grid map every int8 wire in the repo uses
+    (table wire below, sketch-increment wire in sketches/wire.py).
+    Returns (q int8 same shape, scale (..., 1) f32) with
+    ``dequant = q * scale``. All-zero rows get scale 0 and quantize
+    losslessly to zeros; rounding is round-half-to-even."""
+    t = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(t), axis=-1, keepdims=True)
+    scale = amax / QMAX
+    safe = jnp.where(scale > 0.0, scale, 1.0)
+    q = jnp.clip(jnp.round(t / safe), -QMAX, QMAX)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_rows(q: Array, scale: Array) -> Array:
+    """Inverse grid map of `quantize_rows` (keepdims scale)."""
+    return q.astype(jnp.float32) * scale
+
+
 def quantize_table(table: Array) -> tuple[Array, Array]:
     """Symmetric per-row int8 quantization of an (r, c) sketch table.
 
@@ -220,12 +240,8 @@ def quantize_table(table: Array) -> tuple[Array, Array]:
     round-half-to-even to match `jnp.round` everywhere. All-zero rows
     get scale 0 and quantize losslessly to zeros.
     """
-    t = table.astype(jnp.float32)
-    amax = jnp.max(jnp.abs(t), axis=1)                       # (r,)
-    scale = amax / QMAX
-    safe = jnp.where(scale > 0.0, scale, 1.0)
-    q = jnp.clip(jnp.round(t / safe[:, None]), -QMAX, QMAX)
-    return q.astype(jnp.int8), scale
+    q, scale = quantize_rows(table)
+    return q, scale[:, 0]
 
 
 def dequantize_table(q: Array, scale: Array) -> Array:

@@ -15,6 +15,7 @@ from repro.kernels.csvec_topk import csvec_topk
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.mlstm_chunk import mlstm_chunk
 from repro.kernels.psparse_update import psparse_update
+from repro.kernels.ring_allreduce import ring_allreduce, ring_allreduce_ref
 from repro.kernels.sketch_update import sketch_update
 
 _ON_TPU = any(d.platform == "tpu" for d in jax.devices())
@@ -36,6 +37,7 @@ def interpret_mode() -> bool:
 
 __all__ = [
     "sketch_update", "psparse_update", "flash_attention", "mlstm_chunk",
-    "csvec_insert", "csvec_quant", "csvec_topk", "use_pallas",
-    "pallas_enabled", "interpret_mode",
+    "csvec_insert", "csvec_quant", "csvec_topk", "ring_allreduce",
+    "ring_allreduce_ref", "use_pallas", "pallas_enabled",
+    "interpret_mode",
 ]

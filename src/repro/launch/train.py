@@ -80,10 +80,23 @@ def main():
                          "(SketchedSGD p2; 0 disables)")
     ap.add_argument("--wire-dtype", default="fp32",
                     choices=["fp32", "int8"],
-                    help="count-sketch table precision on the DP wire "
-                         "(int8: ~4x fewer bytes; each worker's "
-                         "quantization residual stays in its error-"
-                         "feedback buffer)")
+                    help="DP wire precision end-to-end (DESIGN.md "
+                         "14): int8 quantizes BOTH the count-sketch "
+                         "table (per-row grid, residual in the "
+                         "error-feedback buffer) and the EMA sketch "
+                         "increment segments (residual in the "
+                         "per-worker sketch_err ledger, mass "
+                         "catch-up on the next step)")
+    ap.add_argument("--ring-wire", action="store_true",
+                    help="route the flat-segment DP merge through the "
+                         "Pallas remote-DMA ring all-reduce "
+                         "(kernels/ring_allreduce.py) instead of "
+                         "psum: bitwise-identical for fp32; with "
+                         "--wire-dtype int8 the sketch segments ride "
+                         "the quantization-aware int8 ring (requant "
+                         "per hop, residual ledger into sketch_err) "
+                         "while counters/scalars/table stay on an "
+                         "exempt f32 psum (DESIGN.md 14)")
     ap.add_argument("--dp-collective", default="fused",
                     choices=["fused", "per_node", "overlap"],
                     help="DP collective layout: 'fused' = ONE flat "
@@ -146,6 +159,15 @@ def main():
         dp_workers=args.dp if args.dp else 1,
         dp_collective=args.dp_collective,
         dp_merge=args.dp_merge,
+        # --wire-dtype int8 means int8 END-TO-END: sketch increments
+        # (here) and the cs table (CompressionConfig above). The
+        # sketch wire only quantizes a cross-worker exchange, so it
+        # stays fp32 without a dp axis / under per_node.
+        sketch_wire_dtype=args.wire_dtype if (
+            dp_axis is not None and not args.no_sketch and
+            args.dp_collective != "per_node" and
+            args.dp_merge == "psum") else "fp32",
+        ring_wire=args.ring_wire,
     )
     loop = LoopConfig(num_steps=args.steps, ckpt_every=args.ckpt_every,
                       ckpt_dir=args.ckpt_dir, log_every=10)

@@ -75,6 +75,68 @@ def adamw_update(params, grads, state, cfg: AdamWConfig, lr_scale=1.0):
     return new_params, new_state, {"grad_norm": gn}
 
 
+def adamw_sparse_update(params, state, cfg: AdamWConfig, lr_scale=1.0,
+                        *, update, idx, unravel):
+    """AdamW for a k-SPARSE flat gradient (the SketchedSGD transmitted
+    update), decomposed so the collective that produces `update`'s
+    values can hide behind the optimizer itself (DESIGN.md §14):
+
+      1. a DENSE pass with zero gradients — it touches only
+         params/moments, so it carries NO data dependency on the p2
+         all-reduce and XLA is free to run it while the collective is
+         in flight;
+      2. an exact k-coordinate correction — the `adamw_update` formulas
+         recomputed from the PRE-update state at the touched
+         coordinates, scattered over the zero-grad result.
+
+    Zero gradients leave the update formula identical at every
+    untouched coordinate (m' = b1*m, v' = b2*v, and the clip scale
+    multiplies a zero), so the result is BITWISE `adamw_update(params,
+    unravel(update), ...)` under jit (the differential tier asserts
+    it; like the ring oracle, both sides must be jitted or XLA's
+    FMA contraction on the eager side breaks bit-equality).
+
+    `update` is the (D,) flat sparse gradient, `idx` its (k,) nonzero
+    coordinate set (distinct), `unravel` the flat->pytree map used by
+    the serial path — needed so `global_norm` reduces leaf-by-leaf in
+    the serial order. Returns (new_params, new_state, metrics)."""
+    from jax.flatten_util import ravel_pytree
+
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    p0, s0, _ = adamw_update(params, zeros, state, cfg, lr_scale)
+
+    gtree = unravel(update)
+    gn = global_norm(gtree)
+    if cfg.grad_clip > 0:
+        scale = jnp.minimum(1.0,
+                            cfg.grad_clip / jnp.maximum(gn, 1e-12))
+    else:
+        scale = jnp.float32(1.0)
+
+    count = state["count"] + 1
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    pf, unrav_p = ravel_pytree(params)
+    mf, _ = ravel_pytree(state["m"])
+    vf, _ = ravel_pytree(state["v"])
+    gf = (update[idx] * scale).astype(cfg.moment_dtype)
+    m_new = cfg.b1 * mf[idx] + (1 - cfg.b1) * gf
+    v_new = cfg.b2 * vf[idx] + (1 - cfg.b2) * gf * gf
+    step = (m_new / b1c) / (jnp.sqrt(v_new / b2c) + cfg.eps)
+    p_new = pf[idx] - lr * (step + cfg.weight_decay * pf[idx])
+
+    p0f, _ = ravel_pytree(p0)
+    m0f, _ = ravel_pytree(s0["m"])
+    v0f, _ = ravel_pytree(s0["v"])
+    new_params = unrav_p(p0f.at[idx].set(p_new))
+    new_state = {"m": unrav_p(m0f.at[idx].set(m_new)),
+                 "v": unrav_p(v0f.at[idx].set(v_new)),
+                 "count": s0["count"]}
+    return new_params, new_state, {"grad_norm": gn}
+
+
 # --- plain SGD (paper §5.3 problematic config uses SGD) -------------------
 
 

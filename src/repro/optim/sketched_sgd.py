@@ -168,32 +168,35 @@ def countsketch_local(grads, err_state, cfg) -> CountsketchLocal:
                             cfg=cfg, dim=dim)
 
 
-def countsketch_finish(local: CountsketchLocal, merged: CSVec, *,
-                       workers, axis_name: str | None = None):
-    """Everything AFTER the table merge: heavy-hitter recovery from the
-    merged table (+ optional p2 exact-value round over `axis_name`),
-    the transmitted update, and the new {u, v} error-feedback state.
+def countsketch_nominate(local: CountsketchLocal, merged: CSVec):
+    """Phase A of the p2 exact-value round (cs_p2 > 0): heavy-hitter
+    candidate nomination from the merged table plus THIS worker's exact
+    residual values at those candidates — the p2 wire payload. Split
+    out of `countsketch_finish` so the flat-wire step can issue the p2
+    psum and overlap the dense optimizer pass with it (DESIGN.md §14);
+    finish composes nominate -> psum -> complete, so the serial path
+    runs bitwise the same ops. Candidates are identical on every worker
+    (`merged` is the collective's output), so no index exchange."""
+    cfg, dim = local.cfg, local.dim
+    n_cand = min(cfg.cs_p2 * min(cfg.cs_k, dim), dim)
+    _, cand = _recover_candidates(merged, n_cand, cfg)
+    return cand, local.v_pre[cand]
 
-    `workers` is the DP axis size (traced or static); `merged` must be
-    identical on every worker (the caller's collective contract), so
-    candidate selection needs no index exchange."""
+
+def countsketch_complete(local: CountsketchLocal, merged: CSVec,
+                         cand, exact, *, workers):
+    """Phase B, after the p2 collective: top-k winner selection from
+    the MERGED exact residual values, the transmitted update, and the
+    new {u, v} error-feedback state. Returns
+    ``(update (dim,) flat, sel_idx (k,), sel_val (k,), state, stats)``
+    — the FLAT update plus the winner coordinates, so the overlapped
+    optimizer (optim/adamw.adamw_sparse_update) can correct exactly k
+    entries of its zero-grad dense pass."""
     cfg, dim, v_pre, u = local.cfg, local.dim, local.v_pre, local.u
     k = min(cfg.cs_k, dim)
-    p2_bytes = 0
-    if cfg.cs_p2 > 0:
-        n_cand = min(cfg.cs_p2 * k, dim)
-        _, cand = _recover_candidates(merged, n_cand, cfg)
-        exact = v_pre[cand]
-        if axis_name is not None:
-            from repro.parallel.collectives import traced_psum
-            exact = traced_psum(exact, axis_name, name="cs_p2_values")
-        exact = exact / workers
-        _, pos = jax.lax.top_k(jnp.abs(exact), k)
-        sel_idx, sel_val = cand[pos], exact[pos]
-        p2_bytes = n_cand * 4
-    else:
-        est, sel_idx = _recover_candidates(merged, k, cfg)
-        sel_val = est / workers
+    exact = exact / workers
+    _, pos = jax.lax.top_k(jnp.abs(exact), k)
+    sel_idx, sel_val = cand[pos], exact[pos]
 
     update = jnp.zeros(dim, jnp.float32).at[sel_idx].set(sel_val)
     sent = (update != 0.0).astype(jnp.float32)
@@ -205,13 +208,49 @@ def countsketch_finish(local: CountsketchLocal, merged: CSVec, *,
     new_v = v_pre - update
     new_u = u * (1.0 - sent)
 
-    dense_bytes = dim * 4
     wire = (quantized_table_bytes(merged)
             if cfg.wire_dtype == "int8" else table_bytes(merged))
-    wire += p2_bytes
+    wire += cand.shape[0] * 4
     stats = {
         "wire_bytes": float(wire),
-        "compression_ratio": wire / dense_bytes,
+        "compression_ratio": wire / (dim * 4),
+    }
+    return update, sel_idx, sel_val, {"u": new_u, "v": new_v}, stats
+
+
+def countsketch_finish(local: CountsketchLocal, merged: CSVec, *,
+                       workers, axis_name: str | None = None):
+    """Everything AFTER the table merge: heavy-hitter recovery from the
+    merged table (+ optional p2 exact-value round over `axis_name`),
+    the transmitted update, and the new {u, v} error-feedback state.
+
+    `workers` is the DP axis size (traced or static); `merged` must be
+    identical on every worker (the caller's collective contract), so
+    candidate selection needs no index exchange."""
+    cfg, dim, v_pre, u = local.cfg, local.dim, local.v_pre, local.u
+    k = min(cfg.cs_k, dim)
+    if cfg.cs_p2 > 0:
+        cand, exact = countsketch_nominate(local, merged)
+        if axis_name is not None:
+            from repro.parallel.collectives import traced_psum
+            exact = traced_psum(exact, axis_name, name="cs_p2_values")
+        update, _, _, new_state, stats = countsketch_complete(
+            local, merged, cand, exact, workers=workers)
+        return local.unravel(update), new_state, stats
+
+    est, sel_idx = _recover_candidates(merged, k, cfg)
+    sel_val = est / workers
+    update = jnp.zeros(dim, jnp.float32).at[sel_idx].set(sel_val)
+    sent = (update != 0.0).astype(jnp.float32)
+    # same residual-subtraction rule as `countsketch_complete`
+    new_v = v_pre - update
+    new_u = u * (1.0 - sent)
+
+    wire = (quantized_table_bytes(merged)
+            if cfg.wire_dtype == "int8" else table_bytes(merged))
+    stats = {
+        "wire_bytes": float(wire),
+        "compression_ratio": wire / (dim * 4),
     }
     return (local.unravel(update), {"u": new_u, "v": new_v}, stats)
 

@@ -102,7 +102,10 @@ def psum_csvec(cs, axis_name: str):
 
 def psum_flat_segments(tree, axis_name: str, *, spec=None,
                        name: str = "flat_segments",
-                       barrier: bool = False):
+                       barrier: bool = False,
+                       ring: str | None = None,
+                       ring_workers: int | None = None,
+                       ring_exempt: tuple = ()):
     """Sum a pytree across `axis_name` through ONE all-reduce.
 
     Packs the leaves into one flat f32 buffer (layout memoized by
@@ -120,20 +123,81 @@ def psum_flat_segments(tree, axis_name: str, *, spec=None,
     re-serialize the two-phase layout back into one post-backward
     exchange) nor sink the pack/psum past the consumers' side of the
     fence. The differential tier asserts the resulting schedule —
-    early sketch all-reduce before the backward's reconstructions."""
+    early sketch all-reduce before the backward's reconstructions.
+
+    Ring routing (ISSUE 9 / DESIGN.md §14): with ``ring="fp32"`` the
+    packed buffer crosses the Pallas remote-DMA ring instead of the
+    psum — a bitwise drop-in (the pipelined-chain schedule reproduces
+    psum's sequential fold order; tests/test_ring.py). With
+    ``ring="int8"`` the quantization-aware ring carries the
+    NON-exempt top-level segments (dequant-accumulate-requant per hop)
+    and the call returns ``(merged_tree, residual_tree)`` — the
+    residuals are this worker's requantization ledger, which the
+    caller folds into its error-feedback state. ``ring_exempt`` names
+    top-level keys that must stay exact (worker counters, loss
+    scalars, the already-quantized cs table): they ride a small f32
+    psum. ``ring_workers`` (the dp world size) is required for any
+    ring route.
+    """
     from repro.sketches.wire import (
         pack_segments, segment_spec, unpack_segments,
     )
 
-    if spec is None:
-        spec = segment_spec(tree)
-    flat = pack_segments(tree)
-    if barrier:
-        flat = jax.lax.optimization_barrier(flat)
-    merged = traced_psum(flat, axis_name, name=name)
-    if barrier:
-        merged = jax.lax.optimization_barrier(merged)
-    return unpack_segments(spec, merged)
+    if ring is None:
+        if spec is None:
+            spec = segment_spec(tree)
+        flat = pack_segments(tree)
+        if barrier:
+            flat = jax.lax.optimization_barrier(flat)
+        merged = traced_psum(flat, axis_name, name=name)
+        if barrier:
+            merged = jax.lax.optimization_barrier(merged)
+        return unpack_segments(spec, merged)
+
+    from repro.kernels.ring_allreduce import (
+        ring_allreduce, ring_wire_bytes,
+    )
+
+    if ring_workers is None:
+        raise ValueError("ring routing requires ring_workers")
+    if not isinstance(axis_name, str):
+        raise ValueError(
+            "ring routing needs a single mesh axis (got "
+            f"{axis_name!r}); flattened multi-axis dp groups stay on "
+            "the psum path")
+
+    def _ring(subtree, wire_dtype, sub_name):
+        sub_spec = segment_spec(subtree)
+        flat = pack_segments(subtree)
+        if barrier:
+            flat = jax.lax.optimization_barrier(flat)
+        _record(sub_name, ring_wire_bytes(sub_spec.total, ring_workers,
+                                          wire_dtype), kind="ring")
+        merged, res = ring_allreduce(flat, axis_name,
+                                     axis_size=ring_workers,
+                                     wire_dtype=wire_dtype)
+        if barrier:
+            merged, res = jax.lax.optimization_barrier((merged, res))
+        return (unpack_segments(sub_spec, merged),
+                unpack_segments(sub_spec, res))
+
+    if ring == "fp32":
+        # whole-buffer drop-in: bitwise == psum, residuals are zeros
+        merged, _ = _ring(tree, "fp32", name)
+        return merged
+
+    if ring != "int8":
+        raise ValueError(f"unknown ring wire {ring!r}")
+
+    ringed = {k: v for k, v in tree.items() if k not in ring_exempt}
+    exempt = {k: v for k, v in tree.items() if k in ring_exempt}
+    merged, res = _ring(ringed, "int8", name)
+    if exempt:
+        merged = {**merged,
+                  **psum_flat_segments(exempt, axis_name,
+                                       name=name + "_exempt",
+                                       barrier=barrier)}
+    return merged, res
 
 
 def reduce_scatter_flat_segments(tree, axis_name, *, shards: int,

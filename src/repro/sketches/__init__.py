@@ -33,6 +33,7 @@ from repro.sketches.compat import (
     adopt_legacy, legacy_layout, restore_legacy_state,
 )
 from repro.sketches.wire import (
+    SKETCH_WIRE_DTYPES, fake_quantize_tree, int8_segment_bytes,
     pack_segments, partition_segments, segment_spec,
     tree_increment_leaves, tree_wire_spec, unpack_segments,
 )
@@ -43,8 +44,10 @@ __all__ = [
     "corange_triple_update", "DEFAULT_NODE_AXES", "ema_triple_update",
     "init_node_tree", "init_paper_node", "init_psparse_projections",
     "is_psparse", "legacy_layout", "make_psparse_corange_projections",
-    "mask_columns", "NodeSpec", "NodeTree", "node_paths",
+    "fake_quantize_tree", "int8_segment_bytes", "mask_columns",
+    "NodeSpec", "NodeTree", "node_paths",
     "pack_segments", "partition_segments", "PROJ_KINDS",
+    "SKETCH_WIRE_DTYPES",
     "proj_triple_increment", "proj_triple_update",
     "PsparseCorangeProjections", "PsparseProjections",
     "refresh_sharded_tree", "validate_proj_kind",

@@ -138,6 +138,56 @@ def partition_segments(segments: dict, early_keys=OVERLAP_EARLY_KEYS):
     return early, late
 
 
+# ---------------------------------------------------------------------------
+# int8 sketch wire (ISSUE 9 / DESIGN.md §14): BASIS-style per-row
+# normalized increments. Each (..., k) row of an EMA increment leaf is
+# symmetrically quantized against its own invariant scalar
+# amax/127 — the scale rides the wire as one f32 per row — and the
+# rounding residual folds into the per-worker `sketch_err` state under
+# the PR 4 mass-catch-up rule (next step transmits inc + sketch_err, so
+# the EMA state telescopes to the exact f32 trajectory up to one
+# outstanding residual).
+# ---------------------------------------------------------------------------
+
+SKETCH_WIRE_DTYPES = ("fp32", "int8")
+
+
+def fake_quantize_tree(tree) -> tuple[Any, Any]:
+    """Per-leaf simulated int8 wire: returns ``(dhat, residual)`` trees
+    with ``dhat + residual == leaf`` exactly in f32 (quantize-dequantize
+    then subtract — the mass-exactness identity the e2e differential
+    asserts). ``dhat`` is what crosses the (psum-simulated) wire;
+    ``residual`` stays worker-local in the error-feedback state.
+
+    The grid map is the shared `countsketch.csvec.quantize_rows`: the
+    BASIS invariant scalar is each row's own amax/127, so the scaling
+    is equivariant under per-node magnitude drift."""
+    from repro.countsketch.csvec import dequantize_rows, quantize_rows
+
+    def one(leaf):
+        q, sc = quantize_rows(leaf)
+        dhat = dequantize_rows(q, sc)
+        return dhat, leaf.astype(jnp.float32) - dhat
+
+    pairs = jax.tree.map(one, tree)
+    dhat = jax.tree.map(lambda p: p[0], pairs,
+                        is_leaf=lambda p: isinstance(p, tuple))
+    res = jax.tree.map(lambda p: p[1], pairs,
+                       is_leaf=lambda p: isinstance(p, tuple))
+    return dhat, res
+
+
+def int8_segment_bytes(spec: SegmentSpec) -> int:
+    """int8 wire cost of one packed buffer: 1 byte per element plus one
+    f32 row scale per trailing-axis row of every leaf."""
+    total = 0
+    for shape in spec.shapes:
+        n = _size(shape)
+        rows = _size(shape[:-1]) if len(shape) > 0 else 1
+        total += n * 1 + rows * 4
+    return total
+
+
 def tree_increment_leaves(tree) -> dict:
     """The cross-worker leaves of a NodeTree: each node's (x, y, z)
     triple (psi/proj/rank/counters are replicated, never on the wire).

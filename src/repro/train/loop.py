@@ -101,7 +101,12 @@ def run_training(cfg, run: RunConfig, loop: LoopConfig, *,
             and run.compression.mode == "countsketch"
         rs_mode = run.dp_merge == "reduce_scatter" \
             and state.sketch is not None
-        if cs_mode or rs_mode:
+        # the int8 sketch wire's per-worker quantization ledger
+        # (DESIGN.md §14) persists exactly like the countsketch
+        # error feedback: stacked per worker, mass-split on elastic
+        # restart
+        i8_mode = "sketch_err" in state.opt
+        if cs_mode or rs_mode or i8_mode:
             # the countsketch error-feedback accumulators (each
             # worker's unsent residual) and the rs sketch shards are
             # INTENTIONALLY per-worker: device-local buffers under the
@@ -119,14 +124,18 @@ def run_training(cfg, run: RunConfig, loop: LoopConfig, *,
                 pw = {}
                 if cs_mode:
                     pw["err"] = s.opt["err"]
+                if i8_mode:
+                    pw["sketch_err"] = s.opt["sketch_err"]
                 if rs_mode:
                     pw["flat"] = s.sketch.flat
                 return pw
 
             def _join(s, pw):
-                if "err" in pw:
+                opt_keys = [k for k in ("err", "sketch_err") if k in pw]
+                if opt_keys:
                     opt = dict(s.opt)
-                    opt["err"] = pw["err"]
+                    for k in opt_keys:
+                        opt[k] = pw[k]
                     s = dataclasses.replace(s, opt=opt)
                 if "flat" in pw:
                     s = dataclasses.replace(
@@ -177,12 +186,13 @@ def run_training(cfg, run: RunConfig, loop: LoopConfig, *,
                             pw["flat"] = reshard_stacked_flat(
                                 pw["flat"].reshape(w_old, -1),
                                 state.sketch.spec, workers)
-                        if "err" in pw:
-                            pw["err"] = jax.tree.map(
-                                lambda x: jnp.broadcast_to(
-                                    x.sum(0) / workers,
-                                    (workers,) + x.shape[1:]),
-                                pw["err"])
+                        for rk in ("err", "sketch_err"):
+                            if rk in pw:
+                                pw[rk] = jax.tree.map(
+                                    lambda x: jnp.broadcast_to(
+                                        x.sum(0) / workers,
+                                        (workers,) + x.shape[1:]),
+                                    pw[rk])
                         log.info("elastic residual reshard %d -> %d "
                                  "workers", w_old, workers)
                 elif layout is not None:

@@ -83,6 +83,32 @@ class RunConfig:
     #                     metrics). Exact: RS hands each worker its
     #                     bitwise tile of the psum result.
     dp_merge: str = "psum"
+    # Wire precision of the EMA sketch-increment segments (ISSUE 9 /
+    # DESIGN.md §14). "fp32" is exact; "int8" ships BASIS-normalized
+    # per-row quantized increments (scale rides as f32 per row) with
+    # the rounding residual folded into the per-worker
+    # `opt["sketch_err"]` state under the PR 4 mass-catch-up rule —
+    # next step's wire carries inc + sketch_err, so the merged EMA
+    # trajectory telescopes to f32 up to one outstanding residual.
+    # Orthogonal to `compression.wire_dtype` (the count-sketch TABLE
+    # wire), which keeps its own error-feedback ledger.
+    sketch_wire_dtype: str = "fp32"
+    # Route the flat-segment sketch merge through the Pallas remote-DMA
+    # ring all-reduce (kernels/ring_allreduce.py) instead of psum. f32
+    # sketch wire -> the whole buffer rides the f32 ring (bitwise ==
+    # psum); int8 sketch wire -> the sketch segments ride the
+    # quantization-aware int8 ring (no wire-layer fake-quant — the ring
+    # itself quantizes per hop and its residual ledger folds into
+    # `sketch_err`) while counters/scalars/table segments stay on an
+    # exempt f32 psum.
+    ring_wire: bool = False
+    # Overlap the SketchedSGD p2 exact-value round with the optimizer
+    # update (ISSUE 9c): the dense AdamW pass runs on zero grads while
+    # the p2 collective is in flight, then the k selected coordinates
+    # are corrected post-merge — bitwise the serial reference
+    # (tests/test_distributed.py). Applies to the flat-wire layouts
+    # (fused/overlap) with countsketch compression and cs_p2 > 0.
+    p2_overlap: bool = True
 
     def __post_init__(self):
         if self.dp_workers < 1:
@@ -106,6 +132,38 @@ class RunConfig:
             raise ValueError(
                 f"global_batch={self.global_batch} not divisible by "
                 f"dp_workers={self.dp_workers}")
+        if self.sketch_wire_dtype not in ("fp32", "int8"):
+            raise ValueError(
+                f"sketch_wire_dtype must be 'fp32' or 'int8', got "
+                f"{self.sketch_wire_dtype!r}")
+        if self.sketch_wire_dtype == "int8":
+            if self.dp_axis_name is None:
+                raise ValueError(
+                    "sketch_wire_dtype='int8' quantizes the cross-"
+                    "worker wire — it needs dp_axis_name")
+            if self.dp_collective == "per_node":
+                raise ValueError(
+                    "sketch_wire_dtype='int8' needs the flat-segment "
+                    "layouts (fused/overlap); per_node psums per leaf "
+                    "inside the forward")
+            if self.dp_merge != "psum":
+                raise ValueError(
+                    "sketch_wire_dtype='int8' is defined for the psum "
+                    "merge; the reduce_scatter tiles stay f32")
+        if self.ring_wire:
+            if self.dp_axis_name is None or \
+                    not isinstance(self.dp_axis_name, str):
+                raise ValueError(
+                    "ring_wire needs a single-axis dp_axis_name (the "
+                    "remote-DMA ring runs on one logical ring)")
+            if self.dp_collective == "per_node":
+                raise ValueError(
+                    "ring_wire needs the flat-segment layouts "
+                    "(fused/overlap)")
+            if self.dp_merge != "psum":
+                raise ValueError(
+                    "ring_wire replaces the psum merge; "
+                    "dp_merge='reduce_scatter' keeps its own schedule")
 
 
 @jax.tree_util.register_dataclass
@@ -149,6 +207,12 @@ def init_train_state(key, cfg, run: RunConfig) -> TrainState:
         opt["err"] = init_error_feedback(params, run.compression)
     n_tokens = run.global_batch // run.dp_workers * run.seq_len
     sketch = init_lm_sketch_state(ks, cfg, run.sketch, n_tokens)
+    if sketch is not None and run.sketch_wire_dtype == "int8":
+        # per-worker ledger of the int8 sketch wire's outstanding
+        # quantization residual (zero at init: nothing transmitted yet)
+        from repro.sketches.wire import tree_increment_leaves
+        opt["sketch_err"] = jax.tree.map(
+            jnp.zeros_like, tree_increment_leaves(sketch))
     if sketch is not None and run.dp_merge == "reduce_scatter":
         # ZeRO-style layout from step 0: every worker's shard of the
         # all-zero init triple is zero, so index 0 IS each worker's

@@ -3,6 +3,7 @@ AdamW + NaN guard + sketch monitoring, all inside one XLA program."""
 from __future__ import annotations
 
 from functools import partial
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -30,18 +31,49 @@ def cross_entropy(logits, labels, z_weight: float = 0.0):
     return ce
 
 
+class _WireOut(NamedTuple):
+    """Post-merge products of the flat-segment wire exchange."""
+    loss: Any
+    ce: Any
+    aux: Any
+    grads: Any        # gradient pytree — None while a p2 round is
+    #                   pending (`p2` then holds the deferred exchange)
+    err: Any          # new gradient-compression error feedback, or None
+    sketch: Any       # merged sketch increments (fused layout), or None
+    sketch_err: Any   # new int8 sketch-wire residual ledger, or None
+    p2: Any           # (local, merged_cs, workers) when the p2 round
+    #                   is deferred to overlap the optimizer, else None
+
+
+# Segments that must stay EXACT f32 on the wire when the int8 ring
+# carries the sketch increments: worker counters and loss scalars (a
+# shared per-chunk scale would corrupt them outright), the count-sketch
+# table (its int8 wire has its OWN per-row grid + error feedback — see
+# optim/sketched_sgd.py), and dense grads (no residual ledger of their
+# own). They ride one small f32 psum alongside the ring.
+_RING_EXEMPT = ("n", "scalars", "cs_table", "grads")
+
+
 def _psum_wire_segments(run, ax, err_state, grads, loss, ce, aux, *,
-                        sketch_leaves=None, name):
+                        sketch_leaves=None, sketch_err=None,
+                        p2_defer=False, name):
     """THE flat-segment gradient-wire exchange shared by the fused and
     overlap layouts (DESIGN.md §9/§10): pack the gradient wire (the
     count-sketch table — int8-grid values under wire_dtype="int8" — or
     the dense grads), the scalar metrics and a constant-1 worker
     counter — plus, for the fused single-collective layout, every
     sketch node's local increments (``sketch_leaves``) — into ONE flat
-    psum, and post-process the merge.
+    psum, and post-process the merge. Under ``run.ring_wire`` the
+    buffer crosses the Pallas remote-DMA ring instead (DESIGN.md §14);
+    under ``run.sketch_wire_dtype="int8"`` the sketch increments are
+    quantized for the wire with the rounding residual folded into the
+    per-worker ``sketch_err`` ledger (mass catch-up: the wire carries
+    inc + last step's residual).
 
-    Returns ``(loss, ce, aux, grads, new_err, merged_sketch)`` with
-    ``merged_sketch`` None unless ``sketch_leaves`` rode the buffer.
+    With ``p2_defer`` (countsketch, cs_p2 > 0) the p2 exact-value round
+    is NOT issued here: the un-finished exchange comes back in ``p2``
+    so the caller can overlap it with the optimizer update.
+
     Segment offsets are static (memoized at NodeTree init); the
     collective count is asserted by the differential tier and the bench
     gate."""
@@ -54,8 +86,25 @@ def _psum_wire_segments(run, ax, err_state, grads, loss, ce, aux, *,
         "n": jnp.ones((), jnp.float32),
         "scalars": jnp.stack([loss, ce, aux]),
     }
+    new_sketch_err = None
     if sketch_leaves is not None:
-        segments["sketch"] = sketch_leaves
+        if run.sketch_wire_dtype == "int8":
+            # mass catch-up (DESIGN.md §14): this step's wire carries
+            # inc + the residual last step's quantization left behind,
+            # so the merged EMA trajectory telescopes to f32 up to one
+            # outstanding residual per worker
+            from repro.sketches.wire import fake_quantize_tree
+            inc_adj = jax.tree.map(jnp.add, sketch_leaves, sketch_err)
+            if run.ring_wire:
+                # the int8 ring quantizes per hop itself — ship the
+                # adjusted increments raw; its ledger comes back from
+                # the collective below
+                segments["sketch"] = inc_adj
+            else:
+                dhat, new_sketch_err = fake_quantize_tree(inc_adj)
+                segments["sketch"] = dhat
+        else:
+            segments["sketch"] = sketch_leaves
     local = None
     if cs_mode:
         from repro.optim.sketched_sgd import countsketch_local
@@ -77,25 +126,42 @@ def _psum_wire_segments(run, ax, err_state, grads, loss, ce, aux, *,
             raise ValueError(
                 f"early-keyed segments {sorted(early)} on the late "
                 f"wire psum — they must ride the early collective")
-    merged = psum_flat_segments(segments, ax, name=name)
+    if run.ring_wire and run.sketch_wire_dtype == "int8" \
+            and "sketch" in segments:
+        merged, ring_res = psum_flat_segments(
+            segments, ax, name=name, ring="int8",
+            ring_workers=run.dp_workers, ring_exempt=_RING_EXEMPT)
+        new_sketch_err = ring_res["sketch"]
+    elif run.ring_wire:
+        merged = psum_flat_segments(
+            segments, ax, name=name, ring="fp32",
+            ring_workers=run.dp_workers)
+    else:
+        merged = psum_flat_segments(segments, ax, name=name)
     workers = merged["n"]
     loss = merged["scalars"][0] / workers
     ce = merged["scalars"][1] / workers
     aux = merged["scalars"][2] / workers
     new_err = None
+    p2 = None
     if cs_mode:
         import dataclasses as _dc
 
         from repro.optim.sketched_sgd import countsketch_finish
         merged_cs = _dc.replace(local.cs, table=merged["cs_table"])
-        grads, new_err, _ = countsketch_finish(
-            local, merged_cs, workers=workers, axis_name=ax)
+        if p2_defer and run.compression.cs_p2 > 0:
+            grads = None
+            p2 = (local, merged_cs, workers)
+        else:
+            grads, new_err, _ = countsketch_finish(
+                local, merged_cs, workers=workers, axis_name=ax)
     else:
         grads = jax.tree.map(lambda g: g / workers, merged["grads"])
         if run.compression is not None:
             grads, new_err, _ = compress_grads(
                 grads, err_state, run.compression)
-    return loss, ce, aux, grads, new_err, merged.get("sketch")
+    return _WireOut(loss, ce, aux, grads, new_err,
+                    merged.get("sketch"), new_sketch_err, p2)
 
 
 def _apply_merged_increments(old_tree, inc_tree, merged_leaves, beta):
@@ -176,6 +242,14 @@ def make_train_step(cfg: ArchConfig, run: RunConfig):
         run.sketch, dp_defer=True, dp_axis=None)
     premerged_st = dataclasses.replace(
         run.sketch, dp_defer=False, dp_axis=None, dp_premerged=True)
+    # p2-overlap (DESIGN.md §14): on the flat-wire layouts the p2
+    # exact-value round is deferred past the wire merge and hidden
+    # behind the zero-grad dense optimizer pass — bitwise the serial
+    # nominate -> psum -> complete -> adamw composition. per_node and
+    # the rs layout keep the serial reference.
+    p2o = run.p2_overlap and run.compression is not None and \
+        run.compression.mode == "countsketch" and \
+        run.compression.cs_p2 > 0 and (fused or overlap)
 
     def train_step(state: TrainState, batch):
         tokens = constrain(batch["tokens"], "batch", "none")
@@ -191,6 +265,8 @@ def make_train_step(cfg: ArchConfig, run: RunConfig):
             return loss, (out["sketch_state"], ce, out["aux"])
 
         new_err = None
+        new_sketch_err = None
+        p2 = None
         merged_tree = None
         if rs:
             # ---- REDUCE-SCATTER MERGE (DESIGN.md §12) ---------------
@@ -249,9 +325,11 @@ def make_train_step(cfg: ArchConfig, run: RunConfig):
 
                 (loss, (ce, aux)), grads = jax.value_and_grad(
                     rs_loss_fn, has_aux=True)(state.params, merged_tree)
-            loss, ce, aux, grads, new_err, _ = _psum_wire_segments(
+            w = _psum_wire_segments(
                 run, ax, state.opt.get("err"), grads, loss, ce, aux,
                 name="rs_grad")
+            loss, ce, aux, grads, new_err = \
+                w.loss, w.ce, w.aux, w.grads, w.err
         elif overlap:
             # ---- TWO-PHASE OVERLAP SCHEDULE (DESIGN.md §10) ---------
             # Phase 1: a forward sweep emits every node's LOCAL EMA
@@ -272,9 +350,33 @@ def make_train_step(cfg: ArchConfig, run: RunConfig):
                 sketch_state=state.sketch, settings=defer_st,
                 patch_embeds=batch.get("patch_embeds"))
             inc_tree = inc_out["sketch_state"]
-            merged_inc = psum_flat_segments(
-                tree_increment_leaves(inc_tree), ax,
-                name="overlap_sketch", barrier=True)
+            inc_leaves = tree_increment_leaves(inc_tree)
+            if run.sketch_wire_dtype == "int8":
+                # the early buffer is PURE sketch increments — mass
+                # catch-up applies to the whole tree (wire carries
+                # inc + last step's quantization residual)
+                inc_adj = jax.tree.map(jnp.add, inc_leaves,
+                                       state.opt["sketch_err"])
+                if run.ring_wire:
+                    # whole-buffer int8 ring: the ring quantizes per
+                    # hop; its residual ledger IS the new sketch_err
+                    merged_inc, new_sketch_err = psum_flat_segments(
+                        inc_adj, ax, name="overlap_sketch",
+                        barrier=True, ring="int8",
+                        ring_workers=run.dp_workers)
+                else:
+                    from repro.sketches.wire import fake_quantize_tree
+                    dhat, new_sketch_err = fake_quantize_tree(inc_adj)
+                    merged_inc = psum_flat_segments(
+                        dhat, ax, name="overlap_sketch", barrier=True)
+            elif run.ring_wire:
+                merged_inc = psum_flat_segments(
+                    inc_leaves, ax, name="overlap_sketch",
+                    barrier=True, ring="fp32",
+                    ring_workers=run.dp_workers)
+            else:
+                merged_inc = psum_flat_segments(
+                    inc_leaves, ax, name="overlap_sketch", barrier=True)
             new_sketch = _apply_merged_increments(
                 state.sketch, inc_tree, merged_inc, run.sketch.beta)
 
@@ -297,9 +399,11 @@ def make_train_step(cfg: ArchConfig, run: RunConfig):
             # Late collective: gradient wire + metrics + worker counter
             # — the same segments the fused layout packs, minus the
             # sketch increments that already rode the early psum.
-            loss, ce, aux, grads, new_err, _ = _psum_wire_segments(
+            w = _psum_wire_segments(
                 run, ax, state.opt.get("err"), grads, loss, ce, aux,
-                name="overlap_grad")
+                p2_defer=p2o, name="overlap_grad")
+            loss, ce, aux, grads, new_err, p2 = \
+                w.loss, w.ce, w.aux, w.grads, w.err, w.p2
         elif fused:
             (loss, (new_sketch, ce, aux)), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(state.params, state.sketch)
@@ -311,10 +415,14 @@ def make_train_step(cfg: ArchConfig, run: RunConfig):
 
             sketch_leaves = tree_increment_leaves(new_sketch) \
                 if new_sketch is not None else None
+            w = _psum_wire_segments(
+                run, ax, state.opt.get("err"), grads, loss, ce,
+                aux, sketch_leaves=sketch_leaves,
+                sketch_err=state.opt.get("sketch_err"),
+                p2_defer=p2o, name="fused_step")
             loss, ce, aux, grads, new_err, merged_sketch = \
-                _psum_wire_segments(
-                    run, ax, state.opt.get("err"), grads, loss, ce,
-                    aux, sketch_leaves=sketch_leaves, name="fused_step")
+                w.loss, w.ce, w.aux, w.grads, w.err, w.sketch
+            new_sketch_err, p2 = w.sketch_err, w.p2
             if new_sketch is not None:
                 new_sketch = _apply_merged_increments(
                     state.sketch, new_sketch, merged_sketch,
@@ -369,11 +477,41 @@ def make_train_step(cfg: ArchConfig, run: RunConfig):
         lr_scale = warmup_cosine(
             state.step, warmup_steps=run.warmup_steps,
             total_steps=run.total_steps)
-        opt_in = {k: v for k, v in state.opt.items() if k != "err"}
-        new_params, new_opt, om = adamw_update(
-            state.params, grads, opt_in, run.optimizer, lr_scale)
+        opt_in = {k: v for k, v in state.opt.items()
+                  if k not in ("err", "sketch_err")}
+        if p2 is not None:
+            # ---- OVERLAPPED p2 ROUND (DESIGN.md §14) ----------------
+            # Issue the p2 exact-value all-reduce, run the dense AdamW
+            # pass on ZERO grads while it is in flight (no data
+            # dependency on the collective), then correct exactly the
+            # k winning coordinates from the pre-update state —
+            # bitwise the serial finish + adamw_update composition
+            # (the differential tier asserts it). The barrier fences
+            # the p2 payload AND the optimizer inputs at one issue
+            # point, so XLA can neither sink the collective past the
+            # update nor fold it into the wire merge.
+            from repro.optim.adamw import adamw_sparse_update
+            from repro.optim.sketched_sgd import (
+                countsketch_complete, countsketch_nominate,
+            )
+            from repro.parallel.collectives import traced_psum
+            local, merged_cs, wk = p2
+            cand, exact = countsketch_nominate(local, merged_cs)
+            exact, params_in, opt_in = jax.lax.optimization_barrier(
+                (exact, state.params, opt_in))
+            exact = traced_psum(exact, ax, name="cs_p2_values")
+            update, sel_idx, _, new_err, _ = countsketch_complete(
+                local, merged_cs, cand, exact, workers=wk)
+            new_params, new_opt, om = adamw_sparse_update(
+                params_in, opt_in, run.optimizer, lr_scale,
+                update=update, idx=sel_idx, unravel=local.unravel)
+        else:
+            new_params, new_opt, om = adamw_update(
+                state.params, grads, opt_in, run.optimizer, lr_scale)
         if new_err is not None:
             new_opt["err"] = new_err
+        if new_sketch_err is not None:
+            new_opt["sketch_err"] = new_sketch_err
 
         good = jnp.isfinite(loss) & jnp.isfinite(om["grad_norm"])
         pick = lambda n, o: jax.tree.map(
@@ -433,7 +571,8 @@ def collective_plan(cfg: ArchConfig, run: RunConfig,
     label = "+".join(ax) if isinstance(ax, tuple) else ax
     mesh = dict(mesh_shape) if mesh_shape else {}
 
-    def _plan(layout, wire_bytes, *, ar=0, rs=0, ag=0):
+    def _plan(layout, wire_bytes, *, ar=0, rs=0, ag=0,
+              p2_overlap=False):
         per_axis = {} if ax is None else {label: ar + rs + ag}
         dp_members = set(ax if isinstance(ax, tuple) else (ax,)) \
             if ax is not None else set()
@@ -444,7 +583,13 @@ def collective_plan(cfg: ArchConfig, run: RunConfig,
                 "wire_bytes": wire_bytes, "mesh": mesh,
                 "by_kind": {"all_reduce": ar, "reduce_scatter": rs,
                             "all_gather": ag},
-                "per_axis": per_axis}
+                "per_axis": per_axis,
+                # DESIGN.md §14: collective COUNTS are unchanged by the
+                # quantized/overlapped wire — these flags record which
+                # of them ride the ring / hide behind the optimizer
+                "ring_wire": run.ring_wire,
+                "sketch_wire_dtype": run.sketch_wire_dtype,
+                "p2_overlap": p2_overlap}
 
     if ax is None:
         return _plan("single_program", 0)
@@ -456,6 +601,8 @@ def collective_plan(cfg: ArchConfig, run: RunConfig,
     cs = run.compression is not None and \
         run.compression.mode == "countsketch"
     cs_p2 = 1 if cs and run.compression.cs_p2 > 0 else 0
+    p2o = run.p2_overlap and cs_p2 > 0 and not rs and \
+        run.dp_collective in ("fused", "overlap")
 
     if num_params is None:
         from repro.models.transformer import abstract_params
@@ -466,9 +613,16 @@ def collective_plan(cfg: ArchConfig, run: RunConfig,
         num_leaves = 1
 
     # sketch increments that cross the wire: 3 (L, w, k_max) f32 leaves
-    # per node — identical payload in all three sketching layouts
-    sketch_bytes = sum(3 * cfg.num_layers * w * run.sketch.k_max * 4
-                       for w in groups.values())
+    # per node — identical payload in all three sketching layouts. The
+    # int8 wire ships 1 byte per element + one f32 scale per (L, w) row
+    # (sketches/wire.int8_segment_bytes is the per-spec source of truth)
+    if run.sketch_wire_dtype == "int8":
+        sketch_bytes = sum(
+            3 * cfg.num_layers * w * (run.sketch.k_max * 1 + 4)
+            for w in groups.values())
+    else:
+        sketch_bytes = sum(3 * cfg.num_layers * w * run.sketch.k_max * 4
+                           for w in groups.values())
     grad_bytes = compressed_bytes(num_params, run.compression) if cs \
         else num_params * 4
 
@@ -484,11 +638,11 @@ def collective_plan(cfg: ArchConfig, run: RunConfig,
     if fused:
         # ONE flat psum: increments + grad wire + 3 scalars + counter
         return _plan("fused", sketch_bytes + grad_bytes + 16,
-                     ar=1 + cs_p2)
+                     ar=1 + cs_p2, p2_overlap=p2o)
     if overlap:
         # early sketch psum + late wire psum (+ optional p2 round)
         return _plan("overlap", sketch_bytes + grad_bytes + 16,
-                     ar=2 + cs_p2)
+                     ar=2 + cs_p2, p2_overlap=p2o)
     # per_node reference layout: 3 psums (x/y/z) per node per layer
     # inside the forward, 3 scalar pmeans, and the grad wire — one
     # table psum under countsketch, else a dense pmean per param leaf

@@ -34,6 +34,12 @@ def pytest_configure(config):
         "(overlap vs per_node DP layouts) — runs per PR in its own CI "
         "job; the full differential suite stays in the nightly slow "
         "tier")
+    config.addinivalue_line(
+        "markers",
+        "ring_differential: Pallas ring-allreduce vs jnp-oracle "
+        "differential tier (tests/test_ring.py) — reduced W∈{2,4} "
+        "subset per PR in the `ring-differential` CI job, full W=8 "
+        "nightly; excluded from tier1-fast")
 
 
 @pytest.fixture

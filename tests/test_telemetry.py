@@ -165,7 +165,9 @@ class TestCollectivePlan:
                         "wire_bytes": 0, "mesh": {},
                         "by_kind": {"all_reduce": 0, "reduce_scatter": 0,
                                     "all_gather": 0},
-                        "per_axis": {}}
+                        "per_axis": {},
+                        "ring_wire": False, "sketch_wire_dtype": "fp32",
+                        "p2_overlap": False}
 
         fused = collective_plan(cfg, self._run(
             dp_axis_name="data", dp_collective="fused"))
