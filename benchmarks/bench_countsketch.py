@@ -654,6 +654,73 @@ def bench_int8_e2e_gate():
     return [tuple(r.split(",")[1:]) for r in rows]
 
 
+def bench_moe_gate():
+    """ISSUE 10 acceptance: the MoE family's per-expert sketch nodes
+    under W=4 DP. The (L, E, d, k) expert stacks stay per-expert-linear,
+    so the overlap two-phase merge is BITWISE the per_node psum (qwen3-
+    moe CONSUMES attn_o, so overlap — not fused — is the bitwise layout;
+    fused keeps the documented one-step consumption lag). The plan
+    numbers come from `collective_plan`'s registry-spec accounting
+    (NodeSpec stack entries, not the dense group x layer product)."""
+    rows = _run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.configs import get_arch, reduced
+        from repro.data.synthetic import lm_batch
+        from repro.models.transformer import SketchSettings
+        from repro.train.state import RunConfig, init_train_state
+        from repro.train.step import collective_plan, make_dp_train_step
+
+        mesh = Mesh(np.array(jax.devices()), ("data",))
+        cfg = reduced(get_arch("qwen3-moe-30b-a3b"))
+        key = jax.random.PRNGKey(0)
+        states = {}
+        for mode in ("per_node", "overlap", "fused"):
+            run = RunConfig(seq_len=16, global_batch=8,
+                            dp_axis_name="data", dp_workers=4,
+                            dp_collective=mode,
+                            warmup_steps=1, total_steps=40,
+                            sketch=SketchSettings(enabled=True, k_max=9,
+                                                  beta=0.9,
+                                                  recon_mode="fast"))
+            state = init_train_state(key, cfg, run)
+            state = jax.device_put(state, NamedSharding(mesh, P()))
+            step = jax.jit(make_dp_train_step(cfg, run, mesh))
+            for s in range(3):
+                tok, lab = lm_batch(jax.random.fold_in(key, s), 8, 16,
+                                    cfg.vocab_size)
+                state, m = step(state, {"tokens": tok, "labels": lab})
+            states[mode] = (state, m, run)
+        for a, b in zip(jax.tree.leaves(states["per_node"][0].sketch),
+                        jax.tree.leaves(states["overlap"][0].sketch)):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), \\
+                "MoE sketch trees diverged across DP layouts"
+        gap = abs(float(states["per_node"][1]["loss"]) -
+                  float(states["overlap"][1]["loss"]))
+        lag = abs(float(states["per_node"][1]["loss"]) -
+                  float(states["fused"][1]["loss"]))
+        plan_p = collective_plan(cfg, states["per_node"][2])
+        plan_o = collective_plan(cfg, states["overlap"][2])
+        print(f"ROW,moe_fused_collectives,"
+              f"{collective_plan(cfg, states['fused'][2])['collectives']},"
+              f"one flat psum for the whole expert stack")
+        print(f"ROW,moe_per_node_collectives,{plan_p['collectives']},"
+              f"one per stack entry (experts x layers) + grads")
+        print(f"ROW,moe_overlap_wire_bytes,{plan_o['wire_bytes']},"
+              f"registry-spec accounting incl (L,E,d,k) stacks")
+        print(f"ROW,moe_loss_gap,{gap:.6f},"
+              f"overlap vs per_node after 3 steps (bitwise trees)")
+        print(f"ROW,moe_fused_lag_gap,{lag:.6f},"
+              f"fused one-step consumption lag, tolerance 0.05")
+        assert plan_o["collectives"] < plan_p["collectives"]
+        assert gap == 0.0, gap
+        assert lag <= 0.05, lag
+        print("ROW,moe_gate,PASS,per-expert nodes bitwise under the "
+              "overlap merge; fused lag within tolerance")
+    """)
+    return [tuple(r.split(",")[1:]) for r in rows]
+
+
 def bench_mesh_gate():
     """ISSUE 7 acceptance, structural half. No training and no
     subprocess — `collective_plan` is the same trace-free accounting the
@@ -743,6 +810,8 @@ RELATIVE_GATES = (
     "mesh_rs_model_axis_collectives",
     "mesh_rs_wire_overhead",
     "mesh_per_worker_mem_ratio_w8",
+    "moe_fused_collectives",
+    "moe_overlap_wire_bytes",
 )
 REGRESSION_TOL = 0.10
 
@@ -903,6 +972,16 @@ def main(argv=None):
         mesh_rows, "rs_wire_overhead_vs_fused")
     metrics["mesh_per_worker_mem_ratio_w8"] = _rows_value(
         mesh_rows, "per_worker_mem_ratio_w8")
+
+    moe_rows = bench_moe_gate()
+    for row in moe_rows:
+        print(",".join(("moe",) + row))
+    metrics["moe_fused_collectives"] = _rows_value(
+        moe_rows, "moe_fused_collectives")
+    metrics["moe_overlap_wire_bytes"] = _rows_value(
+        moe_rows, "moe_overlap_wire_bytes")
+    metrics["moe_loss_gap"] = _rows_value(moe_rows, "moe_loss_gap")
+    metrics["moe_fused_lag_gap"] = _rows_value(moe_rows, "moe_fused_lag_gap")
 
     if args.json:
         write_bench_json(args.json, metrics)

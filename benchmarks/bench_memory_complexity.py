@@ -108,6 +108,66 @@ def per_worker_table(dp_shards=(1, 2, 4, 8), proj_kind="gaussian"):
     return rows
 
 
+def family_table(k_max: int = 9, num_tokens: int = 32):
+    """DESIGN.md §15 node families: registry-resolved NodeSpec
+    accounting vs the live NodeTree, per arch and proj kind. One row
+    per (arch, proj_kind); the closed forms are exact — triple bytes
+    from the spec stack entries, dense projections 3*T*k*4, psparse
+    projections the 48-byte coefficient constant."""
+    import dataclasses as _dc
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_arch, reduced
+    from repro.configs.paper import CIFAR_CONV
+    from repro.sketches import init_node_tree, node_paths, \
+        tree_memory_bytes
+    from repro.sketches.registry import family_for, node_specs_for
+
+    def _entries(spec):
+        if spec.layers is None:
+            return 1
+        if isinstance(spec.layers, tuple):
+            n = 1
+            for s in spec.layers:
+                n *= s
+            return n
+        return spec.layers
+
+    cases = [reduced(get_arch("qwen3-moe-30b-a3b")),
+             reduced(get_arch("xlstm-1.3b")),
+             reduced(get_arch("recurrentgemma-2b")),
+             _dc.replace(CIFAR_CONV, hw=8, batch_size=4)]
+    rows = []
+    for cfg in cases:
+        specs = node_specs_for(cfg)
+        nt = getattr(cfg, "num_tokens", num_tokens)
+        entries = sum(_entries(s) for s in specs.values())
+        triple_closed = sum(3 * _entries(s) * s.width * k_max * 4
+                            for s in specs.values())
+        live = {}
+        proj_bytes = {}
+        for kind in ("gaussian", "psparse"):
+            tree = init_node_tree(jax.random.PRNGKey(0), specs, nt,
+                                  k_max, proj_kind=kind,
+                                  proj_density=0.1)
+            assert len(node_paths(tree)) == entries
+            live[kind] = tree_memory_bytes(tree)
+            proj_bytes[kind] = sum(
+                l.size * jnp.dtype(l.dtype).itemsize
+                for l in jax.tree.leaves(tree.proj))
+        rows.append({"arch": cfg.name, "family": family_for(cfg),
+                     "nodes": len(specs), "entries": entries,
+                     "num_tokens": nt,
+                     "triple_bytes": triple_closed,
+                     "proj_dense_bytes": proj_bytes["gaussian"],
+                     "proj_psparse_bytes": proj_bytes["psparse"],
+                     "live_gaussian": live["gaussian"],
+                     "live_psparse": live["psparse"]})
+    return rows
+
+
 def gate():
     """Nightly CI gate (ISSUE 3): the sketch state must stay an order of
     magnitude below what it replaces, in every regime, INCLUDING the
@@ -193,6 +253,21 @@ def gate():
     assert len(tail_drops) == 1 and tail_drops.pop() > 0, (
         "psparse replicated-tail saving must be a positive constant "
         "independent of dp_shards")
+    # DESIGN.md §15 families (ISSUE 10): for EVERY family — per-expert
+    # MoE stacks, recurrent carries, conv stages — the psparse
+    # projection term is EXACTLY the 48-byte constant and the dense
+    # projection term exactly 3*T*k*4, so switching proj_kind saves
+    # precisely their difference on the live tree.
+    for r in family_table():
+        assert r["proj_psparse_bytes"] == PSPARSE_PROJ_BYTES, (
+            f"psparse projection bytes not the 48 B constant for "
+            f"{r['arch']}: {r}")
+        dense = 3 * r["num_tokens"] * 9 * 4
+        assert r["proj_dense_bytes"] == dense, (
+            f"dense projection bytes drifted for {r['arch']}: {r}")
+        assert r["live_gaussian"] - r["live_psparse"] == \
+            dense - PSPARSE_PROJ_BYTES, (
+                f"proj_kind switch saving drifted for {r['arch']}: {r}")
     print("gate,pass")
 
 
@@ -216,6 +291,13 @@ def main():
               f"{r['proj_dense_mib_dev']:.1f},"
               f"{r['proj_psparse_bytes']},"
               f"{r['sketch_psparse_mib_dev']:.1f}")
+    print("## node families (DESIGN.md 15: reduced configs, k_max=9)")
+    print("arch,family,nodes,entries,triple_bytes,proj_dense_bytes,"
+          "proj_psparse_bytes")
+    for r in family_table():
+        print(f"{r['arch']},{r['family']},{r['nodes']},{r['entries']},"
+              f"{r['triple_bytes']},{r['proj_dense_bytes']},"
+              f"{r['proj_psparse_bytes']}")
     for kind in ("gaussian", "psparse"):
         print(f"## per-worker sketch state under "
               f"dp_merge=reduce_scatter (reduced tinyllama tree, "

@@ -54,6 +54,32 @@ CIFAR_HYBRID = MLPConfig(
     activation="relu",
 )
 
+@dataclasses.dataclass(frozen=True)
+class ConvConfig:
+    """CIFAR conv stem trained with XConv-style sketched conv backprop
+    (Chakrabarti & Moseley, arXiv:2106.06998): each conv is im2col-
+    factored into a (B*P, kh*kw*Cin) @ (kh*kw*Cin, Cout) matmul so the
+    sketched_matmul custom_vjp is reused unmodified (DESIGN.md §15)."""
+    name: str = "cifar_conv"
+    hw: int = 32                     # input height = width
+    channels: int = 3
+    d_out: int = 10
+    batch_size: int = 32
+    learning_rate: float = 1e-3
+    dtype: Any = jnp.float32
+    variant: str = "sketched_fixed"  # standard | sketched_fixed
+    sketch: SketchConfig = SketchConfig()
+
+    @property
+    def num_tokens(self) -> int:
+        """Sketch-tree row binding: the first conv stage's im2col rows
+        (B * hw^2) — later stages have fewer rows and zero-pad up."""
+        return self.batch_size * self.hw * self.hw
+
+
+CIFAR_CONV = ConvConfig()
+
+
 # §5.1.2 PINN: four-layer, 50-d hidden, 2D Poisson on [0,1]^2
 PINN_POISSON = MLPConfig(
     name="pinn_poisson",

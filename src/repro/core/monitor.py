@@ -69,7 +69,12 @@ def tree_metrics(tree) -> Array:
         if node.x.ndim == 2:
             mets.append(layer_metrics(node.x, node.y, node.z)[None])
         else:
-            mets.append(stack_metrics(node.x, node.y, node.z))
+            # multi-dim stacks (per-expert nodes, (L, E, d, k)) flatten
+            # to one row per stack entry — same row-major order as
+            # ``node_paths`` ("block3/expert_in/7")
+            x, y, z = (a.reshape((-1,) + a.shape[-2:])
+                       for a in (node.x, node.y, node.z))
+            mets.append(stack_metrics(x, y, z))
     return jnp.concatenate(mets, 0)
 
 

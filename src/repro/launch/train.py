@@ -19,6 +19,16 @@ residuals are per-worker, merged mass-exactly at checkpoint time):
         --arch tinyllama-1.1b --reduced --dp 4 --compress countsketch \
         --cs-p2 2 --steps 20
 
+Sketching beyond the dense LM (DESIGN.md §15) needs no extra flags —
+the NodeSpec registry (`sketches.registry.node_specs_for`) resolves the
+arch's node families, so MoE (per-expert nodes, expert-axis sharded)
+and recurrent archs (mLSTM / RG-LRU carry nodes) launch identically:
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch qwen3-moe-30b-a3b --reduced --dp 4 --steps 20
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch recurrentgemma-2b --reduced --proj-kind psparse --steps 20
+
 Fault tolerance: checkpoint/restart + straggler watchdog + NaN rewind
 live in train/loop.py; elastic restarts (different mesh) reshard through
 checkpoint/checkpointer.py.
@@ -37,7 +47,7 @@ from repro.models.transformer import SketchSettings
 from repro.optim.adamw import AdamWConfig
 from repro.parallel.sharding import use_rules
 from repro.train.loop import LoopConfig, run_training_sharded
-from repro.train.state import RunConfig
+from repro.train.state import ConfigError, RunConfig
 
 logging.basicConfig(level=logging.INFO,
                     format="%(asctime)s %(name)s %(message)s")
@@ -147,28 +157,35 @@ def main():
     dp_axis = None
     if args.dp:
         dp_axis = ("pod", "data") if args.dp_pods else "data"
-    run = RunConfig(
-        seq_len=seq, global_batch=batch,
-        optimizer=AdamWConfig(lr=args.lr),
-        warmup_steps=min(20, args.steps // 5 + 1), total_steps=args.steps,
-        sketch=SketchSettings(enabled=not args.no_sketch, k_max=17,
-                              proj_kind=args.proj_kind,
-                              proj_density=args.proj_density),
-        compression=compression,
-        dp_axis_name=dp_axis,
-        dp_workers=args.dp if args.dp else 1,
-        dp_collective=args.dp_collective,
-        dp_merge=args.dp_merge,
-        # --wire-dtype int8 means int8 END-TO-END: sketch increments
-        # (here) and the cs table (CompressionConfig above). The
-        # sketch wire only quantizes a cross-worker exchange, so it
-        # stays fp32 without a dp axis / under per_node.
-        sketch_wire_dtype=args.wire_dtype if (
-            dp_axis is not None and not args.no_sketch and
-            args.dp_collective != "per_node" and
-            args.dp_merge == "psum") else "fp32",
-        ring_wire=args.ring_wire,
-    )
+    try:
+        run = RunConfig(
+            seq_len=seq, global_batch=batch,
+            optimizer=AdamWConfig(lr=args.lr),
+            warmup_steps=min(20, args.steps // 5 + 1),
+            total_steps=args.steps,
+            sketch=SketchSettings(enabled=not args.no_sketch, k_max=17,
+                                  proj_kind=args.proj_kind,
+                                  proj_density=args.proj_density),
+            compression=compression,
+            dp_axis_name=dp_axis,
+            dp_workers=args.dp if args.dp else 1,
+            dp_collective=args.dp_collective,
+            dp_merge=args.dp_merge,
+            # --wire-dtype int8 means int8 END-TO-END: sketch increments
+            # (here) and the cs table (CompressionConfig above). The
+            # sketch wire only quantizes a cross-worker exchange, so it
+            # stays fp32 without a dp axis / under per_node.
+            sketch_wire_dtype=args.wire_dtype if (
+                dp_axis is not None and not args.no_sketch and
+                args.dp_collective != "per_node" and
+                args.dp_merge == "psum") else "fp32",
+            ring_wire=args.ring_wire,
+        )
+    except ConfigError as e:
+        # the RunConfig compatibility matrix rejected the flag
+        # combination — one structured error naming the two conflicting
+        # fields (train/state.py, DESIGN.md §15)
+        raise SystemExit(f"invalid flag combination: {e}")
     loop = LoopConfig(num_steps=args.steps, ckpt_every=args.ckpt_every,
                       ckpt_dir=args.ckpt_dir, log_every=10)
 

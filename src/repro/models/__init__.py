@@ -1,4 +1,5 @@
 from repro.models.transformer import (
     forward, init_params, abstract_params, init_cache, abstract_cache,
     init_lm_sketch_state, lm_node_specs, SketchSettings, sketch_groups,
+    transformer_node_specs,
 )

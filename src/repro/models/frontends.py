@@ -21,3 +21,24 @@ import jax.numpy as jnp
 def fake_patch_embeds(key, batch: int, num_tokens: int, d_model: int,
                       dtype=jnp.bfloat16):
     return jax.random.normal(key, (batch, num_tokens, d_model), dtype) * 0.02
+
+
+def fake_cifar_batch(key, cfg):
+    """Deterministic stand-in CIFAR batch for the sketched-conv family
+    (DESIGN.md §15): (images (B, hw, hw, C), labels (B,)).
+
+    Images are class prototypes + noise (mirroring the MLP trainer's
+    `class_prototypes` batches): the activation distribution is then
+    stationary across steps, which the EMA-sketch premise requires —
+    iid-noise images would leave the sketch permanently lagging the
+    current batch and the loss-parity baselines meaningless. The
+    prototype bank is a pure function of a fixed key, identical every
+    call."""
+    protos = jax.random.normal(
+        jax.random.PRNGKey(7),
+        (cfg.d_out, cfg.hw, cfg.hw, cfg.channels), cfg.dtype)
+    kx, ky = jax.random.split(key)
+    labels = jax.random.randint(ky, (cfg.batch_size,), 0, cfg.d_out)
+    noise = jax.random.normal(
+        kx, (cfg.batch_size, cfg.hw, cfg.hw, cfg.channels), cfg.dtype)
+    return protos[labels] + 0.5 * noise, labels

@@ -16,15 +16,40 @@ import jax.numpy as jnp
 
 from repro.configs.paper import MLPConfig
 from repro.sketches import NodeSpec
+from repro.sketches.registry import register_node_specs
 
 Array = jax.Array
 
 
-def mlp_node_specs(cfg: MLPConfig) -> dict[str, NodeSpec]:
+def _mlp_node_specs(cfg: MLPConfig) -> dict[str, NodeSpec]:
     """NodeTree registry for the paper MLPs: one stacked node over the
     hidden activations (node l feeds linear layer l+1 — DESIGN.md §1)."""
     return {"hidden": NodeSpec(width=cfg.d_hidden,
                                layers=cfg.num_hidden_layers)}
+
+
+def conv_node_specs(cfg) -> dict[str, NodeSpec]:
+    """NodeTree registry for the sketched conv stem (DESIGN.md §15):
+    one node per conv stage, its width the im2col patch width
+    kh*kw*Cin — the feature dim of the factored matmul each stage's
+    sketched_matmul consumes."""
+    return {"conv1": NodeSpec(width=3 * 3 * cfg.channels),
+            "conv2": NodeSpec(width=3 * 3 * 8)}
+
+
+register_node_specs("mlp", _mlp_node_specs)
+register_node_specs("conv", conv_node_specs)
+
+
+def mlp_node_specs(cfg: MLPConfig) -> dict[str, NodeSpec]:
+    """Deprecated: resolve specs via ``sketches.registry.node_specs_for``
+    (one-release shim, DESIGN.md §15)."""
+    import warnings
+    warnings.warn(
+        "mlp_node_specs is deprecated; use "
+        "repro.sketches.registry.node_specs_for(cfg)",
+        DeprecationWarning, stacklevel=2)
+    return _mlp_node_specs(cfg)
 
 
 def _act(name: str):
@@ -100,6 +125,52 @@ def conv_stem_apply(p, img: Array) -> Array:
     y = jax.lax.reduce_window(
         y, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
     return y.reshape(y.shape[0], -1)
+
+
+# ---------------------------------------------------------------------------
+# Sketched conv stem (DESIGN.md §15): XConv / Chakrabarti-Moseley.
+# Each SAME stride-1 conv is im2col-factored into one
+# (B*P, kh*kw*Cin) @ (kh*kw*Cin, Cout) matmul so the existing
+# `sketched_matmul` custom_vjp is reused unmodified — the backward
+# reconstructs the PATCH matrix from the stage's EMA triple instead of
+# storing it, and grad_x stays exact through the factoring.
+# ---------------------------------------------------------------------------
+
+
+def im2col(x: Array, kh: int, kw: int) -> Array:
+    """x (B, H, W, Cin) -> patches (B*H*W, kh*kw*Cin) for a SAME
+    stride-1 conv. Column order is (i, j, c) row-major, matching
+    ``w.reshape(kh*kw*Cin, Cout)`` of an HWIO kernel, so
+    ``im2col(x) @ w2d == conv(x, w)`` exactly."""
+    B, H, W, C = x.shape
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    cols = [xp[:, i:i + H, j:j + W, :]
+            for i in range(kh) for j in range(kw)]
+    return jnp.concatenate(cols, axis=-1).reshape(B * H * W, kh * kw * C)
+
+
+def conv_im2col_sketched(x: Array, w: Array, node, proj, k_active,
+                         *, recon_mode: str, ridge: float,
+                         factored: bool) -> Array:
+    """SAME stride-1 conv through ``sketched_matmul`` on the im2col
+    factoring. ``node`` is the stage's CONSUME SketchNode (already
+    merged/updated by the caller); patches are zero-padded to the
+    tree's row binding so one projection serves every stage across
+    proj kinds — padded rows carry zero cotangent, so they contribute
+    nothing to the reconstructed grad_W."""
+    from repro.sketches import pad_activation_rows, proj_num_tokens, \
+        sketched_matmul
+    B, H, W, _ = x.shape
+    kh, kw, _, cout = w.shape
+    patches = im2col(x, kh, kw)
+    rows = patches.shape[0]
+    patches = pad_activation_rows(patches, proj_num_tokens(proj))
+    y = sketched_matmul(
+        patches, w.reshape(-1, cout).astype(patches.dtype),
+        node.x, node.y, node.z, proj["omega"], k_active,
+        recon_mode, ridge, factored)
+    return y[:rows].reshape(B, H, W, cout)
 
 
 # ---------------------------------------------------------------------------

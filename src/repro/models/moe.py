@@ -111,20 +111,29 @@ def aux_load_balance(probs: Array, tope: Array, E: int) -> Array:
 # ---------------------------------------------------------------------------
 
 
-def moe_apply_ref(p: dict, x: Array, cfg) -> tuple[Array, Array]:
-    """x (T, d) -> (y (T, d), aux ()) without collectives."""
+def moe_apply_ref(p: dict, x: Array, cfg, *, return_dispatch=False):
+    """x (T, d) -> (y (T, d), aux ()) without collectives.
+
+    With ``return_dispatch`` also returns the valid-masked dispatched
+    per-expert input xg (E, C, d) — the activation the per-expert
+    sketch nodes observe (DESIGN.md §15). Dropped/empty slots are exact
+    zero rows, which contract to zero in every sketch increment term.
+    """
     T, d = x.shape
     E, K = cfg.num_experts, cfg.experts_per_token
     C = capacity(T, E, K, cfg.capacity_factor)
     probs, topw, tope = route(x, p["router"], K)
     tok, wgt, valid = dispatch_meta(tope, topw, E, C)
-    xg = x[tok] * valid[:, None].astype(x.dtype)
+    xg = (x[tok] * valid[:, None].astype(x.dtype)).reshape(E, C, d)
     out = _expert_ffn(
-        xg.reshape(E, C, d), p["we_gate"], p["we_up"], p["we_down"]
+        xg, p["we_gate"], p["we_up"], p["we_down"]
     ).reshape(E * C, d)
     w = (wgt * valid).astype(x.dtype)[:, None]
     y = jnp.zeros_like(x).at[tok].add(out * w, mode="drop")
-    return y, aux_load_balance(probs, tope, E)
+    aux = aux_load_balance(probs, tope, E)
+    if return_dispatch:
+        return y, aux, xg
+    return y, aux
 
 
 def moe_dense_ref(p: dict, x: Array, cfg) -> Array:
@@ -147,15 +156,29 @@ def moe_dense_ref(p: dict, x: Array, cfg) -> Array:
 # ---------------------------------------------------------------------------
 
 
-def moe_apply(p: dict, x: Array, cfg) -> tuple[Array, Array]:
-    """x (B, S, d) -> (y (B, S, d), aux ()). Dispatches on active rules."""
+def moe_apply(p: dict, x: Array, cfg, *, return_dispatch=False):
+    """x (B, S, d) -> (y (B, S, d), aux ()). Dispatches on active rules.
+
+    With ``return_dispatch`` a third output carries the per-expert
+    dispatched input for the sketch nodes, normalized to (E, rows, d):
+    rows = C on the reference path; on the shard_map path rows =
+    dp_size * C (every dp shard's capacity slab, expert dim sharded
+    over the model axis so each EP shard holds only its local experts).
+    The sketch increment is linear in rows, so sketching the
+    concatenated slabs equals summing per-shard increments.
+    """
     B, S, d = x.shape
     rules = current_rules()
     if rules is None or (B * S) % rules.dp_size != 0:
         # no rules, or too few tokens to shard over dp (e.g. batch-1
         # long-context decode): the tensors are tiny — run the reference
         # dispatch and let XLA place it.
-        y, aux = moe_apply_ref(p, x.reshape(B * S, d), cfg)
+        out = moe_apply_ref(p, x.reshape(B * S, d), cfg,
+                            return_dispatch=return_dispatch)
+        if return_dispatch:
+            y, aux, xg = out
+            return y.reshape(B, S, d), aux, xg
+        y, aux = out
         return y.reshape(B, S, d), aux
 
     E, K = cfg.num_experts, cfg.experts_per_token
@@ -178,13 +201,6 @@ def moe_apply(p: dict, x: Array, cfg) -> tuple[Array, Array]:
     # replication check named check_rep (same semantics: disabled).
     from jax.experimental.shard_map import shard_map
 
-    @partial(
-        shard_map,
-        mesh=rules.mesh,
-        in_specs=(P(dp, None),) + w_specs,
-        out_specs=(P(dp, None), P()),
-        check_rep=False,
-    )
     def _local(xl, router, wg, wu, wd):
         # xl (T_loc, d) — sharded over dp, replicated over model
         probs, topw, tope = route(xl, router, K)
@@ -199,18 +215,40 @@ def moe_apply(p: dict, x: Array, cfg) -> tuple[Array, Array]:
         else:
             tok_l, wgt_l, valid_l = tok, wgt, valid
             n_e = E
-        xg = xl[tok_l] * valid_l[:, None].astype(xl.dtype)
-        out = _expert_ffn(
-            xg.reshape(n_e, C, d), wg, wu, wd
-        ).reshape(n_e * C, d)
+        xg = (xl[tok_l] * valid_l[:, None].astype(xl.dtype)
+              ).reshape(n_e, C, d)
+        out = _expert_ffn(xg, wg, wu, wd).reshape(n_e * C, d)
         w = (wgt_l * valid_l).astype(xl.dtype)[:, None]
         part = jnp.zeros_like(xl).at[tok_l].add(out * w, mode="drop")
         y = jax.lax.psum(part, model)
         aux = aux_load_balance(probs, tope, E)
         aux = jax.lax.pmean(aux, rules.dp_axes + (model,))
+        if return_dispatch:
+            # leading length-1 dim expands over dp: every dp shard
+            # contributes its own capacity slab
+            return y, aux, xg[None]
         return y, aux
 
-    y, aux = _local(
+    out_specs = (P(dp, None), P())
+    if return_dispatch:
+        # expert dim sharded over the model axis in EP mode — each EP
+        # shard materializes only its local experts' dispatch slab,
+        # exactly like its expert weights
+        out_specs += (P(dp, model, None, None) if ep_mode
+                      else P(dp, None, None, None),)
+    fn = partial(
+        shard_map, mesh=rules.mesh,
+        in_specs=(P(dp, None),) + w_specs,
+        out_specs=out_specs, check_rep=False,
+    )(_local)
+    out = fn(
         x.reshape(T, d), p["router"], p["we_gate"], p["we_up"], p["we_down"]
     )
+    if return_dispatch:
+        y, aux, xg = out
+        # (dp_size, E, C, d) -> (E, dp_size*C, d): per-expert rows are
+        # the concatenation of every dp shard's slots (increment-linear)
+        xg = jnp.transpose(xg, (1, 0, 2, 3)).reshape(E, -1, d)
+        return y.reshape(B, S, d), aux, xg
+    y, aux = out
     return y.reshape(B, S, d), aux

@@ -61,8 +61,13 @@ def rglru_scan(log_a: Array, b: Array) -> Array:
     return h
 
 
-def rglru_apply(p, x, *, cfg, mode, cache=None):
-    """x (B,S,d) -> (y, new_cache)."""
+def rglru_apply(p, x, *, cfg, mode, cache=None, return_carry=False):
+    """x (B,S,d) -> (y, new_cache).
+
+    With ``return_carry`` a third output carries the end-of-sequence
+    recurrent state h_S (B, lru) f32 — the activation-memory analogue
+    the rglru_h sketch node observes (DESIGN.md §15); train mode
+    otherwise discards it."""
     B, S, d = x.shape
     dt = x.dtype
     lru = cfg.lru_width or d
@@ -91,6 +96,9 @@ def rglru_apply(p, x, *, cfg, mode, cache=None):
     out = hs.astype(dt) * jax.nn.gelu(
         gate.astype(jnp.float32)).astype(dt)
     y = out @ p["w_out"].astype(dt)
+    if return_carry:
+        carry = hs[:, -1] if mode != "decode" else hs[:, 0]
+        return y, new_cache, carry
     return y, new_cache
 
 

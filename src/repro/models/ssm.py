@@ -173,8 +173,15 @@ def mlstm_sequential_ref(q, k, v, li, lf, C0, n0, m0):
     return hs.transpose(1, 2, 0, 3), (C, n, m)
 
 
-def mlstm_apply(p, x, *, cfg, mode, cache=None, chunk=256):
-    """Full mLSTM block. x (B,S,d) -> (y, new_cache)."""
+def mlstm_apply(p, x, *, cfg, mode, cache=None, chunk=256,
+                return_carry=False):
+    """Full mLSTM block. x (B,S,d) -> (y, new_cache).
+
+    With ``return_carry`` a third output carries the end-of-sequence
+    matrix memory (C (B,H,dk,dv), n (B,H,dk)) — the recurrent-state
+    analogue of an activation, observed by the mlstm_c/mlstm_n sketch
+    nodes (DESIGN.md §15). Train mode otherwise discards it.
+    """
     B, S, d = x.shape
     inner, H, dk, dv = mlstm_dims(cfg)
     dt = x.dtype
@@ -222,6 +229,8 @@ def mlstm_apply(p, x, *, cfg, mode, cache=None, chunk=256):
     y = out @ p["w_m_down"].astype(dt)
     new_cache = {"C": C, "m_n": n, "m_m": m, "conv": conv_state} \
         if mode in ("decode", "prefill") else None
+    if return_carry:
+        return y, new_cache, (C, n)
     return y, new_cache
 
 

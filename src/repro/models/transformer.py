@@ -32,9 +32,11 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.sketches import (
-    NodeSpec, NodeTree, init_node_tree, proj_triple_increment,
-    proj_triple_update, sketched_matmul,
+    NodeSpec, NodeTree, init_node_tree, pad_activation_rows,
+    proj_num_tokens, proj_triple_increment, proj_triple_update,
+    sketched_matmul,
 )
+from repro.sketches.registry import node_specs_for, register_node_specs
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import rglru as rglru_mod
@@ -54,18 +56,62 @@ ATTN_KINDS = ("full", "swa", "local", "global")
 # ---------------------------------------------------------------------------
 
 
+#: carry/monitor node name -> the block kind whose layers update it.
+#: Nodes absent here update at EVERY layer (the pre-PR-10 behaviour).
+CARRY_NODE_KINDS = {
+    "mlstm_c": "mlstm",       # matrix memory C, flattened H*dk*dv
+    "mlstm_n": "mlstm",       # normalizer n, flattened H*dk
+    "rglru_h": "rglru",       # RG-LRU recurrent state, lru_width wide
+}
+
+
 def sketch_groups(cfg: ArchConfig) -> dict[str, int]:
-    """{group_name: width} of sketched activation nodes per layer."""
+    """{group_name: width} of sketched activation nodes per layer.
+
+    Per-expert and recurrent-carry nodes (DESIGN.md §15) ride along:
+    ``expert_in`` on MoE archs (backprop mode sketches the attention
+    out-projection, the expert nodes are monitoring-only), and the scan
+    carries on archs whose pattern contains mlstm / rglru layers — in
+    any sketch mode, since recurrent state is the activation-memory
+    analogue regardless of whether the FFNs run sketched backprop."""
     if cfg.sketch_mode == "none":
         return {}
+    kinds = tuple(cfg.pattern) + tuple(cfg.tail_types or ())
     if cfg.sketch_mode == "monitor":
-        return {"res": cfg.d_model}
-    if cfg.is_moe:
-        return {"attn_o": cfg.num_heads * cfg.resolved_head_dim}
-    groups = {"ffn_in": cfg.d_model}
-    if cfg.mlp_type in ("swiglu", "gelu"):
-        groups["ffn_h"] = cfg.d_ff
+        groups = {"res": cfg.d_model}
+    elif cfg.is_moe:
+        groups = {"attn_o": cfg.num_heads * cfg.resolved_head_dim,
+                  "expert_in": cfg.d_model}
+    else:
+        groups = {"ffn_in": cfg.d_model}
+        if cfg.mlp_type in ("swiglu", "gelu"):
+            groups["ffn_h"] = cfg.d_ff
+    if "mlstm" in kinds:
+        _, H, dk, dv = ssm_mod.mlstm_dims(cfg)
+        groups["mlstm_c"] = H * dk * dv
+        groups["mlstm_n"] = H * dk
+    if "rglru" in kinds:
+        groups["rglru_h"] = cfg.lru_width or cfg.d_model
     return groups
+
+
+def node_positions(name: str, kinds) -> tuple[int, ...]:
+    """Pattern/tail positions at which node ``name`` updates — all of
+    them, unless the node is kind-bound (carry nodes). Every returned
+    position updates the node exactly once per step, the invariant the
+    fused/overlap DP layouts rely on (an un-updated slice would be
+    psummed as an increment)."""
+    k = CARRY_NODE_KINDS.get(name)
+    if k is None:
+        return tuple(range(len(kinds)))
+    return tuple(i for i, kk in enumerate(kinds) if kk == k)
+
+
+def node_layer_count(cfg: ArchConfig, name: str) -> int:
+    """Total stacked entries of node ``name``: G per matching pattern
+    position plus matching tail layers."""
+    return (cfg.num_groups * len(node_positions(name, cfg.pattern))
+            + len(node_positions(name, tuple(cfg.tail_types or ()))))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,15 +179,39 @@ class SketchSettings:
                 "(dp_axis / dp_defer / dp_premerged)")
 
 
-def lm_node_specs(cfg: ArchConfig) -> dict[str, NodeSpec]:
-    """The NodeTree registry for an LM arch — one NodeSpec per sketched
-    node group, stacked over the layer axis."""
+def transformer_node_specs(cfg: ArchConfig) -> dict[str, NodeSpec]:
+    """The NodeTree registry for a transformer-stack arch — one NodeSpec
+    per sketched node group, stacked over the layer axis (restricted to
+    matching layers for kind-bound carry nodes; the expert node stacks
+    (n_layers, num_experts) — DESIGN.md §15)."""
     # logical_axis=None resolves through DEFAULT_NODE_AXES by group name
     # (ffn_in/res -> "embed", ffn_h -> "mlp", attn_o -> "heads"), so each
     # group's (d, k) triple shards its width exactly as the consumer
     # weight does (DESIGN.md §12).
-    return {g: NodeSpec(width=w, layers=cfg.num_layers)
-            for g, w in sketch_groups(cfg).items()}
+    specs = {}
+    for g, w in sketch_groups(cfg).items():
+        n = node_layer_count(cfg, g)
+        layers = (n, cfg.num_experts) if g == "expert_in" else n
+        specs[g] = NodeSpec(width=w, layers=layers)
+    return specs
+
+
+# one spec function serves all three transformer-stack families — the
+# family split exists so future archs can override just one of them
+register_node_specs("lm", transformer_node_specs)
+register_node_specs("moe", transformer_node_specs)
+register_node_specs("recurrent", transformer_node_specs)
+
+
+def lm_node_specs(cfg: ArchConfig) -> dict[str, NodeSpec]:
+    """Deprecated: resolve specs via ``sketches.registry.node_specs_for``
+    (one-release shim, DESIGN.md §15)."""
+    import warnings
+    warnings.warn(
+        "lm_node_specs is deprecated; use "
+        "repro.sketches.registry.node_specs_for(cfg)",
+        DeprecationWarning, stacklevel=2)
+    return transformer_node_specs(cfg)
 
 
 def init_lm_sketch_state(key, cfg: ArchConfig, st: SketchSettings,
@@ -150,27 +220,37 @@ def init_lm_sketch_state(key, cfg: ArchConfig, st: SketchSettings,
     (num_tokens, k_max) projections + active rank scalar."""
     if not st.enabled:
         return None
-    return init_node_tree(key, lm_node_specs(cfg), num_tokens, st.k_max,
+    return init_node_tree(key, node_specs_for(cfg), num_tokens, st.k_max,
                           dtype=st.sketch_dtype,
                           proj_kind=st.proj_kind,
                           proj_density=st.proj_density)
 
 
-def _slice_sketch(state: NodeTree | None, lo: int, hi: int,
-                  reshape_groups: int | None):
-    """Per-layer slices [lo:hi) of every node (optionally reshaped to
-    (G, P, ...) for the scan). Returns {name: SketchNode}."""
+def _slice_sketch(state: NodeTree | None, cfg: ArchConfig, region: str):
+    """Per-node layer slices for the scan ("group" region, reshaped to
+    (G, n_pos, ...)) or the unrolled tail. Slicing is per NODE: a
+    kind-bound carry node stacks only its matching layers, so its group
+    region is the first G * n_pos entries and its tail region the rest
+    (DESIGN.md §15). Nodes with no entries in a region are omitted from
+    the returned dict. Returns {name: SketchNode} or None."""
     if state is None:
         return None
-
-    def _cut(a):
-        s = a[lo:hi]
-        if reshape_groups is not None:
-            s = s.reshape((reshape_groups, -1) + s.shape[1:])
-        return s
-
-    return {name: jax.tree.map(_cut, node)
-            for name, node in state.nodes.items()}
+    G = cfg.num_groups
+    out = {}
+    for name, node in state.nodes.items():
+        n_pos = len(node_positions(name, cfg.pattern))
+        cut = G * n_pos
+        if region == "group":
+            if cut == 0:
+                continue
+            out[name] = jax.tree.map(
+                lambda a: a[:cut].reshape((G, n_pos) + a.shape[1:]),
+                node)
+        else:
+            if node.x.shape[0] - cut == 0:
+                continue
+            out[name] = jax.tree.map(lambda a: a[cut:], node)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -304,6 +384,51 @@ def _update_triple(node, a, proj, k_active, st: SketchSettings):
     return updated, updated
 
 
+def _update_carry_triple(node, a, proj, k_active, st: SketchSettings):
+    """Monitoring-only update of a carry/conv-style node whose activation
+    has fewer rows than the tree's token binding: zero-pad rows (exact
+    across proj kinds — zero rows contract to zero in every increment
+    term) and run the canonical update. Returns the out-node only; carry
+    nodes have no consumer."""
+    a = pad_activation_rows(a, proj_num_tokens(proj))
+    return _update_triple(node, a, proj, k_active, st)[1]
+
+
+def _update_expert_triple(node, xg, proj, k_active, st: SketchSettings):
+    """Per-expert EMA update (DESIGN.md §15): the canonical update
+    vmapped over the expert dim of an (E, d, k) node stack against the
+    dispatched input xg (E, rows, d), rows zero-padded to the tree's
+    token binding. Increments stay per-expert-linear, so every DP
+    layout's merge (psum inside / fused wire / overlap) applies
+    unchanged; monitoring-only — the expert FFN matmuls keep exact
+    grads (their sub-batches break the fixed-projection premise,
+    DESIGN.md §3)."""
+    if st.dp_premerged:
+        return node
+    T = proj_num_tokens(proj)
+    E, rows, d = xg.shape
+    if rows != T:
+        if rows > T:
+            # high capacity_factor slabs: slot positions are per-expert
+            # cumulative counts and top-k experts are distinct per
+            # token, so an expert's occupied slots are its FIRST
+            # count_e <= T positions — everything past the binding is
+            # guaranteed zero padding and slicing is exact
+            xg = xg[:, :T]
+        else:
+            xg = jnp.pad(xg, ((0, 0), (0, T - rows), (0, 0)))
+    if st.dp_defer:
+        fn = lambda x_s, y_s, z_s, a, psi: proj_triple_increment(
+            x_s, y_s, z_s, a, proj, psi, st.beta, k_active)
+        ix, iy, iz = jax.vmap(fn)(node.x, node.y, node.z, xg, node.psi)
+        return dataclasses.replace(node, x=ix, y=iy, z=iz)
+    fn = lambda x_s, y_s, z_s, a, psi: proj_triple_update(
+        x_s, y_s, z_s, a, proj, psi, st.beta, k_active,
+        axis_name=st.dp_axis)
+    xs, ys, zs = jax.vmap(fn)(node.x, node.y, node.z, xg, node.psi)
+    return dataclasses.replace(node, x=xs, y=ys, z=zs)
+
+
 def _apply_sketched_mlp(p, x, cfg, sk, proj, k_active, st: SketchSettings):
     """Dense FFN with paper sketched backprop on both matmuls."""
     B, S, d = x.shape
@@ -360,14 +485,35 @@ def _apply_block(
                 p["attn"], h, cfg=cfg, layer_type=kind, positions=positions,
                 mode=mode, cache=cache, seq_len_ctx=seq_len_ctx)
     elif kind == "mlstm":
-        mix, new_cache = ssm_mod.mlstm_apply(
-            p["mix"], h, cfg=cfg, mode=mode, cache=cache)
+        if sk is not None and "mlstm_c" in sk and mode == "train":
+            # carry-sketch nodes (DESIGN.md §15): the end-of-scan matrix
+            # memory IS this layer's activation-memory analogue
+            mix, new_cache, (cC, cn) = ssm_mod.mlstm_apply(
+                p["mix"], h, cfg=cfg, mode=mode, cache=cache,
+                return_carry=True)
+            new_sk = dict(sk,
+                          mlstm_c=_update_carry_triple(
+                              sk["mlstm_c"], cC.reshape(B, -1), proj,
+                              k_active, st),
+                          mlstm_n=_update_carry_triple(
+                              sk["mlstm_n"], cn.reshape(B, -1), proj,
+                              k_active, st))
+        else:
+            mix, new_cache = ssm_mod.mlstm_apply(
+                p["mix"], h, cfg=cfg, mode=mode, cache=cache)
     elif kind == "slstm":
         mix, new_cache = ssm_mod.slstm_apply(
             p["mix"], h, cfg=cfg, mode=mode, cache=cache)
     elif kind == "rglru":
-        mix, new_cache = rglru_mod.rglru_apply(
-            p["mix"], h, cfg=cfg, mode=mode, cache=cache)
+        if sk is not None and "rglru_h" in sk and mode == "train":
+            mix, new_cache, carry = rglru_mod.rglru_apply(
+                p["mix"], h, cfg=cfg, mode=mode, cache=cache,
+                return_carry=True)
+            new_sk = dict(sk, rglru_h=_update_carry_triple(
+                sk["rglru_h"], carry, proj, k_active, st))
+        else:
+            mix, new_cache = rglru_mod.rglru_apply(
+                p["mix"], h, cfg=cfg, mode=mode, cache=cache)
     else:
         raise ValueError(kind)
 
@@ -376,13 +522,23 @@ def _apply_block(
 
     if cfg.is_moe:
         h2 = rmsnorm_apply(p["norm2"], x, cfg.norm_eps)
-        y, aux = moe_mod.moe_apply(p["moe"], h2, cfg)
+        if new_sk is not None and "expert_in" in new_sk \
+                and mode == "train":
+            y, aux, xg = moe_mod.moe_apply(p["moe"], h2, cfg,
+                                           return_dispatch=True)
+            new_sk = dict(new_sk, expert_in=_update_expert_triple(
+                new_sk["expert_in"], xg, proj, k_active, st))
+        else:
+            y, aux = moe_mod.moe_apply(p["moe"], h2, cfg)
         x = x + y
     elif cfg.mlp_type != "none":
         h2 = rmsnorm_apply(p["norm2"], x, cfg.norm_eps)
         if sk is not None and "ffn_in" in sk and mode == "train":
-            y, new_sk = _apply_sketched_mlp(
+            # merge over new_sk, not replace: carry nodes (rglru_h /
+            # mlstm_*) may already have updated earlier in this block
+            y, mlp_sk = _apply_sketched_mlp(
                 p["mlp"], h2, cfg, sk, proj, k_active, st)
+            new_sk = dict(new_sk, **mlp_sk)
         else:
             y = mlp_apply(p["mlp"], h2, cfg.mlp_type)
         x = x + y
@@ -394,8 +550,8 @@ def _apply_block(
         # train mode AND — under st.serve_monitor — in prefill/decode
         # (DESIGN.md §11): the serving engine's live activation
         # monitor, updated inside the same jitted step.
-        new_sk = dict(sk, res=_update_triple(
-            sk["res"], x.reshape(B * S, d), proj, k_active, st)[1])
+        new_sk = dict(new_sk, res=_update_triple(
+            new_sk["res"], x.reshape(B * S, d), proj, k_active, st)[1])
     return x, new_cache, aux, new_sk
 
 
@@ -468,7 +624,6 @@ def forward(
             x, patch_embeds.astype(dt), 0, axis=1) if f <= S else x
     x = constrain(x, "batch", "seq_sp", "none")
 
-    P = len(cfg.pattern)
     G = cfg.num_groups
     if seq_len_ctx is None:
         seq_len_ctx = S
@@ -476,8 +631,14 @@ def forward(
     proj = sketch_state.proj if sketch_state is not None else None
     k_active = sketch_state.k_active if sketch_state is not None else None
 
-    group_sk = _slice_sketch(sketch_state, 0, G * P, reshape_groups=G)
-    tail_sk = _slice_sketch(sketch_state, G * P, cfg.num_layers, None)
+    group_sk = _slice_sketch(sketch_state, cfg, "group")
+    tail_sk = _slice_sketch(sketch_state, cfg, "tail")
+    # static per-node pattern positions: node g appears in sk_i only at
+    # its matching positions, indexed by ordinal within the node's stack
+    grp_pos = ({g: node_positions(g, cfg.pattern) for g in group_sk}
+               if group_sk is not None else {})
+    tail_pos = ({g: node_positions(g, tuple(cfg.tail_types or ()))
+                 for g in tail_sk} if tail_sk is not None else {})
 
     def group_body(carry, xs_slice):
         x, aux = carry
@@ -485,8 +646,9 @@ def forward(
         new_caches = []
         new_sks = []
         for i, kind in enumerate(cfg.pattern):
-            sk_i = ({g: jax.tree.map(lambda a: a[i], v)
-                     for g, v in gs.items()}
+            sk_i = ({g: jax.tree.map(
+                         lambda a, j=grp_pos[g].index(i): a[j], v)
+                     for g, v in gs.items() if i in grp_pos[g]}
                     if gs is not None else None)
             x, nc, a, nsk = _apply_block(
                 kind, gp[i], x,
@@ -499,7 +661,7 @@ def forward(
             aux = aux + a
         ys = (
             tuple(new_caches) if wants_cache else None,
-            _restack_sk(new_sks, cfg.pattern) if gs is not None else None,
+            _restack_sk(new_sks) if gs is not None else None,
         )
         return (x, aux), ys
 
@@ -528,8 +690,9 @@ def forward(
     new_tail_caches = []
     new_tail_sk = []
     for i, kind in enumerate(cfg.tail_types):
-        sk_i = ({g: jax.tree.map(lambda a: a[i], v)
-                 for g, v in tail_sk.items()}
+        sk_i = ({g: jax.tree.map(
+                     lambda a, j=tail_pos[g].index(i): a[j], v)
+                 for g, v in tail_sk.items() if i in tail_pos[g]}
                 if tail_sk is not None else None)
         x, nc, a, nsk = _apply_block(
             kind, params["tail"][i], x, cfg=cfg, positions=positions,
@@ -565,28 +728,43 @@ def forward(
             "sketch_state": new_sketch}
 
 
-def _restack_sk(new_sks: list, pattern) -> dict:
-    """list-per-position of {name: SketchNode} -> {name: stacked (P,...)}"""
+def _restack_sk(new_sks: list) -> dict:
+    """list-per-position of {name: SketchNode} -> {name: stacked
+    (n_pos, ...)}. Positions omit nodes they don't update (kind-bound
+    carry nodes), so each node restacks only its own ordinal slices —
+    the static key sets keep the scan ys structure stable."""
+    names: list = []
+    for s in new_sks:
+        for g in (s or {}):
+            if g not in names:
+                names.append(g)
     return {g: jax.tree.map(lambda *xs: jnp.stack(xs),
-                            *[s[g] for s in new_sks])
-            for g in new_sks[0]}
+                            *[s[g] for s in new_sks
+                              if s is not None and g in s])
+            for g in names}
 
 
 def _merge_sketch(state: NodeTree, group_sk, tail_sk, cfg) -> NodeTree:
-    """Reassemble the (L, w, k) stacked nodes from scan ys + tail
-    updates into a NodeTree with the step counter advanced."""
-    P = len(cfg.pattern)
+    """Reassemble the per-node (n_layers, ...) stacks from scan ys +
+    tail updates into a NodeTree with the step counter advanced. A
+    node's stack is [G x its n_pos group entries, its matching tail
+    entries] — the same per-node layout ``_slice_sketch`` cuts."""
     G = cfg.num_groups
     new_nodes = {}
-    for g in state.nodes:
+    for g, old in state.nodes.items():
         parts = []
-        if group_sk is not None and G > 0:
-            parts.append(jax.tree.map(          # (G, P, ...) scan-stacked
-                lambda a: a.reshape((G * P,) + a.shape[2:]), group_sk[g]))
-        if tail_sk:
-            parts.append(jax.tree.map(lambda *xs: jnp.stack(xs),
-                                      *[t[g] for t in tail_sk]))
-        new_nodes[g] = parts[0] if len(parts) == 1 else jax.tree.map(
-            lambda a, b: jnp.concatenate([a, b]), parts[0], parts[1])
+        if group_sk is not None and G > 0 and g in group_sk:
+            parts.append(jax.tree.map(     # (G, n_pos, ...) scan-stacked
+                lambda a: a.reshape((-1,) + a.shape[2:]), group_sk[g]))
+        tails = [t[g] for t in (tail_sk or []) if t is not None and g in t]
+        if tails:
+            parts.append(jax.tree.map(lambda *xs: jnp.stack(xs), *tails))
+        if not parts:
+            new_nodes[g] = old
+        elif len(parts) == 1:
+            new_nodes[g] = parts[0]
+        else:
+            new_nodes[g] = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b]), parts[0], parts[1])
     return dataclasses.replace(state, nodes=new_nodes,
                                step=state.step + 1)

@@ -289,7 +289,8 @@ def spec_for_sketch(rules: ShardingRules, node_name: str | None,
         if ndim != 2 or shape[0] % rules.dp_size != 0:
             return P()
         return P(rules.dp, None)
-    from repro.sketches.node import DEFAULT_NODE_AXES
+    from repro.sketches.node import DEFAULT_NODE_AXES, \
+        DEFAULT_NODE_STACK_AXES
     logical = DEFAULT_NODE_AXES.get(node_name)
     ax = _param_axis_to_mesh(rules, logical)
     members = list(ax) if isinstance(ax, tuple) else \
@@ -304,13 +305,33 @@ def spec_for_sketch(rules: ShardingRules, node_name: str | None,
             n *= rules.mesh.shape[a]
         return n
 
+    # Expert-axis rule (DESIGN.md §15): the TRAILING stack dims of a
+    # multi-dim stack shard over their registered logical axes — a
+    # per-expert (L, E, d, k) triple shards E over "experts" exactly as
+    # its expert's weights do under the shard_map EP layout, so each EP
+    # shard owns only its local experts' sketch state.
+    n_stack = max(ndim - 2, 0)
+    stack_spec: list = [None] * n_stack
+    used: list = []
+    stack_axes = DEFAULT_NODE_STACK_AXES.get(node_name, ())
+    if n_stack and stack_axes:
+        take = stack_axes[-n_stack:]
+        for j, sname in enumerate(take):
+            dim = n_stack - len(take) + j
+            s_ax = _param_axis_to_mesh(rules, sname)
+            ms = list(s_ax) if isinstance(s_ax, tuple) else \
+                ([s_ax] if s_ax is not None else [])
+            if ms and shape[dim] % _prod(ms) == 0:
+                stack_spec[dim] = tuple(ms) if len(ms) > 1 else ms[0]
+                used += ms
+    members = [a for a in members if a not in used]
     while members and d % _prod(members) != 0:
         members.pop()
     d_ax = tuple(members) if len(members) > 1 else \
         (members[0] if members else None)
     if ndim < 2:
         return P(d_ax)
-    return P(*([None] * (ndim - 2) + [d_ax, None]))
+    return P(*(stack_spec + [d_ax, None]))
 
 
 def spec_for_param(rules: ShardingRules, path: tuple, leaf) -> P:

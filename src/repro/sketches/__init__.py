@@ -9,7 +9,11 @@ sketched node anywhere is a one-line ``NodeSpec`` registration.
 from repro.sketches.update import (
     active_mask, corange_apply_increment, corange_triple_increment,
     corange_triple_update, ema_triple_update, mask_columns,
-    proj_triple_increment, proj_triple_update,
+    pad_activation_rows, proj_num_tokens, proj_triple_increment,
+    proj_triple_update,
+)
+from repro.sketches.registry import (
+    node_specs_for, register_node_specs, registered_families,
 )
 from repro.sketches.psparse import (
     PROJ_KINDS, PsparseCorangeProjections, PsparseProjections,
@@ -45,8 +49,10 @@ __all__ = [
     "init_node_tree", "init_paper_node", "init_psparse_projections",
     "is_psparse", "legacy_layout", "make_psparse_corange_projections",
     "fake_quantize_tree", "int8_segment_bytes", "mask_columns",
-    "NodeSpec", "NodeTree", "node_paths",
-    "pack_segments", "partition_segments", "PROJ_KINDS",
+    "NodeSpec", "NodeTree", "node_paths", "node_specs_for",
+    "pack_segments", "pad_activation_rows", "partition_segments",
+    "proj_num_tokens", "PROJ_KINDS",
+    "register_node_specs", "registered_families",
     "SKETCH_WIRE_DTYPES",
     "proj_triple_increment", "proj_triple_update",
     "PsparseCorangeProjections", "PsparseProjections",

@@ -36,6 +36,27 @@ from repro.sketches.tree import NodeTree
 
 LEGACY_META = ("proj", "rank", "step")
 
+# Node names the PR 0-2 dict layout could ever hold. The DESIGN.md §15
+# families (per-expert MoE nodes, recurrent-carry nodes, conv-stage
+# nodes) postdate that format, so a template containing one can never
+# match a legacy checkpoint — reject with a clear message instead of a
+# KeyError deep in adopt_legacy (same pattern as the proj_kind-mismatch
+# rejection below).
+LEGACY_NODE_NAMES = frozenset(
+    {"ffn_in", "ffn_h", "attn_o", "res", "hidden"})
+
+
+def _reject_post_legacy_nodes(names) -> None:
+    new = sorted(n for n in names if n not in LEGACY_NODE_NAMES)
+    if new:
+        raise ValueError(
+            f"legacy (PR 0-2) checkpoints never held node(s) {new} — "
+            f"the per-expert / recurrent-carry / conv node families "
+            f"postdate that format (DESIGN.md §15). This checkpoint "
+            f"cannot be a legacy layout for the requested architecture: "
+            f"restore with the architecture it was written for, or "
+            f"start from a fresh checkpoint directory.")
+
 
 def legacy_layout(tree: NodeTree) -> dict:
     """The PR 0-2 per-group dict equivalent of a NodeTree."""
@@ -52,6 +73,7 @@ def legacy_layout(tree: NodeTree) -> dict:
         "rank": tree.rank,
         "step": tree.step,
     }
+    _reject_post_legacy_nodes(tree.nodes)
     for name, node in tree.nodes.items():
         if node.kind != "paper":
             raise ValueError(
@@ -64,6 +86,15 @@ def legacy_layout(tree: NodeTree) -> dict:
 
 def adopt_legacy(old: dict, template: NodeTree) -> NodeTree:
     """Rebuild a NodeTree from a restored legacy dict."""
+    _reject_post_legacy_nodes(template.nodes)
+    missing = sorted(n for n in template.nodes if n not in old)
+    if missing:
+        raise ValueError(
+            f"legacy checkpoint is missing node(s) {missing} that the "
+            f"template architecture expects — the checkpoint was "
+            f"written for a different architecture; restore with the "
+            f"matching config or start from a fresh checkpoint "
+            f"directory.")
     nodes = {
         name: dataclasses.replace(
             template.nodes[name],

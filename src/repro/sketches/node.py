@@ -34,14 +34,35 @@ DEFAULT_NODE_AXES: dict[str, str | None] = {
     "attn_o": "heads",     # flattened heads*head_dim — TP like wo
     "res": "embed",        # residual-stream monitor nodes
     "hidden": "embed",     # MLP-trainer hidden nodes
+    "expert_in": "embed",  # per-expert dispatched input (d_model wide)
+    "mlstm_c": "heads",    # flattened H*dk*dv mLSTM C carry
+    "mlstm_n": "heads",    # flattened H*dk mLSTM normalizer carry
+    "rglru_h": "mlp",      # RG-LRU recurrent carry (lru_width wide)
+    "conv1": None,         # im2col patch widths are tiny — replicate
+    "conv2": None,
+}
+
+# Node name -> logical axes of the TRAILING stack dims beyond the layer
+# dim (DESIGN.md §15). Per-expert nodes stack (L, E, d, k): the E dim
+# shards over "experts" exactly like the expert weights' leading dim
+# under the shard_map EP layout, so each EP shard holds only its local
+# experts' sketch state and the merge across EP happens only for
+# monitoring.
+DEFAULT_NODE_STACK_AXES: dict[str, tuple[str | None, ...]] = {
+    "expert_in": ("experts",),
 }
 
 
-def register_node_axis(name: str, logical_axis: str | None) -> None:
+def register_node_axis(name: str, logical_axis: str | None,
+                       stack_axes: tuple[str | None, ...] = ()) -> None:
     """Register the logical width axis of a new sketch-node name (used
     by the path-based `param_shardings` resolution, which cannot see
-    the SketchNode's own annotation through ShapeDtypeStructs)."""
+    the SketchNode's own annotation through ShapeDtypeStructs).
+    ``stack_axes`` annotates trailing stack dims beyond the layer dim
+    (e.g. ("experts",) for per-expert (L, E, d, k) stacks)."""
     DEFAULT_NODE_AXES[name] = logical_axis
+    if stack_axes:
+        DEFAULT_NODE_STACK_AXES[name] = tuple(stack_axes)
 
 
 @jax.tree_util.register_dataclass
@@ -89,16 +110,25 @@ class SketchNode:
 
 
 def init_paper_node(psi_key: Array, width: int, k_max: int,
-                    layers: int | None = None,
+                    layers: int | tuple[int, ...] | None = None,
                     dtype=jnp.float32,
                     logical_axis: str | None = None) -> SketchNode:
     """Zero triple + fresh psi for a paper-kind node.
+
+    ``layers`` may be a tuple for multi-dim stacks — per-expert MoE
+    nodes pass (num_layers, num_experts) and get (L, E, d, k) triples
+    with (L, E, k) psi (DESIGN.md §15).
 
     x/y/z are allocated as THREE distinct buffers on purpose: aliasing
     one zeros array across the triple breaks `jit(donate_argnums=...)`
     (the same buffer would be donated twice) in the production loop.
     """
-    lead = () if layers is None else (layers,)
+    if layers is None:
+        lead = ()
+    elif isinstance(layers, tuple):
+        lead = tuple(int(s) for s in layers)
+    else:
+        lead = (int(layers),)
     shape = lead + (width, k_max)
     return SketchNode(
         x=jnp.zeros(shape, dtype),

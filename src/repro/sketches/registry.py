@@ -1,0 +1,88 @@
+"""Arch-keyed NodeSpec registry (DESIGN.md 15).
+
+One entry point replaces the ad-hoc ``lm_node_specs`` /
+``mlp_node_specs`` imports that PRs 1-9 accreted: model modules call
+``register_node_specs(family, fn)`` at import time and every consumer
+(``train/paper_trainer.py``, ``launch/train.py``, ``train/state.py``)
+resolves specs through ``node_specs_for(cfg)``.  Adding a new sketched
+architecture is one registration line plus a spec function — the
+dispatch below never needs editing.
+
+Family resolution:
+
+* ``repro.configs.base.ArchConfig``  -> "moe" when ``cfg.is_moe``,
+  else "recurrent" when the layer pattern contains a recurrent kind
+  (mlstm / slstm / rglru), else "lm".  All three share the transformer
+  spec function, which emits per-family node sets.
+* ``repro.configs.paper.MLPConfig``  -> "mlp".
+* ``repro.configs.paper.ConvConfig`` -> "conv".
+
+``node_specs_for(cfg, **kw)`` forwards keyword arguments to the
+registered spec function (e.g. ``num_tokens`` for token-bound specs).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+_REGISTRY: Dict[str, Callable[..., dict]] = {}
+
+#: recurrent layer kinds whose scan carries get sketch nodes
+RECURRENT_KINDS = ("mlstm", "slstm", "rglru")
+
+
+def register_node_specs(family: str, fn: Callable[..., dict]) -> None:
+    """Register ``fn(cfg, **kw) -> {name: NodeSpec}`` for ``family``.
+
+    Later registrations win (mirrors ``register_node_axis``), so tests
+    can override a family without monkeypatching module internals.
+    """
+    if not isinstance(family, str) or not family:
+        raise ValueError(f"family must be a non-empty str, got {family!r}")
+    _REGISTRY[family] = fn
+
+
+def registered_families() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+def family_for(cfg: Any) -> str:
+    """Map a config object to its registered spec family."""
+    # Import inside the function: registry must not cycle with configs.
+    from repro.configs.base import ArchConfig
+
+    if isinstance(cfg, ArchConfig):
+        if cfg.is_moe:
+            return "moe"
+        kinds = set(cfg.layer_types) | set(cfg.tail_types or ())
+        if kinds & set(RECURRENT_KINDS):
+            return "recurrent"
+        return "lm"
+    name = type(cfg).__name__
+    if name == "MLPConfig":
+        return "mlp"
+    if name == "ConvConfig":
+        return "conv"
+    raise TypeError(
+        f"no NodeSpec family for config type {type(cfg).__name__}; "
+        f"register one with register_node_specs(...)")
+
+
+def node_specs_for(cfg: Any, **kw) -> dict:
+    """Resolve the sketch NodeSpec dict for any registered config.
+
+    This is the ONLY spec-resolution path reachable from ``launch/``
+    (grep-asserted in tests/test_registry.py).
+    """
+    family = family_for(cfg)
+    # Model modules self-register at import; pull them in lazily so
+    # `import repro.sketches` alone stays light.
+    if family not in _REGISTRY:
+        import repro.models.transformer  # noqa: F401  (lm/moe/recurrent)
+        import repro.models.mlp          # noqa: F401  (mlp/conv)
+    try:
+        fn = _REGISTRY[family]
+    except KeyError:
+        raise KeyError(
+            f"NodeSpec family {family!r} has no registered spec "
+            f"function; known families: {registered_families()}")
+    return fn(cfg, **kw)

@@ -30,7 +30,10 @@ class NodeSpec:
     """Registration entry: one sketched activation node (per layer)."""
 
     width: int                  # feature dim d of the node
-    layers: int | None = None   # leading stack dim (None = single node)
+    # leading stack dims: None = single node, int = per-layer stack,
+    # tuple = multi-dim stack (e.g. (num_layers, num_experts) for
+    # per-expert MoE nodes — DESIGN.md §15)
+    layers: int | tuple[int, ...] | None = None
     kind: str = "paper"
     # logical mesh axis of the width dim ("embed" | "mlp" | "heads" |
     # None); None resolves through DEFAULT_NODE_AXES by node name at
@@ -136,15 +139,20 @@ def node_paths(tree) -> list[str]:
     else:
         named = [(name, tree.nodes[name].x.shape)
                  for name in sorted(tree.nodes)]
+    import itertools
     out = []
     for name, shape in named:
         stack = shape[:-2]
         if not stack:
             out.append(name)
             continue
-        for layer in range(stack[0]):
-            out.append(f"block{layer}/{name}" if name != "res"
-                       else f"res/{layer}")
+        for idx in itertools.product(*(range(s) for s in stack)):
+            base = (f"res/{idx[0]}" if name == "res"
+                    else f"block{idx[0]}/{name}")
+            # multi-dim stacks (per-expert nodes) append the trailing
+            # stack indices: "block3/expert_in/7"
+            tail = "/".join(str(i) for i in idx[1:])
+            out.append(f"{base}/{tail}" if tail else base)
     return out
 
 

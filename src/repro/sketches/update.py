@@ -46,6 +46,42 @@ def mask_columns(m: Array, k_active) -> Array:
 
 
 # ---------------------------------------------------------------------------
+# Row binding (DESIGN.md §15): activations with fewer rows than the
+# tree's token binding
+# ---------------------------------------------------------------------------
+
+
+def proj_num_tokens(proj) -> int:
+    """The token-row binding T of a projection pytree: the static
+    ``num_tokens`` for seeds-only psparse projections, else the leading
+    dim of the dense (T, k_max) matrices."""
+    from repro.sketches.psparse import PsparseProjections
+    if isinstance(proj, PsparseProjections):
+        return proj.num_tokens
+    return proj["omega"].shape[0]
+
+
+def pad_activation_rows(a: Array, num_tokens: int) -> Array:
+    """Zero-pad a (rows, d) activation to the tree's (T, d) row binding.
+
+    Row-deficient node families (per-expert capacity slots C < T,
+    recurrent carries with B rows, the second conv stage) cannot
+    prefix-slice the projection instead: psparse hashes bind rows to
+    [0, T) statically, so padding the ACTIVATION is the one path that
+    is mathematically identical across proj kinds (zero rows contract
+    to exact zeros in every increment term)."""
+    rows = a.shape[0]
+    if rows == num_tokens:
+        return a
+    if rows > num_tokens:
+        raise ValueError(
+            f"activation has {rows} rows but the sketch tree is bound "
+            f"to num_tokens={num_tokens}; re-init the tree with "
+            f"num_tokens >= the largest node's row count")
+    return jnp.pad(a, ((0, num_tokens - rows), (0, 0)))
+
+
+# ---------------------------------------------------------------------------
 # The one EMA-triple update
 # ---------------------------------------------------------------------------
 

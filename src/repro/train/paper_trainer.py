@@ -30,7 +30,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.configs.paper import MLPConfig
+from repro.configs.paper import ConvConfig, MLPConfig
 from repro.core.adaptive import AdaptiveConfig, adaptive_step, \
     init_adaptive_state
 from repro.core.corange import (
@@ -40,12 +40,14 @@ from repro.core.monitor import (
     init_monitor_state, monitor_record, tree_metrics,
 )
 from repro.core.sketch import SketchConfig
-from repro.models.mlp import _act, mlp_init, mlp_node_specs
+from repro.models.mlp import _act, conv_im2col_sketched, im2col, \
+    mlp_init
 from repro.optim.adamw import AdamWConfig, adamw_update, init_adamw, \
     sgd_update
 from repro.sketches import (
-    NodeTree, SketchNode, corange_triple_update, proj_triple_update,
-    refresh_tree, sketched_matmul,
+    NodeTree, SketchNode, corange_triple_update, init_node_tree,
+    node_specs_for, pad_activation_rows, proj_num_tokens,
+    proj_triple_update, refresh_tree, sketched_matmul,
 )
 
 Array = jax.Array
@@ -94,7 +96,7 @@ def init_mlp_sketch(key, cfg: MLPConfig, scfg: SketchConfig,
         init_psparse_projections, make_psparse_corange_projections,
     )
 
-    spec = mlp_node_specs(cfg)["hidden"]
+    spec = node_specs_for(cfg)["hidden"]
     n_nodes, d = spec.layers, spec.width
     k_max = scfg.k_max
     psparse = scfg.proj_kind == "psparse"
@@ -531,3 +533,128 @@ def train(cfg: MLPConfig, scfg: SketchConfig, variant: str, *,
 def accuracy(params, cfg: MLPConfig, x, y) -> float:
     logits = plain_forward(params, x, cfg)
     return float((jnp.argmax(logits, -1) == y).mean())
+
+
+# -- sketched conv trainer (DESIGN.md §15: XConv im2col factoring) ----------
+
+
+def conv_init(key, cfg: ConvConfig):
+    """Two SAME stride-1 conv stages (3x3, C->8->16) with 2x2 max-pool
+    after each, plus one exact linear head. Only the conv stages are
+    sketched (one node per stage, im2col patch width)."""
+    ks = jax.random.split(key, 3)
+    feat = (cfg.hw // 4) ** 2 * 16
+    return {
+        "c1": (jax.random.normal(ks[0], (3, 3, cfg.channels, 8))
+               * (2.0 / (9 * cfg.channels)) ** 0.5).astype(cfg.dtype),
+        "c2": (jax.random.normal(ks[1], (3, 3, 8, 16))
+               * (2.0 / 72) ** 0.5).astype(cfg.dtype),
+        "head": {
+            # zero head: max-pooled ReLU features come in hot (pooling
+            # keeps the largest of 4 positive values), so a fan-in init
+            # starts at 2x the ln(d_out) plateau and the first steps
+            # thrash; logits grow from 0 instead
+            "w": jnp.zeros((feat, cfg.d_out), cfg.dtype),
+            "bias": jnp.zeros((cfg.d_out,), cfg.dtype),
+        },
+    }
+
+
+def init_conv_sketch(key, cfg: ConvConfig, scfg: SketchConfig) -> NodeTree:
+    """NodeTree for the sketched conv stem — standard paper-kind tree
+    via `init_node_tree` (so the frozen split(4+N) RNG protocol, refresh
+    lineage, and checkpoint layout all apply unchanged). The row binding
+    is ``cfg.num_tokens`` = B*hw^2, stage 1's im2col row count; stage 2
+    zero-pads its B*(hw/2)^2 rows up to it."""
+    tree = init_node_tree(
+        key, node_specs_for(cfg), cfg.num_tokens, scfg.k_max,
+        proj_kind=scfg.proj_kind, proj_density=scfg.proj_density)
+    return dataclasses.replace(
+        tree, rank=jnp.asarray(scfg.rank, jnp.int32))
+
+
+def _pool2(h):
+    return jax.lax.reduce_window(
+        h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def conv_plain_forward(params, img, cfg: ConvConfig):
+    h = img
+    for wkey in ("c1", "c2"):
+        h = jax.lax.conv_general_dilated(
+            h, params[wkey], (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        h = _pool2(jax.nn.relu(h))
+    h = h.reshape(h.shape[0], -1)
+    return h @ params["head"]["w"] + params["head"]["bias"]
+
+
+def conv_sketched_forward(params, img, sk: NodeTree, cfg: ConvConfig,
+                          scfg: SketchConfig):
+    """Returns (logits, new_sketch_state). Each stage updates its node's
+    triple on the zero-padded im2col patch matrix, then consumes the
+    fresh triple through `conv_im2col_sketched` — the conv analogue of
+    `sketched_forward`'s update-then-consume per-node loop."""
+    k_active = sk.k_active
+    num_tokens = proj_num_tokens(sk.proj)
+    new_nodes = dict(sk.nodes)
+    h = img
+    for name, wkey in (("conv1", "c1"), ("conv2", "c2")):
+        node = sk.nodes[name]
+        patches = pad_activation_rows(
+            im2col(h, 3, 3).astype(jnp.float32), num_tokens)
+        xc, yc, zc = proj_triple_update(
+            node.x, node.y, node.z, patches, sk.proj, node.psi,
+            scfg.beta, k_active)
+        node = dataclasses.replace(node, x=xc, y=yc, z=zc)
+        new_nodes[name] = node
+        h = conv_im2col_sketched(
+            h, params[wkey], node, sk.proj, k_active,
+            recon_mode=scfg.recon_mode, ridge=scfg.ridge, factored=True)
+        h = _pool2(jax.nn.relu(h))
+    h = h.reshape(h.shape[0], -1)
+    logits = h @ params["head"]["w"] + params["head"]["bias"]
+    return logits, dataclasses.replace(sk, nodes=new_nodes,
+                                       step=sk.step + 1)
+
+
+def make_conv_step(cfg: ConvConfig, scfg: SketchConfig, variant: str,
+                   opt_cfg: AdamWConfig):
+    def step(params, opt, sk, x, y):
+        def loss_fn(p):
+            if variant == "standard":
+                return ce_loss(conv_plain_forward(p, x, cfg), y), sk
+            logits, new_sk = conv_sketched_forward(p, x, sk, cfg, scfg)
+            return ce_loss(logits, y), new_sk
+
+        (loss, new_sk), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params, opt, _ = adamw_update(params, grads, opt, opt_cfg)
+        return params, opt, new_sk, loss
+
+    return jax.jit(step)
+
+
+def train_conv(cfg: ConvConfig, scfg: SketchConfig, variant: str, *,
+               steps: int, batch_fn, seed: int = 0,
+               monitor_window: int = 64) -> PaperTrainResult:
+    """Conv-family driver, same contract as `train`:
+    batch_fn(key) -> (img (B,hw,hw,C), labels (B,))."""
+    key = jax.random.PRNGKey(seed)
+    kp, ks = jax.random.split(key)
+    params = conv_init(kp, cfg)
+    opt_cfg = AdamWConfig(lr=cfg.learning_rate, b2=0.999)
+    opt = init_adamw(params, opt_cfg)
+    sk = init_conv_sketch(ks, cfg, scfg)
+    monitor = init_monitor_state(monitor_window, len(sk.nodes))
+    step = make_conv_step(cfg, scfg, variant, opt_cfg)
+    history = []
+    for s in range(steps):
+        x, y = batch_fn(jax.random.fold_in(key, s))
+        params, opt, sk, loss = step(params, opt, sk, x, y)
+        history.append({"step": s, "loss": float(loss),
+                        "rank": int(sk.rank)})
+        if variant != "standard":
+            monitor = monitor_record(monitor, tree_metrics(sk))
+    return PaperTrainResult(params=params, history=history, sketch=sk,
+                            monitor=monitor)

@@ -18,6 +18,23 @@ from repro.optim.adamw import AdamWConfig, init_adamw
 from repro.optim.compression import CompressionConfig
 
 
+class ConfigError(ValueError):
+    """Invalid RunConfig field combination (DESIGN.md §15).
+
+    One structured error type for the WHOLE cross-field compatibility
+    matrix (dp_collective x dp_merge x ring_wire x wire dtypes x
+    p2_overlap x proj_kind): ``fields`` names the conflicting fields
+    (dotted for nested ones, e.g. ``sketch.proj_kind``) and the message
+    always has the shape
+    ``RunConfig: a=<va> incompatible with b=<vb>: <why>`` — previously
+    these failures were scattered across state/step modules with
+    ad-hoc ValueError styles."""
+
+    def __init__(self, fields: tuple[str, ...], message: str):
+        self.fields = tuple(fields)
+        super().__init__(message)
+
+
 @dataclasses.dataclass(frozen=True)
 class RunConfig:
     """Everything the training step needs besides the architecture."""
@@ -111,59 +128,139 @@ class RunConfig:
     p2_overlap: bool = True
 
     def __post_init__(self):
+        self.validate()
+
+    def _field(self, name: str):
+        obj = self
+        for part in name.split("."):
+            obj = getattr(obj, part)
+        return obj
+
+    def _conflict(self, a: str, b: str, why: str):
+        raise ConfigError(
+            (a, b),
+            f"RunConfig: {a}={self._field(a)!r} incompatible with "
+            f"{b}={self._field(b)!r}: {why}")
+
+    def validate(self, *, consumed: bool | None = None) -> None:
+        """THE cross-field compatibility matrix (DESIGN.md §15): every
+        invalid flag combination raises one structured `ConfigError`
+        naming the two conflicting fields. Called at construction
+        (``__post_init__``), so an invalid RunConfig never exists; the
+        one architecture-dependent row — reduce_scatter under a
+        sketched-BACKPROP tree needs the overlap schedule — re-checks
+        when `make_train_step` passes ``consumed``."""
+        # -- single-field domains -----------------------------------
         if self.dp_workers < 1:
-            raise ValueError(
-                f"dp_workers must be >= 1, got {self.dp_workers}")
+            raise ConfigError(
+                ("dp_workers",),
+                f"RunConfig: dp_workers={self.dp_workers!r} invalid: "
+                f"must be >= 1")
         if self.dp_collective not in ("fused", "per_node", "overlap"):
-            raise ValueError(
-                f"dp_collective must be 'fused', 'per_node' or "
-                f"'overlap', got {self.dp_collective!r}")
+            raise ConfigError(
+                ("dp_collective",),
+                f"RunConfig: dp_collective={self.dp_collective!r} "
+                f"invalid: must be 'fused', 'per_node' or 'overlap'")
         if self.dp_merge not in ("psum", "reduce_scatter"):
-            raise ValueError(
-                f"dp_merge must be 'psum' or 'reduce_scatter', got "
-                f"{self.dp_merge!r}")
-        if self.dp_merge == "reduce_scatter" and \
-                self.dp_collective == "per_node":
-            raise ValueError(
-                "dp_merge='reduce_scatter' needs the flat-segment "
-                "layouts (fused/overlap); per_node merges inside the "
-                "forward and cannot scatter")
-        if self.dp_workers > 1 and self.global_batch % self.dp_workers:
-            raise ValueError(
-                f"global_batch={self.global_batch} not divisible by "
-                f"dp_workers={self.dp_workers}")
+            raise ConfigError(
+                ("dp_merge",),
+                f"RunConfig: dp_merge={self.dp_merge!r} invalid: must "
+                f"be 'psum' or 'reduce_scatter'")
         if self.sketch_wire_dtype not in ("fp32", "int8"):
-            raise ValueError(
-                f"sketch_wire_dtype must be 'fp32' or 'int8', got "
-                f"{self.sketch_wire_dtype!r}")
+            raise ConfigError(
+                ("sketch_wire_dtype",),
+                f"RunConfig: sketch_wire_dtype="
+                f"{self.sketch_wire_dtype!r} invalid: must be 'fp32' "
+                f"or 'int8'")
+        from repro.sketches.psparse import PROJ_KINDS
+        if self.sketch.proj_kind not in PROJ_KINDS:
+            raise ConfigError(
+                ("sketch.proj_kind",),
+                f"RunConfig: sketch.proj_kind="
+                f"{self.sketch.proj_kind!r} invalid: must be one of "
+                f"{PROJ_KINDS}")
+        # -- cross-field rows ---------------------------------------
+        if self.dp_workers > 1 and self.global_batch % self.dp_workers:
+            self._conflict(
+                "global_batch", "dp_workers",
+                "the global batch must be divisible by the worker "
+                "count")
+        if self.sketch.dp_premerged:
+            self._conflict(
+                "sketch.dp_premerged", "dp_collective",
+                "dp_premerged is internal to the overlap step's phase "
+                "2 — select it with dp_collective='overlap', never "
+                "directly")
+        if self.sketch.dp_defer:
+            if self.dp_collective not in ("fused", "overlap"):
+                self._conflict(
+                    "sketch.dp_defer", "dp_collective",
+                    "a deferred forward emits raw increments that only "
+                    "the flat-segment layouts (fused/overlap) ever "
+                    "merge")
+            if self.dp_axis_name is None:
+                self._conflict(
+                    "sketch.dp_defer", "dp_axis_name",
+                    "a deferred forward emits raw increments that only "
+                    "the flat-segment DP psums ever merge — the "
+                    "single-program step has none")
+        if self.dp_merge == "reduce_scatter":
+            if self.sketch.enabled and self.dp_axis_name is None:
+                self._conflict(
+                    "dp_merge", "dp_axis_name",
+                    "the single-program path has no worker shards to "
+                    "scatter over")
+            if self.dp_collective == "per_node":
+                self._conflict(
+                    "dp_merge", "dp_collective",
+                    "per_node merges inside the forward and cannot "
+                    "scatter; reduce_scatter needs the flat-segment "
+                    "layouts (fused/overlap)")
+            if consumed and self.dp_collective != "overlap":
+                self._conflict(
+                    "dp_merge", "dp_collective",
+                    "a sketched-backprop (consumed) tree requires "
+                    "dp_collective='overlap': the fused layout "
+                    "consumes the previous step's merged triple, which "
+                    "no worker holds under the scattered layout")
         if self.sketch_wire_dtype == "int8":
             if self.dp_axis_name is None:
-                raise ValueError(
-                    "sketch_wire_dtype='int8' quantizes the cross-"
-                    "worker wire — it needs dp_axis_name")
+                self._conflict(
+                    "sketch_wire_dtype", "dp_axis_name",
+                    "int8 quantizes the cross-worker wire — it needs a "
+                    "dp axis")
             if self.dp_collective == "per_node":
-                raise ValueError(
-                    "sketch_wire_dtype='int8' needs the flat-segment "
-                    "layouts (fused/overlap); per_node psums per leaf "
-                    "inside the forward")
+                self._conflict(
+                    "sketch_wire_dtype", "dp_collective",
+                    "int8 needs the flat-segment layouts "
+                    "(fused/overlap); per_node psums per leaf inside "
+                    "the forward")
             if self.dp_merge != "psum":
-                raise ValueError(
-                    "sketch_wire_dtype='int8' is defined for the psum "
-                    "merge; the reduce_scatter tiles stay f32")
+                self._conflict(
+                    "sketch_wire_dtype", "dp_merge",
+                    "the int8 wire is defined for the psum merge; the "
+                    "reduce_scatter tiles stay f32")
         if self.ring_wire:
             if self.dp_axis_name is None or \
                     not isinstance(self.dp_axis_name, str):
-                raise ValueError(
-                    "ring_wire needs a single-axis dp_axis_name (the "
-                    "remote-DMA ring runs on one logical ring)")
+                self._conflict(
+                    "ring_wire", "dp_axis_name",
+                    "the remote-DMA ring runs on ONE logical ring — a "
+                    "single-axis dp_axis_name (tuple supergroups and "
+                    "the single-program case have no ring order)")
             if self.dp_collective == "per_node":
-                raise ValueError(
-                    "ring_wire needs the flat-segment layouts "
-                    "(fused/overlap)")
+                self._conflict(
+                    "ring_wire", "dp_collective",
+                    "the ring carries the flat-segment buffer; "
+                    "per_node has none")
             if self.dp_merge != "psum":
-                raise ValueError(
-                    "ring_wire replaces the psum merge; "
-                    "dp_merge='reduce_scatter' keeps its own schedule")
+                self._conflict(
+                    "ring_wire", "dp_merge",
+                    "the ring replaces the psum merge; reduce_scatter "
+                    "keeps its own schedule")
+        # p2_overlap and the wire dtypes compose with every remaining
+        # combination (the step silently keeps the serial p2 reference
+        # where the overlap doesn't apply) — no further rows.
 
 
 @jax.tree_util.register_dataclass
@@ -219,9 +316,15 @@ def init_train_state(key, cfg, run: RunConfig) -> TrainState:
         # correct initial state (psi/proj stay replicated)
         from repro.sketches.shard import shard_tree
         sketch = shard_tree(sketch, run.dp_workers, 0)
-    n_groups = max(1, len(sketch_groups(cfg)))
-    monitor = init_monitor_state(run.monitor_window,
-                                 n_groups * cfg.num_layers)
+    if sketch is not None:
+        # one monitor row per node-stack entry, in tree_metrics /
+        # node_paths order — position-restricted carry nodes and
+        # per-expert stacks make this differ from n_groups * L
+        from repro.sketches import node_paths
+        n_rows = len(node_paths(sketch))
+    else:
+        n_rows = max(1, len(sketch_groups(cfg))) * cfg.num_layers
+    monitor = init_monitor_state(run.monitor_window, n_rows)
     return TrainState(
         params=params,
         opt=opt,

@@ -191,11 +191,6 @@ def make_train_step(cfg: ArchConfig, run: RunConfig):
 
     run = finalize_run(cfg, run)
     ax = run.dp_axis_name
-    if run.sketch.dp_premerged:
-        raise ValueError(
-            "SketchSettings.dp_premerged is internal to the overlap "
-            "step's phase 2 — select it with run.dp_collective="
-            "'overlap', never directly")
     groups = sketch_groups(cfg) if run.sketch.enabled else {}
     consumed = bool(groups) and "res" not in groups
     # The overlap schedule (DESIGN.md §10) only pays its second
@@ -213,16 +208,10 @@ def make_train_step(cfg: ArchConfig, run: RunConfig):
     # one all-gather reconstitutes the merged triple for its genuine
     # consumers (phase-2 backward / monitor metrics).
     rs = run.dp_merge == "reduce_scatter" and bool(groups)
-    if rs and ax is None:
-        raise ValueError(
-            "dp_merge='reduce_scatter' needs run.dp_axis_name: the "
-            "single-program path has no worker shards to scatter over")
-    if rs and consumed and not overlap:
-        raise ValueError(
-            "dp_merge='reduce_scatter' with a sketched-backprop "
-            "(consumed) tree requires dp_collective='overlap': the "
-            "fused layout consumes the previous step's merged triple, "
-            "which no worker holds under the scattered layout")
+    # re-run the RunConfig compatibility matrix with the one
+    # architecture-dependent fact it lacks at construction: whether the
+    # backward CONSUMES the merged triple (state.ConfigError, §15)
+    run.validate(consumed=consumed)
     if fused and run.sketch.enabled and not run.sketch.dp_defer:
         # fused mode moves the sketch merge out of the forward: the
         # forward must emit LOCAL increments (dp_defer), never per-node
@@ -230,12 +219,6 @@ def make_train_step(cfg: ArchConfig, run: RunConfig):
         run = dataclasses.replace(
             run, sketch=dataclasses.replace(
                 run.sketch, dp_defer=True, dp_axis=None))
-    if run.sketch.dp_defer and not (fused or overlap):
-        raise ValueError(
-            "SketchSettings.dp_defer requires a deferred-merge DP step "
-            "(run.dp_collective='fused' or 'overlap' with dp_axis_name "
-            "set): a deferred forward emits raw increments that only "
-            "the flat-segment psums ever merge")
     # overlap phase settings: phase 1 emits local increments (dp_defer),
     # phase 2 consumes the merged tree as-is (dp_premerged)
     defer_st = dataclasses.replace(
@@ -612,17 +595,36 @@ def collective_plan(cfg: ArchConfig, run: RunConfig,
     else:
         num_leaves = 1
 
-    # sketch increments that cross the wire: 3 (L, w, k_max) f32 leaves
-    # per node — identical payload in all three sketching layouts. The
-    # int8 wire ships 1 byte per element + one f32 scale per (L, w) row
+    # sketch increments that cross the wire: 3 (stack..., w, k_max) f32
+    # leaves per node — identical payload in all three sketching
+    # layouts. Entry counts come from the registry specs (the real node
+    # shapes), so position-restricted carry nodes and per-expert
+    # (L, E, ...) stacks are accounted exactly — not the old
+    # n_groups * num_layers approximation. The int8 wire ships 1 byte
+    # per element + one f32 scale per stacked row
     # (sketches/wire.int8_segment_bytes is the per-spec source of truth)
+    from repro.sketches.registry import node_specs_for
+
+    def _stack_entries(spec) -> int:
+        if spec.layers is None:
+            return 1
+        if isinstance(spec.layers, tuple):
+            n = 1
+            for s in spec.layers:
+                n *= s
+            return n
+        return spec.layers
+
+    specs = node_specs_for(cfg) if run.sketch.enabled else {}
+    n_entries = sum(_stack_entries(s) for s in specs.values())
     if run.sketch_wire_dtype == "int8":
         sketch_bytes = sum(
-            3 * cfg.num_layers * w * (run.sketch.k_max * 1 + 4)
-            for w in groups.values())
+            3 * _stack_entries(s) * s.width * (run.sketch.k_max * 1 + 4)
+            for s in specs.values())
     else:
-        sketch_bytes = sum(3 * cfg.num_layers * w * run.sketch.k_max * 4
-                           for w in groups.values())
+        sketch_bytes = sum(
+            3 * _stack_entries(s) * s.width * run.sketch.k_max * 4
+            for s in specs.values())
     grad_bytes = compressed_bytes(num_params, run.compression) if cs \
         else num_params * 4
 
@@ -643,13 +645,12 @@ def collective_plan(cfg: ArchConfig, run: RunConfig,
         # early sketch psum + late wire psum (+ optional p2 round)
         return _plan("overlap", sketch_bytes + grad_bytes + 16,
                      ar=2 + cs_p2, p2_overlap=p2o)
-    # per_node reference layout: 3 psums (x/y/z) per node per layer
+    # per_node reference layout: 3 psums (x/y/z) per node-stack entry
     # inside the forward, 3 scalar pmeans, and the grad wire — one
     # table psum under countsketch, else a dense pmean per param leaf
-    n_node_layers = len(groups) * cfg.num_layers
     grad_colls = (1 + cs_p2) if cs else num_leaves
     return _plan("per_node", sketch_bytes + grad_bytes + 12,
-                 ar=3 * n_node_layers + 3 + grad_colls)
+                 ar=3 * n_entries + 3 + grad_colls)
 
 
 def make_eval_step(cfg: ArchConfig, run: RunConfig):
